@@ -1,0 +1,102 @@
+"""Paper Figs 7/8/9 — federated 3D dose prediction on OpenKBP-shaped data.
+
+Compares Pooled / FedAvg / Individual under IID and non-IID site splits
+(non-IID = the paper's skewed case counts, Fig 6) and reports dose &
+DVH scores on a common held-out test set plus per-site Individual scores
+(Fig 9's size-vs-accuracy effect).
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, make_sanet_ctx, run_fl
+from repro.core import federation as F
+from repro.core.stacking import site_slice
+from repro.data.partition import OPENKBP_IID_TRAIN, OPENKBP_NONIID_TRAIN
+from repro.data.synthetic import DoseTaskGenerator
+from repro.metrics import dose_score, dvh_score
+from repro.models import sanet as sanet_mod
+
+SITES = 8
+ROUNDS = 14
+VOL = (16, 16, 16)
+
+
+def _test_batch(seed=999, n=8):
+    gen = DoseTaskGenerator(volume=VOL, num_oars=2, num_sites=1, seed=seed)
+    return jax.tree.map(jnp.asarray, gen.sample(0, 0, n))
+
+
+def _scores(params, scfg, batch):
+    pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
+    p = np.asarray(pred[..., 0])
+    t = np.asarray(batch["dose"][..., 0])
+    m = np.asarray(batch["mask"][..., 0])
+    ds = np.mean([dose_score(p[i], t[i], m[i]) for i in range(p.shape[0])])
+    rois = [np.asarray(batch["volume"][..., 1])]        # PTV as the scored ROI
+    dv = np.mean([dvh_score(p[i], t[i], [rois[0][i]]) for i in range(p.shape[0])])
+    return float(ds), float(dv)
+
+
+def run(quick: bool = False):
+    rounds = 6 if quick else ROUNDS
+    test = _test_batch()
+    results = {}
+    per_site = {}
+    for dist, counts in [("iid", OPENKBP_IID_TRAIN), ("noniid", OPENKBP_NONIID_TRAIN)]:
+        # the paper's non-IID = case-COUNT imbalance over a common
+        # distribution (OpenKBP has no site metadata): emulate by giving
+        # each site a case pool proportional to its count and weighting
+        # aggregation with m_i (Eq. 1)
+        pools = None if dist == "iid" else tuple(max(c // 4, 1) for c in counts)
+        for strategy in ["pooled", "fedavg", "individual"]:
+            pooled = strategy == "pooled"
+            sites = 1 if pooled else SITES
+            cw = None if pooled else tuple(counts)
+            ctx, scfg = make_sanet_ctx(strategy, sites, case_weights=cw)
+            # pooled sees the SAME per-site data, concatenated
+            gen = DoseTaskGenerator(volume=VOL, num_oars=2,
+                                    num_sites=SITES, heterogeneity=0.0,
+                                    seed=1, site_pools=pools)
+            hist, state, _ = run_fl(ctx, scfg, gen, rounds, batch=2,
+                                    pool_sites=pooled)
+            if strategy == "individual":
+                site_scores = []
+                for s in range(sites):
+                    ds, dv = _scores(site_slice(state["params"], s), scfg, test)
+                    site_scores.append({"site": s, "cases": counts[s],
+                                        "dose": ds, "dvh": dv})
+                per_site[dist] = site_scores
+                ds = float(np.mean([x["dose"] for x in site_scores]))
+                dv = float(np.mean([x["dvh"] for x in site_scores]))
+            else:
+                g = F.global_model(state, ctx)
+                ds, dv = _scores(g, scfg, test)
+            key = f"{dist}:{strategy}"
+            results[key] = {"dose_score": ds, "dvh_score": dv,
+                            "final_loss": hist[-1], "loss_curve": hist}
+    out = {"figure": "Fig 7/8/9", "results": results, "per_site": per_site}
+    (ARTIFACTS / "dose_prediction.json").write_text(json.dumps(out, indent=2))
+    # paper-claim checks (qualitative ordering)
+    checks = {
+        "fedavg_beats_individual_iid":
+            results["iid:fedavg"]["dose_score"] < results["iid:individual"]["dose_score"],
+        "fedavg_beats_individual_noniid":
+            results["noniid:fedavg"]["dose_score"] < results["noniid:individual"]["dose_score"],
+        "fedavg_close_to_pooled_iid":
+            results["iid:fedavg"]["dose_score"] <
+            results["iid:individual"]["dose_score"],
+    }
+    out["checks"] = checks
+    (ARTIFACTS / "dose_prediction.json").write_text(json.dumps(out, indent=2))
+    derived = ";".join(
+        f"{k}={v['dose_score']:.4f}" for k, v in sorted(results.items()))
+    return derived, out
+
+
+if __name__ == "__main__":
+    print(run()[0])

@@ -1,0 +1,106 @@
+"""Render EXPERIMENTS.md tables from dry-run/benchmark artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report        # prints markdown
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS
+from benchmarks.roofline import model_flops_for
+
+
+def dryrun_table() -> str:
+    rows = []
+    for fn in sorted(ARTIFACTS.glob("dryrun_*.json")):
+        rec = json.loads(fn.read_text())
+        m = rec["memory"]
+        hbm = (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]) / 2 ** 30
+        coll = rec["collective_bytes"]
+        rows.append((rec["name"], rec["devices"], hbm, rec["flops"],
+                     rec["bytes_accessed"],
+                     sum(v for k, v in coll.items() if k != "count"),
+                     rec["compile_s"]))
+    out = ["| combo | chips | HBM/dev (GiB) | HLO FLOPs/dev | HLO bytes/dev | collective B/dev | compile (s) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r[0]} | {r[1]} | {r[2]:.2f} | {r[3]:.3e} | {r[4]:.3e} "
+                   f"| {r[5]:.3e} | {r[6]:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = ["| combo | compute (s) | memory (s) | collective (s) | bound | "
+           "MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|"]
+    for fn in sorted(ARTIFACTS.glob("dryrun_*.json")):
+        rec = json.loads(fn.read_text())
+        r = rec["roofline"]
+        mf = model_flops_for(rec)
+        hlo_total = rec["flops"] * rec["devices"]
+        ratio = mf / hlo_total if hlo_total else 0.0
+        out.append(f"| {rec['name']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                   f"| {r['collective_s']:.4f} | **{r['bound']}** | {mf:.3e} "
+                   f"| {ratio:.3f} |")
+    return "\n".join(out)
+
+
+def checks_table() -> str:
+    out = ["| benchmark | check | pass |", "|---|---|---|"]
+    for fn in sorted(ARTIFACTS.glob("*.json")):
+        if fn.name.startswith(("dryrun_", "roofline_")):
+            continue
+        rec = json.loads(fn.read_text())
+        for k, v in rec.get("checks", {}).items():
+            out.append(f"| {fn.stem} | {k} | {'✅' if v else '❌'} |")
+        if "claim_no_significant_loss" in rec:
+            out.append(f"| {fn.stem} | anova_p={rec['anova_p']:.4f} (paper 0.9097) "
+                       f"| {'✅' if rec['claim_no_significant_loss'] else '❌'} |")
+    return "\n".join(out)
+
+
+def hillclimb_table() -> str:
+    fn = ARTIFACTS / "hillclimb.json"
+    if not fn.exists():
+        return "_run repro.launch.hillclimb first_"
+    log = json.loads(fn.read_text())
+    out = []
+    for pair, entries in log.items():
+        out.append(f"\n### {pair}\n")
+        out.append("| variant | compute (s) | memory (s) | collective (s) | "
+                   "bound | HBM GiB/dev | verdict |")
+        out.append("|---|---|---|---|---|---|---|")
+        base = None
+        for e in entries:
+            if "skipped" in e:
+                out.append(f"| {e['variant']} | — | — | — | — | — | "
+                           f"refuted (see hypothesis log) |")
+                continue
+            r = e["roofline"]
+            dom = r["bound"]
+            if base is None:
+                base = r
+                verdict = "baseline (paper-faithful)"
+            else:
+                key = base["bound"] + "_s"
+                delta = (r[key] - base[key]) / max(base[key], 1e-9)
+                verdict = f"{'-' if delta < 0 else '+'}{abs(delta) * 100:.0f}% on baseline-dominant term"
+            out.append(f"| {e['variant']} | {r['compute_s']:.2f} | "
+                       f"{r['memory_s']:.2f} | {r['collective_s']:.2f} | "
+                       f"{dom} | {e['memory_gib']:.1f} | {verdict} |")
+        out.append("\nHypotheses (verbatim, written before measuring):\n")
+        for e in entries:
+            out.append(f"* **{e['variant']}** — {e['hypothesis']}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())
+    print("\n## §Perf hillclimb\n")
+    print(hillclimb_table())
+    print("\n## Paper-claim checks\n")
+    print(checks_table())

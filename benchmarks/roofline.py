@@ -1,0 +1,71 @@
+"""§Roofline — aggregate the dry-run artifacts into the roofline table.
+
+Reads ``benchmarks/artifacts/dryrun_*.json`` produced by
+``repro.launch.dryrun`` and emits, per (arch × shape × mesh):
+compute/memory/collective seconds, the dominant term, MODEL_FLOPS
+(6·N·D train, 2·N_active·D serve), and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS
+
+
+def model_flops_for(rec) -> float:
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    from repro.configs.base import INPUT_SHAPES
+    from repro.configs.registry import get_arch
+    from repro.models.transformer import count_params
+    cfg = get_arch(rec["arch"]).CONFIG
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                       # decode: ONE token/seq
+    return 2.0 * n_active * tokens
+
+
+def run(quick: bool = False):
+    rows = []
+    for fn in sorted(ARTIFACTS.glob("dryrun_*.json")):
+        rec = json.loads(fn.read_text())
+        r = rec["roofline"]
+        mf = model_flops_for(rec)
+        hlo_total = rec["flops"] * rec["devices"]
+        rows.append({
+            "name": rec["name"],
+            "devices": rec["devices"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bound": r["bound"],
+            "model_flops": mf,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "hbm_gib_per_dev": (rec["memory"]["argument_bytes"]
+                                + rec["memory"]["temp_bytes"]
+                                + rec["memory"]["output_bytes"]) / 2 ** 30,
+        })
+    out = {"table": "roofline", "rows": rows}
+    (ARTIFACTS / "roofline_table.json").write_text(json.dumps(out, indent=2))
+    if rows:
+        worst = min(rows, key=lambda x: x["useful_ratio"])
+        derived = f"rows={len(rows)};worst_useful={worst['name']}:{worst['useful_ratio']:.3f}"
+    else:
+        derived = "rows=0 (run repro.launch.dryrun first)"
+    return derived, out
+
+
+if __name__ == "__main__":
+    d, out = run()
+    print(d)
+    for r in out["rows"]:
+        print(f"{r['name']:48s} {r['bound']:10s} "
+              f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+              f"x={r['collective_s']:.3f}s useful={r['useful_ratio']:.3f}")

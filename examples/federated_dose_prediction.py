@@ -1,0 +1,53 @@
+"""End-to-end driver for the paper's flagship task (Figs 7/8): federated
+3D dose prediction with SA-Net on OpenKBP-shaped synthetic volumes.
+
+Runs the paper's three-way comparison — Pooled vs FedAvg vs Individual —
+under the non-IID site split (Fig 6 case counts) and reports dose/DVH
+scores on a common test set.
+
+    PYTHONPATH=src python examples/federated_dose_prediction.py [--rounds N]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_sanet_ctx, run_fl
+from repro.core import federation as F
+from repro.data.partition import OPENKBP_NONIID_TRAIN
+from repro.data.synthetic import DoseTaskGenerator
+from repro.metrics import dose_score
+from repro.models import sanet as sanet_mod
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=12)
+args = ap.parse_args()
+
+VOL = (16, 16, 16)
+test = jax.tree.map(jnp.asarray,
+                    DoseTaskGenerator(volume=VOL, num_oars=2, num_sites=1,
+                                      seed=999).sample(0, 0, 8))
+
+for strategy in ["pooled", "fedavg", "individual"]:
+    sites = 1 if strategy == "pooled" else 8
+    cw = None if strategy == "pooled" else tuple(OPENKBP_NONIID_TRAIN)
+    ctx, scfg = make_sanet_ctx(strategy, sites, case_weights=cw)
+    gen = DoseTaskGenerator(volume=VOL, num_oars=2, num_sites=sites,
+                            heterogeneity=0.0 if sites == 1 else 0.6, seed=1)
+    hist, state, _ = run_fl(ctx, scfg, gen, args.rounds,
+                            batch=8 if strategy == "pooled" else 2)
+    g = F.global_model(state, ctx)
+    pred, _ = sanet_mod.sanet_apply(g, test["volume"], scfg)
+    ds = np.mean([dose_score(np.asarray(pred[i, ..., 0]),
+                             np.asarray(test["dose"][i, ..., 0]),
+                             np.asarray(test["mask"][i, ..., 0]))
+                  for i in range(8)])
+    print(f"{strategy:12s} final_train_loss={hist[-1]:.4f} "
+          f"test_dose_score={ds:.4f}")
+print("expected ordering: pooled <= fedavg < individual (paper Fig 8)")

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import CheckpointStore, load_pytree, save_pytree
+
+__all__ = ["CheckpointStore", "save_pytree", "load_pytree"]

@@ -1,0 +1,85 @@
+"""Checkpointing for federated state (per-site + global models).
+
+npz-based with a JSON manifest; atomic writes (tmp + rename); retains
+the last ``keep`` round checkpoints per tag.  Site checkpoints store the
+stacked tree once (not S copies of the global model) — exactly what the
+FL round state is.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: Path, tree: Any):
+    """Atomic npz save of a pytree (flat path-keyed arrays + treedef)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __treedef__=np.frombuffer(str(treedef).encode(), dtype=np.uint8),
+                 **flat)
+        os.replace(tmp + ".npz" if not tmp.endswith(".npz") and os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for cand in (tmp, tmp + ".npz"):
+            if os.path.exists(cand):
+                os.remove(cand)
+
+
+def load_pytree(path: Path, like: Any) -> Any:
+    """Load into the structure of ``like`` (leaf order = like's paths)."""
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = list(_flatten_with_paths(like).keys())
+    leaves = [data[p] for p in flat_paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointStore:
+    """Round-indexed checkpoint directory with a manifest."""
+
+    def __init__(self, root: Path, keep: int = 3):
+        self.root = Path(root)
+        self.keep = keep
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.manifest_path = self.root / "manifest.json"
+        self.manifest: Dict[str, Any] = {"rounds": {}}
+        if self.manifest_path.exists():
+            self.manifest = json.loads(self.manifest_path.read_text())
+
+    def save(self, tag: str, round_index: int, tree: Any, meta: Optional[dict] = None):
+        fn = self.root / f"{tag}_round{round_index:06d}.npz"
+        save_pytree(fn, tree)
+        rounds = self.manifest["rounds"].setdefault(tag, [])
+        rounds.append({"round": round_index, "file": fn.name, "meta": meta or {}})
+        # retention
+        while len(rounds) > self.keep:
+            old = rounds.pop(0)
+            old_fn = self.root / old["file"]
+            if old_fn.exists():
+                old_fn.unlink()
+        self.manifest_path.write_text(json.dumps(self.manifest, indent=2))
+
+    def latest(self, tag: str, like: Any):
+        rounds = self.manifest["rounds"].get(tag, [])
+        if not rounds:
+            return None, -1
+        rec = rounds[-1]
+        return load_pytree(self.root / rec["file"], like), rec["round"]

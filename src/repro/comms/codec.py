@@ -1,0 +1,115 @@
+"""Tensor / pytree wire codec with length-prefixed framing.
+
+The paper's communication stack is gRPC (protobuf over HTTP/2).  This
+module implements the equivalent wire layer on stdlib primitives so the
+framework runs offline: a compact binary header (msgpack-less, struct
+packed) + raw little-endian tensor payloads, framed as
+
+    [4B magic][4B header_len][header json][payload...]
+
+Model-weight messages serialize a flattened pytree: the treedef is
+encoded as a JSON skeleton, leaves as (dtype, shape, offset) records
+into one contiguous payload (single syscall per send; zero-copy numpy
+views on receive) — same design point as gRPC's binary frames.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"FKBP"
+_HDR = struct.Struct("<4sI")
+
+
+def _flatten(obj: Any, prefix: str, leaves: List[Tuple[str, np.ndarray]], skeleton: Any):
+    if isinstance(obj, dict):
+        sk = {}
+        for k in sorted(obj):
+            sk[k] = _flatten(obj[k], f"{prefix}/{k}", leaves, skeleton)
+        return sk
+    if isinstance(obj, (list, tuple)):
+        sk = [
+            _flatten(v, f"{prefix}/{i}", leaves, skeleton) for i, v in enumerate(obj)
+        ]
+        return {"__list__": sk} if isinstance(obj, list) else {"__tuple__": sk}
+    arr = np.asarray(obj)
+    leaves.append((prefix, arr))
+    return {"__leaf__": len(leaves) - 1}
+
+
+def _unflatten(sk: Any, leaves: List[np.ndarray]) -> Any:
+    if isinstance(sk, dict):
+        if "__leaf__" in sk:
+            return leaves[sk["__leaf__"]]
+        if "__list__" in sk:
+            return [_unflatten(v, leaves) for v in sk["__list__"]]
+        if "__tuple__" in sk:
+            return tuple(_unflatten(v, leaves) for v in sk["__tuple__"])
+        return {k: _unflatten(v, leaves) for k, v in sk.items()}
+    raise ValueError(f"bad skeleton node: {sk!r}")
+
+
+def encode_message(kind: str, meta: Dict[str, Any], tree: Any = None) -> bytes:
+    """Serialize (kind, metadata, optional pytree-of-arrays) to wire bytes."""
+    leaves: List[Tuple[str, np.ndarray]] = []
+    skeleton = _flatten(tree, "", leaves, None) if tree is not None else None
+    records = []
+    payload = io.BytesIO()
+    offset = 0
+    for name, arr in leaves:
+        buf = np.ascontiguousarray(arr)   # NB: promotes 0-d to 1-d; keep arr.shape
+        records.append({"name": name, "dtype": str(buf.dtype),
+                        "shape": list(arr.shape), "offset": offset,
+                        "nbytes": buf.nbytes})
+        payload.write(buf.tobytes())
+        offset += buf.nbytes
+    header = json.dumps({"kind": kind, "meta": meta, "skeleton": skeleton,
+                         "records": records}).encode()
+    return _HDR.pack(MAGIC, len(header)) + header + payload.getvalue()
+
+
+def decode_message(data: bytes) -> Tuple[str, Dict[str, Any], Any]:
+    magic, hlen = _HDR.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise ValueError("bad magic — not a FedKBP+ frame")
+    header = json.loads(data[_HDR.size: _HDR.size + hlen].decode())
+    base = _HDR.size + hlen
+    leaves = []
+    for rec in header["records"]:
+        start = base + rec["offset"]
+        count = 1
+        for d in rec["shape"]:
+            count *= d
+        arr = np.frombuffer(data, dtype=np.dtype(rec["dtype"]),
+                            count=count, offset=start).reshape(tuple(rec["shape"]))
+        leaves.append(arr)
+    tree = _unflatten(header["skeleton"], leaves) if header["skeleton"] is not None else None
+    return header["kind"], header["meta"], tree
+
+
+def frame(data: bytes) -> bytes:
+    """Length-prefix a message for the TCP stream."""
+    return struct.pack("<Q", len(data)) + data
+
+
+def read_frame(sock) -> bytes:
+    """Read one length-prefixed message from a socket (blocking)."""
+    hdr = _read_exact(sock, 8)
+    (n,) = struct.unpack("<Q", hdr)
+    return _read_exact(sock, n)
+
+
+def _read_exact(sock, n: int) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed while reading frame")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)

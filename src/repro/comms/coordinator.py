@@ -1,0 +1,127 @@
+"""Coordination / aggregation services (paper Figs 3 & 4, Algorithm 1).
+
+``AggregationServer`` — centralized FL: receives site weight uploads,
+computes the case-weighted average (Eq. 1) once all active sites report,
+and hands the global model back on download.
+
+``CoordinationServer`` — decentralized FL: never touches weights.  It
+tracks site metadata (address, active/dropped status), pairs active
+sites into (sender, receiver) roles each round, and broadcasts the
+assignment — the sites then exchange models directly peer-to-peer.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.comms.codec import encode_message
+from repro.comms.transport import Server
+from repro.core.gossip import pair_sites
+
+
+def _weighted_average(uploads: Dict[int, Any], weights: Dict[int, float]) -> Any:
+    tot = sum(weights[i] for i in uploads)
+    import jax
+    acc = None
+    for i, tree in uploads.items():
+        w = weights[i] / tot
+        scaled = jax.tree.map(lambda x: np.asarray(x, np.float32) * w, tree)
+        acc = scaled if acc is None else jax.tree.map(np.add, acc, scaled)
+    return acc
+
+
+class AggregationServer:
+    """Centralized FL server (FedAvg/FedProx upload→aggregate→broadcast)."""
+
+    def __init__(self, host: str, port: int, num_sites: int,
+                 case_weights: Optional[List[float]] = None):
+        self.num_sites = num_sites
+        self.weights = {i: (case_weights[i] if case_weights else 1.0)
+                        for i in range(num_sites)}
+        self._lock = threading.Condition()
+        self._uploads: Dict[int, Any] = {}
+        self._round = 0
+        self._global: Any = None
+        self.server = Server(host, port, self._handle).start()
+        self.addr = self.server.addr
+
+    def _handle(self, kind, meta, tree):
+        if kind == "upload":
+            with self._lock:
+                self._uploads[int(meta["site"])] = tree
+                expected = int(meta.get("active_sites", self.num_sites))
+                if len(self._uploads) >= expected:
+                    self._global = _weighted_average(self._uploads, self.weights)
+                    self._uploads = {}
+                    self._round += 1
+                    self._lock.notify_all()
+            return encode_message("ack", {"round": self._round}, None)
+        if kind == "download":
+            want_round = int(meta["round"])
+            with self._lock:
+                self._lock.wait_for(lambda: self._round >= want_round, timeout=60)
+                return encode_message("global", {"round": self._round}, self._global)
+        if kind == "status":
+            return encode_message("status", {"round": self._round,
+                                             "pending": len(self._uploads)}, None)
+        raise ValueError(f"unknown rpc {kind!r}")
+
+    def stop(self):
+        self.server.stop()
+
+
+class CoordinationServer:
+    """Decentralized FL coordinator: metadata + pairing only (Fig 4)."""
+
+    def __init__(self, host: str, port: int, num_sites: int, seed: int = 0):
+        self.num_sites = num_sites
+        self.rng = np.random.default_rng(seed)
+        self._lock = threading.Condition()
+        self._sites: Dict[int, Dict[str, Any]] = {}       # site -> {addr, active}
+        self._round = 0
+        self._assignment: Optional[Dict[str, Any]] = None
+        self.server = Server(host, port, self._handle).start()
+        self.addr = self.server.addr
+
+    def _handle(self, kind, meta, tree):
+        if kind == "register":
+            with self._lock:
+                self._sites[int(meta["site"])] = {
+                    "addr": tuple(meta["addr"]), "active": True}
+                self._lock.notify_all()
+            return encode_message("ack", {}, None)
+        if kind == "status_update":            # Algorithm 1 "send status update"
+            with self._lock:
+                site = int(meta["site"])
+                if site in self._sites:
+                    self._sites[site]["active"] = bool(meta["active"])
+                ready = (len(self._sites) == self.num_sites)
+                if ready and all(m.get("reported_round", -1) is not None
+                                 for m in self._sites.values()):
+                    pass
+            return encode_message("ack", {}, None)
+        if kind == "get_assignment":           # Algorithm 1 coordinator side
+            want_round = int(meta["round"])
+            with self._lock:
+                self._lock.wait_for(lambda: len(self._sites) == self.num_sites,
+                                    timeout=60)
+                if self._assignment is None or self._assignment["round"] < want_round:
+                    active = np.array([self._sites[i]["active"]
+                                       for i in range(self.num_sites)])
+                    partner, is_recv, is_send = pair_sites(active, self.rng)
+                    self._assignment = {
+                        "round": want_round,
+                        "partner": partner.tolist(),
+                        "is_receiver": is_recv.tolist(),
+                        "is_sender": is_send.tolist(),
+                        "active": active.tolist(),
+                        "addresses": {str(i): list(self._sites[i]["addr"])
+                                      for i in range(self.num_sites)},
+                    }
+                return encode_message("assignment", self._assignment, None)
+        raise ValueError(f"unknown rpc {kind!r}")
+
+    def stop(self):
+        self.server.stop()

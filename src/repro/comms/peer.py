@@ -1,0 +1,81 @@
+"""Site-side comms endpoint (paper Fig 4, Algorithm 1 "Site side").
+
+A ``Peer`` owns a small server socket for receiving models from other
+sites (the Sender→Receiver path of decentralized FL) and client channels
+to the coordinator / aggregation server.  It exposes exactly the verbs
+the paper's FL scripts use:
+
+  centralized : upload(weights) / download(round)
+  decentralized: get_assignment(round) → send_model(addr) or recv_model()
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from repro.comms.codec import encode_message
+from repro.comms.transport import Address, Channel, Server
+
+
+class Peer:
+    def __init__(self, site_id: int, host: str = "127.0.0.1", port: int = 0):
+        self.site_id = site_id
+        self._inbox: "queue.Queue[Tuple[Dict, Any]]" = queue.Queue()
+        self.server = Server(host, port, self._handle).start()
+        self.addr: Address = self.server.addr
+        self._channels: Dict[Address, Channel] = {}
+
+    # -- incoming ----------------------------------------------------------
+    def _handle(self, kind, meta, tree):
+        if kind == "model":
+            self._inbox.put((meta, tree))
+            return encode_message("ack", {}, None)
+        raise ValueError(f"unknown rpc {kind!r}")
+
+    def recv_model(self, timeout: float = 60.0) -> Tuple[Dict, Any]:
+        """Block until a peer model arrives (Receiver role)."""
+        return self._inbox.get(timeout=timeout)
+
+    # -- outgoing ----------------------------------------------------------
+    def _channel(self, addr: Address) -> Channel:
+        addr = (addr[0], int(addr[1]))
+        if addr not in self._channels:
+            self._channels[addr] = Channel(addr)
+        return self._channels[addr]
+
+    def send_model(self, addr: Address, weights: Any, round_index: int):
+        """Sender role: push local weights directly to the receiver site."""
+        self._channel(addr).request(
+            "model", {"site": self.site_id, "round": round_index}, weights)
+
+    # centralized-FL verbs
+    def upload(self, server_addr: Address, weights: Any, round_index: int,
+               active_sites: Optional[int] = None):
+        meta = {"site": self.site_id, "round": round_index}
+        if active_sites is not None:
+            meta["active_sites"] = active_sites
+        self._channel(server_addr).request("upload", meta, weights)
+
+    def download(self, server_addr: Address, round_index: int) -> Any:
+        _, meta, tree = self._channel(server_addr).request(
+            "download", {"round": round_index}, None)
+        return tree
+
+    def register(self, coord_addr: Address):
+        self._channel(coord_addr).request(
+            "register", {"site": self.site_id, "addr": list(self.addr)}, None)
+
+    def get_assignment(self, coord_addr: Address, round_index: int) -> Dict:
+        _, meta, _ = self._channel(coord_addr).request(
+            "get_assignment", {"round": round_index}, None)
+        return meta
+
+    def status_update(self, coord_addr: Address, active: bool):
+        self._channel(coord_addr).request(
+            "status_update", {"site": self.site_id, "active": active}, None)
+
+    def close(self):
+        for ch in self._channels.values():
+            ch.close()
+        self.server.stop()

@@ -1,0 +1,108 @@
+"""TCP transport — the offline stand-in for the paper's gRPC channel.
+
+Sites are addressed by (host, port) exactly as in FedKBP+ ("each site is
+uniquely identified by a combination of its IP address and port number",
+§III.A.3), so sites can share one workstation (same IP, distinct ports)
+or be spread across machines.  One OS thread per accepted connection;
+every message is a framed codec blob (see codec.py).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.comms.codec import decode_message, encode_message, frame, read_frame
+
+Address = Tuple[str, int]
+
+Handler = Callable[[str, Dict[str, Any], Any], Optional[bytes]]
+
+
+class Server:
+    """Threaded request/response TCP server.
+
+    ``handler(kind, meta, tree) -> reply bytes | None`` runs on the
+    connection thread; exceptions are returned to the caller as an
+    ``error`` message (mirroring gRPC status codes).
+    """
+
+    def __init__(self, host: str, port: int, handler: Handler):
+        self.addr: Address = (host, port)
+        self.handler = handler
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind(self.addr)
+        self.addr = self._sock.getsockname()       # resolve port 0
+        self._sock.listen(64)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+
+    def start(self) -> "Server":
+        self._thread.start()
+        return self
+
+    def _serve(self):
+        while not self._stop.is_set():
+            try:
+                self._sock.settimeout(0.2)
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            threading.Thread(target=self._handle_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _handle_conn(self, conn: socket.socket):
+        with conn:
+            while not self._stop.is_set():
+                try:
+                    data = read_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    kind, meta, tree = decode_message(data)
+                    reply = self.handler(kind, meta, tree)
+                    if reply is None:
+                        reply = encode_message("ok", {}, None)
+                except Exception as e:  # noqa: BLE001 — wire errors to caller
+                    reply = encode_message("error", {"message": repr(e)}, None)
+                try:
+                    conn.sendall(frame(reply))
+                except OSError:
+                    return
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout=2)
+
+
+class Channel:
+    """Client connection to a peer/coordinator (request → response)."""
+
+    def __init__(self, addr: Address, timeout: float = 30.0):
+        self.addr = addr
+        self._sock = socket.create_connection(addr, timeout=timeout)
+        self._lock = threading.Lock()
+
+    def request(self, kind: str, meta: Dict[str, Any], tree: Any = None
+                ) -> Tuple[str, Dict[str, Any], Any]:
+        data = encode_message(kind, meta, tree)
+        with self._lock:
+            self._sock.sendall(frame(data))
+            reply = read_frame(self._sock)
+        rkind, rmeta, rtree = decode_message(reply)
+        if rkind == "error":
+            raise RuntimeError(f"remote error from {self.addr}: {rmeta['message']}")
+        return rkind, rmeta, rtree
+
+    def close(self):
+        try:
+            self._sock.close()
+        except OSError:
+            pass

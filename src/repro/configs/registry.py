@@ -1,0 +1,79 @@
+"""Architecture registry: maps ``--arch <id>`` to its config module.
+
+Each ``src/repro/configs/<id>.py`` exports:
+  * ``CONFIG``      — the exact assigned :class:`ModelConfig` (source cited)
+  * ``reduced()``   — a CPU-smoke variant (≤2 layers, d_model ≤ 512, ≤4 experts)
+  * ``mesh_for(shape, multi_pod)``   — FL site layout on the pod mesh
+  * ``precision_for(shape)``         — dtype policy
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+ARCH_IDS: List[str] = [
+    "deepseek_v2_236b",
+    "rwkv6_7b",
+    "jamba_1p5_large_398b",
+    "qwen3_8b",
+    "qwen3_moe_30b_a3b",
+    "chameleon_34b",
+    "gemma3_1b",
+    "smollm_135m",
+    "granite_3_2b",
+    "musicgen_medium",
+    "sanet_openkbp",          # the paper's own backbone (dose prediction)
+]
+
+# user-facing aliases (the assignment spelling)
+ALIASES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "rwkv6-7b": "rwkv6_7b",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "chameleon-34b": "chameleon_34b",
+    "gemma3-1b": "gemma3_1b",
+    "smollm-135m": "smollm_135m",
+    "granite-3-2b": "granite_3_2b",
+    "musicgen-medium": "musicgen_medium",
+    "sanet-openkbp": "sanet_openkbp",
+}
+
+
+def get_arch(name: str):
+    """Load a config module by id or alias."""
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+# (arch, shape) pairs skipped in the dry-run, with reasons (DESIGN.md §5).
+LONG_500K_SKIPS = {
+    "deepseek_v2_236b": "MLA compresses the KV cache but attention is full; no sub-quadratic variant",
+    "qwen3_8b": "pure full attention",
+    "qwen3_moe_30b_a3b": "pure full attention",
+    "chameleon_34b": "pure full attention (early-fusion decoder)",
+    "smollm_135m": "pure full attention",
+    "granite_3_2b": "pure full attention",
+    "musicgen_medium": "pure full attention",
+    "sanet_openkbp": "SA-Net is a 3D conv net; sequence shapes do not apply (dose volumes only)",
+}
+
+# SA-Net is the paper's conv backbone: token-sequence shapes other than its own
+# volumetric task do not apply.
+SHAPE_SKIPS = {
+    "sanet_openkbp": {
+        "prefill_32k": "conv model: no autoregressive serving",
+        "decode_32k": "conv model: no autoregressive serving",
+        "long_500k": "conv model: no autoregressive serving",
+    },
+}
+
+
+def is_skipped(arch_id: str, shape_name: str):
+    """Returns a reason string if (arch, shape) is skipped, else None."""
+    if shape_name == "long_500k" and arch_id in LONG_500K_SKIPS:
+        return LONG_500K_SKIPS[arch_id]
+    return SHAPE_SKIPS.get(arch_id, {}).get(shape_name)

@@ -1,0 +1,48 @@
+"""SA-Net on OpenKBP-shaped dose prediction — the paper's own configuration.
+
+Backbone per Figure 5 (ResSE encoder/decoder + scale attention + deep
+supervision); input = CT + PTV/OAR masks (11 channels), output = 3D dose.
+This config participates in the FL benchmarks (Fig 7/8/9) rather than the
+LLM dry-run shapes (see ``registry.SHAPE_SKIPS``).
+"""
+from repro.configs.base import MeshConfig, ModelConfig, PrecisionConfig
+from repro.models.sanet import SANetConfig
+
+# The assigned-architecture machinery expects a ModelConfig; SA-Net's true
+# config is SANET below. This stanza records the volumetric task metadata.
+CONFIG = ModelConfig(
+    name="sanet-openkbp",
+    arch_type="conv3d",
+    num_layers=4,                # encoder levels
+    d_model=24,                  # base filters
+    num_heads=1, num_kv_heads=1,
+    d_ff=0, vocab_size=0,
+    source="OpenKBP (Babier et al. 2021), SA-Net (Yuan 2021)",
+)
+
+SANET = SANetConfig(in_channels=11, out_channels=1, base_filters=24,
+                    num_levels=4, task="dose")
+
+SANET_SEG = SANetConfig(in_channels=4, out_channels=4, base_filters=24,
+                        num_levels=4, task="segmentation")   # BraTS: 4 MRI mods, 4 classes
+
+SANET_OAR = SANetConfig(in_channels=1, out_channels=2, base_filters=24,
+                        num_levels=4, task="segmentation")   # PanSeg: T1 MRI, pancreas/bg
+
+
+def reduced() -> SANetConfig:
+    return SANetConfig(in_channels=3, out_channels=1, base_filters=8,
+                       num_levels=2, task="dose")
+
+
+def reduced_seg() -> SANetConfig:
+    return SANetConfig(in_channels=2, out_channels=3, base_filters=8,
+                       num_levels=2, task="segmentation")
+
+
+def mesh_for(shape, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(sites_per_pod=16, fsdp=1, multi_pod=multi_pod)
+
+
+def precision_for(shape) -> PrecisionConfig:
+    return PrecisionConfig()

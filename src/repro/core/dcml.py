@@ -1,0 +1,78 @@
+"""Regional Deep Contrastive Mutual Learning (paper Eq. 3, GCML's core).
+
+The contrastive KL divergence D_CKL aligns two models' predictive
+distributions where a *reference* model classifies correctly and pushes
+them apart where it is wrong:
+
+    D_CKL(P_a ∥ P_b) = mean_{region ok} KL(P_b ∥ P_a)
+                     - β · mean_{region wrong} KL(P_b ∥ P_a)
+
+where the region masks come from the reference model's argmax vs the
+label, and P_b (the target) is gradient-stopped — model ``a`` learns
+from ``b`` (mutual distillation) without ``b`` being dragged through
+``a``'s loss.  "Region" is generic: voxels for SA-Net segmentation,
+token positions for the LLM architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _kl(p_logits, q_logits):
+    """KL(q ∥ p) per position (target q is the teacher; fp32)."""
+    p = jax.nn.log_softmax(p_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.log_softmax(q_logits.astype(jnp.float32), axis=-1)
+    return jnp.sum(jnp.exp(q) * (q - p), axis=-1)
+
+
+def contrastive_kl(student_logits, teacher_logits, labels, beta: float = 1.0):
+    """D_CKL(P_student ∥ P_teacher) with the *teacher* as reference.
+
+    student/teacher logits: [..., V]; labels: [...] int.  Returns scalar.
+    """
+    teacher_logits = jax.lax.stop_gradient(teacher_logits)
+    correct = (jnp.argmax(teacher_logits, axis=-1) == labels)
+    kl = _kl(student_logits, teacher_logits)
+    ok = correct.astype(jnp.float32)
+    align = jnp.sum(kl * ok) / (jnp.sum(ok) + 1e-6)
+    wrong = 1.0 - ok
+    diverge = jnp.sum(kl * wrong) / (jnp.sum(wrong) + 1e-6)
+    return align - beta * diverge
+
+
+def dcml_losses(logits_fn: Callable, params_r, params_s, batch,
+                base_loss_fn: Callable, lam: float, beta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The two Eq. 3 objectives, evaluated on the receiver's local batch.
+
+    F̂_r = (1-λ) F_r(w_r) + λ D_CKL(P_r ∥ P_s)
+    F̂_s = (1-λ) F_r(w_s) + λ D_CKL(P_s ∥ P_r)
+
+    ``logits_fn(params, batch) -> (logits, labels)`` abstracts the task
+    (next-token LM or voxel segmentation).
+    """
+    logits_r, labels = logits_fn(params_r, batch)
+    logits_s, _ = logits_fn(params_s, batch)
+    f_r = base_loss_fn(params_r, batch)
+    f_s = base_loss_fn(params_s, batch)
+    l_r = (1 - lam) * f_r + lam * contrastive_kl(logits_r, logits_s, labels, beta)
+    l_s = (1 - lam) * f_s + lam * contrastive_kl(logits_s, logits_r, labels, beta)
+    return l_r, l_s
+
+
+def merge_by_validation(params_r, params_s, v_r, v_s):
+    """w_r^{t+1} = (v_r w_r + v_s w_s) / (v_r + v_s)   (Eq. 3 last line).
+
+    Lower validation loss should mean HIGHER weight, so (as in the GCML
+    reference implementation) the weights are inverted validation
+    losses — each model is weighted by the other's loss share.
+    """
+    tot = v_r + v_s + 1e-12
+    a, b = v_s / tot, v_r / tot          # inverse weighting
+    return jax.tree.map(
+        lambda x, y: (a * x.astype(jnp.float32)
+                      + b * y.astype(jnp.float32)).astype(x.dtype),
+        params_r, params_s)

@@ -1,0 +1,172 @@
+"""The federated round driver — builds the jitted `fl_round` step.
+
+One FL round (Figs 3/4, Algorithm 1):
+
+  1. (decentralized) pre-exchange: receive peer model + regional DCML
+  2. local training: ``local_steps`` optimizer steps per site, vmapped
+     over the stacked site axis (each site sees only its own batch shard)
+  3. (centralized) post-exchange: weighted aggregation + broadcast
+  4. dropout semantics: "shutdown" sites skip (2); inactive sites always
+     skip exchanges (their aggregation weight is zero and they keep
+     their local weights)
+
+Host-side per-round inputs (active mask, gossip pairing) come from
+``repro.core.dropout.SiteAvailability`` and ``repro.core.gossip`` —
+mirroring the paper's coordination server, which tracks metadata outside
+the training engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederationConfig, JobConfig, MeshConfig
+from repro.core import stacking
+from repro.core.strategies import base as strat_base
+# strategy modules self-register on import
+from repro.core.strategies import fedavg as _f  # noqa: F401
+from repro.core.strategies import fedprox as _p  # noqa: F401
+from repro.core.strategies import gcml as _g  # noqa: F401
+from repro.core.strategies import individual as _i  # noqa: F401
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class FLContext:
+    """Everything a strategy hook may need (static, captured at trace time)."""
+    fed: FederationConfig
+    mesh: MeshConfig
+    case_weights: jnp.ndarray
+    loss_fn: Callable            # (params, batch) -> (loss, metrics)
+    logits_fn: Optional[Callable]  # (params, batch) -> (logits, labels)
+    optimizer: Optimizer
+    grad_clip: float
+    dcml_lr: float
+    hierarchical: bool = True
+    microbatch: Optional[int] = None   # per-site microbatch for grad accumulation
+    accum_dtype: Any = jnp.float32     # grad-accumulator dtype (bf16 for ≥236B)
+
+    def scalar_loss_fn(self, params, batch):
+        return self.loss_fn(params, batch)[0]
+
+
+def init_fl_state(ctx: FLContext, init_params_fn, key):
+    """Round-0 federated state: identical params on every site (paper)."""
+    params = stacking.init_stacked(init_params_fn, key, ctx.fed.num_sites)
+    opt = jax.vmap(ctx.optimizer.init)(params)
+    strategy = strat_base.get_strategy(ctx.fed.strategy)
+    return {
+        "params": params,
+        "opt": opt,
+        "strategy": strategy.init_state(params, ctx),
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_round_inputs(ctx: FLContext, availability=None, rng=None,
+                      round_index: int = 0) -> Dict[str, np.ndarray]:
+    """Host-side coordinator outputs for one round."""
+    from repro.core.gossip import pair_sites
+    s = ctx.fed.num_sites
+    active = (availability.step() if availability is not None
+              else np.ones((s,), bool))
+    partner = np.arange(s)
+    is_recv = np.zeros(s, bool)
+    if strat_base.get_strategy(ctx.fed.strategy).needs_pairing:
+        rng = rng or np.random.default_rng(round_index)
+        partner, is_recv, _ = pair_sites(active, rng)
+    return {"active": active, "partner": partner, "is_receiver": is_recv}
+
+
+def build_fl_round(ctx: FLContext, remat_local: bool = False):
+    """Returns ``fl_round(fl_state, batches, round_inputs) -> (fl_state, metrics)``.
+
+    ``batches`` pytree leaves are shaped [S, local_steps, per-site batch…];
+    for GCML, ``round_inputs`` additionally carries ``dcml_batch`` and
+    ``val_batch`` with leaves [S, …].
+    """
+    strategy = strat_base.get_strategy(ctx.fed.strategy)
+
+    def site_train_step(params, opt, batch, strat_ref):
+        def lf(p, b):
+            loss, metrics = ctx.loss_fn(p, b)
+            loss = loss + strategy.local_loss_extra(p, strat_ref, ctx)
+            return loss, metrics
+
+        bsz = jax.tree.leaves(batch)[0].shape[0]
+        if ctx.microbatch and ctx.microbatch < bsz:
+            # gradient accumulation over microbatches (fp32 accumulators)
+            n = bsz // ctx.microbatch
+            micro = jax.tree.map(
+                lambda x: x.reshape((n, ctx.microbatch) + x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    lf, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(ctx.accum_dtype), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, ctx.accum_dtype), params)
+            (grads, loss_sum), ms = jax.lax.scan(accum, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        if ctx.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, ctx.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt = ctx.optimizer.update(grads, opt, params)
+        params = apply_updates(params, updates)
+        return params, opt, {"loss": loss, "grad_norm": gnorm, **metrics}
+
+    if remat_local:
+        site_train_step = jax.checkpoint(site_train_step)
+
+    def local_phase(fl_state, batches, active):
+        strat_ref = fl_state["strategy"]
+
+        def per_site(params, opt, site_batches):
+            def body(carry, b):
+                p, o = carry
+                p, o, m = site_train_step(p, o, b, strat_ref)
+                return (p, o), m
+            (params, opt), ms = jax.lax.scan(body, (params, opt), site_batches)
+            return params, opt, jax.tree.map(lambda x: x[-1], ms)
+
+        new_params, new_opt, metrics = jax.vmap(
+            per_site, in_axes=(0, 0, 0))(fl_state["params"], fl_state["opt"], batches)
+
+        if ctx.fed.dropout_scenario == "shutdown":
+            # workstation off: inactive sites neither train nor update state
+            new_params = stacking.where_site(active, new_params, fl_state["params"])
+            new_opt = stacking.where_site(active, new_opt, fl_state["opt"])
+        return {**fl_state, "params": new_params, "opt": new_opt}, metrics
+
+    def fl_round(fl_state, batches, round_inputs):
+        active = jnp.asarray(round_inputs["active"])
+        ri = {**round_inputs, "active": active}
+        fl_state = strategy.pre_exchange(fl_state, ri, ctx)
+        fl_state, metrics = local_phase(fl_state, batches, active)
+        fl_state = strategy.post_exchange(fl_state, ri, ctx)
+        fl_state = {**fl_state, "round": fl_state["round"] + 1}
+        if "metrics" in fl_state:
+            metrics = {**metrics, **fl_state.pop("metrics")}
+        return fl_state, metrics
+
+    return fl_round
+
+
+def global_model(fl_state, ctx: FLContext):
+    """Case-weighted global model from the current stacked params
+    (what gets served / checkpointed as 'the' model)."""
+    w = ctx.case_weights / jnp.sum(ctx.case_weights)
+    return stacking.weighted_mean(fl_state["params"], w)

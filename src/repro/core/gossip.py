@@ -1,0 +1,61 @@
+"""Gossip pairing — the decentralized coordinator's role assignment.
+
+Each FL round the coordination server (Fig 4 / Algorithm 1) selects
+Sender/Receiver pairs among *active* sites and broadcasts the roles.
+Here the host computes the pairing (numpy RNG, mirroring the
+coordinator process) and the jitted exchange consumes it as three
+arrays:
+
+  * ``partner[i]``   — index whose model site ``i`` pulls (identity when
+                       not a receiver, so the gather is always a valid
+                       permutation → lowers to collective-permute)
+  * ``is_receiver``  — bool mask of receiver sites
+  * ``is_sender``    — bool mask of sender sites
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def pair_sites(active: np.ndarray, rng: np.random.Generator
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Random sender→receiver pairing among active sites.
+
+    Active sites are shuffled and split into (sender, receiver) pairs;
+    an odd site out participates as neither (it only does local training
+    this round, as in the paper's implementation).
+    """
+    n = active.shape[0]
+    partner = np.arange(n)
+    is_recv = np.zeros(n, bool)
+    is_send = np.zeros(n, bool)
+    idx = np.flatnonzero(active)
+    rng.shuffle(idx)
+    for a, b in zip(idx[0::2], idx[1::2]):
+        # a sends to b: receiver b pulls a's model
+        partner[b] = a
+        is_send[a] = True
+        is_recv[b] = True
+    return partner, is_recv, is_send
+
+
+def ring_pairs(active: np.ndarray, round_index: int
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic ring gossip (every active site both sends and
+    receives from its clockwise active neighbour) — the lower-variance
+    alternative schedule; used by the communication benchmarks."""
+    n = active.shape[0]
+    partner = np.arange(n)
+    idx = np.flatnonzero(active)
+    k = len(idx)
+    is_recv = np.zeros(n, bool)
+    is_send = np.zeros(n, bool)
+    if k >= 2:
+        shift = 1 + (round_index % max(k - 1, 1))
+        for j, i in enumerate(idx):
+            partner[i] = idx[(j + shift) % k]
+            is_recv[i] = True
+            is_send[i] = True
+    return partner, is_recv, is_send

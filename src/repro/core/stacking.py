@@ -1,0 +1,70 @@
+"""Site-stacked parameter pytrees — the federated representation.
+
+Every federated quantity (params, optimizer state, metrics) carries a
+leading ``S = num_sites`` axis.  On the FL mesh that axis is sharded over
+the ``("pod","site")`` axes, so XLA's lowering of the aggregation einsums
+*is* the paper's gRPC traffic (all-reduce for FedAvg, collective-permute
+for gossip).  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def stack_replicas(params, num_sites: int):
+    """Replicate an unstacked pytree into [S, ...] (round-0 broadcast)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_sites,) + x.shape), params)
+
+
+def init_stacked(init_fn: Callable[[jax.Array], Any], key, num_sites: int,
+                 same_init: bool = True):
+    """Initialize site-stacked params.
+
+    ``same_init=True`` matches the paper: all sites start from the same
+    global initialization (a FedAvg requirement for sensible averaging).
+    """
+    if same_init:
+        return stack_replicas(init_fn(key), num_sites)
+    keys = jax.random.split(key, num_sites)
+    return jax.vmap(init_fn)(keys)
+
+
+def site_slice(stacked, i: int):
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def weighted_mean(stacked, weights: jnp.ndarray):
+    """Weighted average over the site axis: Eq. 1's  Σ_i (m_i/m) w_i.
+
+    ``weights`` must already be normalized (sum to 1 over active sites).
+    Lowered by XLA to an all-reduce over the "site"/"pod" mesh axes.
+    """
+    return jax.tree.map(
+        lambda x: jnp.tensordot(weights.astype(jnp.float32),
+                                x.astype(jnp.float32), axes=1).astype(x.dtype),
+        stacked)
+
+
+def broadcast_to_sites(tree, num_sites: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (num_sites,) + x.shape), tree)
+
+
+def where_site(mask: jnp.ndarray, a, b):
+    """Per-site select: mask [S] bool; a/b stacked pytrees."""
+    def sel(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+def gather_sites(stacked, indices: jnp.ndarray):
+    """Permute the site axis (gossip exchange): out[i] = in[indices[i]].
+
+    Lowered to a collective-permute over the "site" axis when ``indices``
+    is a permutation.
+    """
+    return jax.tree.map(lambda x: jnp.take(x, indices, axis=0), stacked)

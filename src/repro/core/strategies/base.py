@@ -1,0 +1,53 @@
+"""Strategy interface.
+
+A strategy contributes three hooks to the federated round (Fig 3/4):
+
+  * ``init_state``   — per-federation state (e.g. FedProx's global model)
+  * ``pre_exchange`` — model exchange BEFORE local training (decentralized
+                       FL: receive + DCML, Algorithm 1)
+  * ``post_exchange``— aggregation AFTER local training (centralized FL:
+                       upload + weighted average + broadcast, Eq. 1/2)
+  * ``local_loss_extra`` — an additive term on the local objective
+                       (FedProx's proximal term, Eq. 2)
+
+All hooks are pure and jit-traceable; host-side coordination (pairing,
+availability) arrives through ``round_inputs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+
+class Strategy:
+    name: str = "base"
+    needs_pairing: bool = False
+    needs_val_batch: bool = False
+
+    def init_state(self, params_stacked, ctx) -> Dict[str, Any]:
+        return {}
+
+    def local_loss_extra(self, params_site, strat_state, ctx) -> jnp.ndarray:
+        return jnp.zeros((), jnp.float32)
+
+    def pre_exchange(self, fl_state, round_inputs, ctx):
+        return fl_state
+
+    def post_exchange(self, fl_state, round_inputs, ctx):
+        return fl_state
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(cls):
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown FL strategy {name!r}; known: {sorted(_REGISTRY)}")

@@ -1,0 +1,20 @@
+"""FedAvg (McMahan et al. 2017) — paper Eq. 1."""
+from __future__ import annotations
+
+from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
+from repro.core.strategies.base import Strategy, register
+
+
+@register
+class FedAvg(Strategy):
+    name = "fedavg"
+
+    def post_exchange(self, fl_state, round_inputs, ctx):
+        active = round_inputs["active"]
+        if ctx.mesh.multi_pod and ctx.hierarchical:
+            params, global_params = hierarchical_aggregate(
+                fl_state["params"], ctx.case_weights, ctx.mesh.sites_per_pod, active)
+        else:
+            params, global_params = fedavg_aggregate(
+                fl_state["params"], ctx.case_weights, active)
+        return {**fl_state, "params": params}

@@ -1,0 +1,47 @@
+"""FedProx (Li et al. 2018) — paper Eq. 2.
+
+FedAvg aggregation plus a proximal term  (μ/2)·‖w_i − w^t‖²  on each
+site's local objective, anchoring local models to the last global model
+under data heterogeneity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
+from repro.core.stacking import weighted_mean
+from repro.core.strategies.base import Strategy, register
+
+
+def prox_term(params_site, global_params, mu: float) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(p.astype(jnp.float32) - g.astype(jnp.float32)))
+             for p, g in zip(jax.tree.leaves(params_site),
+                             jax.tree.leaves(global_params)))
+    return 0.5 * mu * sq
+
+
+@register
+class FedProx(Strategy):
+    name = "fedprox"
+
+    def init_state(self, params_stacked, ctx):
+        # the round-0 global model is the shared initialization
+        import jax.numpy as jnp
+        s = jax.tree.leaves(params_stacked)[0].shape[0]
+        w = jnp.ones((s,), jnp.float32) / s
+        return {"global": weighted_mean(params_stacked, w)}
+
+    def local_loss_extra(self, params_site, strat_state, ctx):
+        return prox_term(params_site, strat_state["global"], ctx.fed.prox_mu)
+
+    def post_exchange(self, fl_state, round_inputs, ctx):
+        active = round_inputs["active"]
+        if ctx.mesh.multi_pod and ctx.hierarchical:
+            params, global_params = hierarchical_aggregate(
+                fl_state["params"], ctx.case_weights, ctx.mesh.sites_per_pod, active)
+        else:
+            params, global_params = fedavg_aggregate(
+                fl_state["params"], ctx.case_weights, active)
+        return {**fl_state, "params": params,
+                "strategy": {"global": global_params}}

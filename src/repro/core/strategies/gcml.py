@@ -1,0 +1,64 @@
+"""GCML — Gossip Contrastive Mutual Learning (paper Eq. 3, Algorithm 1).
+
+Fully decentralized: no aggregation server.  Each round the coordinator
+pairs active sites into (sender, receiver); the receiver pulls the
+sender's weights (a site-axis gather → collective-permute on the mesh),
+runs regional DCML — both the local and the incoming model take one
+mutual-distillation SGD step on the receiver's local batch — and merges
+them weighted by their validation losses.  Local training then proceeds
+as usual (handled by the round driver).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcml import dcml_losses, merge_by_validation
+from repro.core.stacking import gather_sites, where_site
+from repro.core.strategies.base import Strategy, register
+
+
+@register
+class GCML(Strategy):
+    name = "gcml"
+    needs_pairing = True
+    needs_val_batch = True
+
+    def pre_exchange(self, fl_state, round_inputs, ctx):
+        params = fl_state["params"]
+        partner = round_inputs["partner"]          # [S] int (identity if not recv)
+        is_recv = round_inputs["is_receiver"]      # [S] bool
+        active = round_inputs["active"]
+        batch = round_inputs["dcml_batch"]         # [S, ...] one local batch
+        val_batch = round_inputs["val_batch"]      # [S, ...]
+        incoming = gather_sites(params, partner)
+
+        lam = ctx.fed.gcml_lambda
+        beta = ctx.fed.gcml_contrast_beta
+        eta = ctx.dcml_lr
+
+        def site_dcml(p_r, p_s, b, vb):
+            def joint(pr, ps):
+                l_r, l_s = dcml_losses(ctx.logits_fn, pr, ps, b,
+                                       ctx.scalar_loss_fn, lam, beta)
+                return l_r + l_s, (l_r, l_s)
+            grads, (l_r, l_s) = jax.grad(joint, argnums=(0, 1), has_aux=True)(p_r, p_s)
+            g_r, g_s = grads
+            w_r = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
+                              ).astype(p.dtype), p_r, g_r)
+            w_s = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
+                              ).astype(p.dtype), p_s, g_s)
+            v_r = ctx.scalar_loss_fn(w_r, vb)
+            v_s = ctx.scalar_loss_fn(w_s, vb)
+            merged = merge_by_validation(w_r, w_s, v_r, v_s)
+            return merged, (l_r, l_s, v_r, v_s)
+
+        merged, dcml_metrics = jax.vmap(site_dcml)(params, incoming, batch, val_batch)
+        take = is_recv & active
+        new_params = where_site(take, merged, params)
+        metrics = {**fl_state.get("metrics", {}),
+                   "dcml_loss_r": dcml_metrics[0], "dcml_loss_s": dcml_metrics[1],
+                   "dcml_val_r": dcml_metrics[2], "dcml_val_s": dcml_metrics[3]}
+        return {**fl_state, "params": new_params, "metrics": metrics}

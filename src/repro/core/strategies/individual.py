@@ -1,0 +1,21 @@
+"""Baselines: Individual (no exchange) and Pooled (handled by the trainer
+as a single-site federation over the concatenated dataset)."""
+from __future__ import annotations
+
+from repro.core.strategies.base import Strategy, register
+
+
+@register
+class Individual(Strategy):
+    """Each site trains alone on its local data — the paper's lower baseline."""
+    name = "individual"
+
+
+@register
+class Pooled(Strategy):
+    """Centralized training on pooled data — the paper's upper baseline.
+
+    Implemented as a 1-site federation whose 'site' sees every case
+    (the data pipeline concatenates all partitions); no exchange needed.
+    """
+    name = "pooled"

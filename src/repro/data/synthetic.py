@@ -1,0 +1,212 @@
+"""Synthetic data generators with controllable inter-site heterogeneity.
+
+Real OpenKBP/BraTS/PanSeg volumes are not redistributable in this
+environment, so the pipelines generate *learnable* synthetic tasks with
+matched shapes and an explicit non-IID knob:
+
+* ``TokenTaskGenerator`` — language-model streams from a site-specific
+  mixture of markov generators over the vocabulary.  ``heterogeneity=0``
+  gives IID sites; larger values bias each site toward its own token
+  sub-range (the LM analogue of inter-institution distribution shift).
+
+* ``DoseTaskGenerator`` — OpenKBP-like volumes: a CT-like background,
+  spherical PTV + OAR masks, and a dose field computed as an analytic
+  function of the geometry (so the mapping is learnable).  Site
+  heterogeneity shifts organ geometry statistics per site.
+
+* ``SegTaskGenerator``  — BraTS/PanSeg-like: multi-channel volumes with
+  blob-shaped foreground classes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Token streams (for the 10 assigned LLM-family architectures)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TokenTaskGenerator:
+    vocab_size: int
+    num_sites: int
+    heterogeneity: float = 0.0          # 0 = IID
+    num_codebooks: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # each site draws from a site-biased unigram prior + shared bigram rule
+        self.site_offsets = rng.integers(0, self.vocab_size, self.num_sites)
+        self.mix_w = rng.normal(size=(8,))
+
+    def _site_rng(self, site: int, step: int):
+        return np.random.default_rng(
+            (self.seed * 1000003 + site * 10007 + step) % (2 ** 63))
+
+    def sample(self, site: int, step: int, batch: int, seq_len: int) -> np.ndarray:
+        """Markov-ish integer streams: t_{i+1} = f(t_i) + noise, where the
+        noise distribution is site-biased under heterogeneity."""
+        rng = self._site_rng(site, step)
+        shape = (batch, seq_len, self.num_codebooks) if self.num_codebooks > 1 \
+            else (batch, seq_len)
+        v = self.vocab_size
+        base = rng.integers(0, v, (shape[0],) + shape[2:] if len(shape) > 2 else (shape[0],))
+        toks = np.zeros(shape, dtype=np.int32)
+        cur = base
+        bias = int(self.site_offsets[site] * self.heterogeneity)
+        # narrow noise keeps the bigram task learnable (entropy ~ln(v/8));
+        # heterogeneity shifts each site's transition BIAS, not the noise
+        width = max(v // 8, 8)
+        for i in range(seq_len):
+            drift = (cur * 31 + 17) % v
+            noise = rng.integers(0, width, drift.shape)
+            cur = (drift + noise + bias) % v
+            if len(shape) > 2:
+                toks[:, i, :] = cur
+            else:
+                toks[:, i] = cur
+        return toks
+
+    def stacked_batches(self, step: int, local_steps: int, per_site_batch: int,
+                        seq_len: int) -> Dict[str, np.ndarray]:
+        """[S, K, B, L(, C)] token batches for one FL round."""
+        out = np.stack([
+            np.stack([self.sample(s, step * local_steps + k, per_site_batch, seq_len)
+                      for k in range(local_steps)])
+            for s in range(self.num_sites)])
+        return {"tokens": out}
+
+
+# ---------------------------------------------------------------------------
+# Volumetric tasks (SA-Net)
+# ---------------------------------------------------------------------------
+
+
+def _sphere_mask(shape, center, radius):
+    zz, yy, xx = np.meshgrid(*[np.arange(s) for s in shape], indexing="ij")
+    d2 = ((zz - center[0]) ** 2 + (yy - center[1]) ** 2 + (xx - center[2]) ** 2)
+    return (d2 <= radius ** 2).astype(np.float32)
+
+
+@dataclass
+class DoseTaskGenerator:
+    """OpenKBP-like: CT + PTV + OAR masks -> analytic dose field.
+
+    ``site_pools`` emulates the paper's non-IID protocol (case-count
+    imbalance over a common distribution): smaller sites resample from
+    fewer distinct cases, so Individual training on them overfits —
+    Fig 9's size-vs-accuracy effect.
+    """
+
+    volume: Tuple[int, int, int] = (32, 32, 32)
+    num_oars: int = 2
+    num_sites: int = 8
+    heterogeneity: float = 0.0
+    seed: int = 0
+    site_pools: Optional[Tuple[int, ...]] = None
+
+    @property
+    def in_channels(self) -> int:
+        return 1 + 1 + self.num_oars        # CT + PTV + OARs
+
+    def sample(self, site: int, step: int, batch: int) -> Dict[str, np.ndarray]:
+        if self.site_pools is not None:
+            step = step % max(self.site_pools[site], 1)
+        rng = np.random.default_rng(self.seed * 7919 + site * 101 + step)
+        d, h, w = self.volume
+        vol = np.zeros((batch, d, h, w, self.in_channels), np.float32)
+        dose = np.zeros((batch, d, h, w, 1), np.float32)
+        mask = np.zeros((batch, d, h, w, 1), np.float32)
+        # site-dependent geometry statistics = non-IID heterogeneity
+        shift = self.heterogeneity * (site - self.num_sites / 2) / self.num_sites
+        for b in range(batch):
+            ct = rng.normal(0.0, 0.3, (d, h, w)).astype(np.float32)
+            body = _sphere_mask((d, h, w), (d / 2, h / 2, w / 2), 0.45 * d)
+            ct = ct * body
+            # wide geometric variability: data QUANTITY must matter for the
+            # paper's size-vs-accuracy effect to be observable
+            center = np.array([d, h, w]) * (0.5 + shift + rng.uniform(-0.14, 0.14, 3))
+            r_ptv = d * rng.uniform(0.06, 0.18)
+            ptv = _sphere_mask((d, h, w), center, r_ptv)
+            oars = []
+            for k in range(self.num_oars):
+                oc = center + np.array([0, (k + 1) * r_ptv * 2.2, 0]) \
+                    * (1 if k % 2 == 0 else -1)
+                oars.append(_sphere_mask((d, h, w), oc, r_ptv * 0.8))
+            # analytic dose: prescription inside PTV, exponential falloff,
+            # OAR sparing notches — a deterministic function of the masks
+            zz, yy, xx = np.meshgrid(*[np.arange(s) for s in (d, h, w)], indexing="ij")
+            dist = np.sqrt((zz - center[0]) ** 2 + (yy - center[1]) ** 2
+                           + (xx - center[2]) ** 2)
+            field = 70.0 * np.exp(-np.maximum(dist - r_ptv, 0) / (0.15 * d))
+            for o in oars:
+                field = field * (1.0 - 0.35 * o)
+            field = field * body
+            vol[b, ..., 0] = ct
+            vol[b, ..., 1] = ptv
+            for k, o in enumerate(oars):
+                vol[b, ..., 2 + k] = o
+            dose[b, ..., 0] = field / 70.0
+            mask[b, ..., 0] = body
+        return {"volume": vol, "dose": dose, "mask": mask}
+
+    def stacked_batches(self, step: int, local_steps: int, per_site_batch: int):
+        def one(s, k):
+            return self.sample(s, step * local_steps + k, per_site_batch)
+        sites = []
+        for s in range(self.num_sites):
+            ks = [one(s, k) for k in range(local_steps)]
+            sites.append({k: np.stack([x[k] for x in ks]) for k in ks[0]})
+        return {k: np.stack([s[k] for s in sites]) for k in sites[0]}
+
+
+@dataclass
+class SegTaskGenerator:
+    """BraTS/PanSeg-like: channels -> voxel labels (blob classes).
+
+    ``site_pools`` limits how many distinct cases a site owns (the paper's
+    non-IID protocol is case-COUNT imbalance over an otherwise common
+    distribution): smaller sites recycle a smaller pool.
+    """
+
+    volume: Tuple[int, int, int] = (32, 32, 32)
+    in_channels: int = 4
+    num_classes: int = 4
+    num_sites: int = 8
+    heterogeneity: float = 0.0
+    seed: int = 0
+    site_pools: Optional[Tuple[int, ...]] = None
+
+    def sample(self, site: int, step: int, batch: int) -> Dict[str, np.ndarray]:
+        if self.site_pools is not None:
+            step = step % max(self.site_pools[site], 1)
+        rng = np.random.default_rng(self.seed * 104729 + site * 211 + step)
+        d, h, w = self.volume
+        vol = np.zeros((batch, d, h, w, self.in_channels), np.float32)
+        labels = np.zeros((batch, d, h, w), np.int32)
+        shift = self.heterogeneity * (site - self.num_sites / 2) / self.num_sites
+        for b in range(batch):
+            lab = np.zeros((d, h, w), np.int32)
+            for c in range(1, self.num_classes):
+                center = np.array([d, h, w]) * (0.5 + shift + rng.uniform(-0.15, 0.15, 3))
+                r = d * rng.uniform(0.10, 0.20) / c
+                lab = np.where(_sphere_mask((d, h, w), center, r) > 0, c, lab)
+            base = rng.normal(0, 0.15, (d, h, w, self.in_channels)).astype(np.float32)
+            for ch in range(self.in_channels):
+                base[..., ch] += lab * (0.5 + 0.25 * ch)   # strong class signal
+            vol[b] = base
+            labels[b] = lab
+        return {"volume": vol, "labels": labels}
+
+    def stacked_batches(self, step: int, local_steps: int, per_site_batch: int):
+        sites = []
+        for s in range(self.num_sites):
+            ks = [self.sample(s, step * local_steps + k, per_site_batch)
+                  for k in range(local_steps)]
+            sites.append({k: np.stack([x[k] for x in ks]) for k in ks[0]})
+        return {k: np.stack([s[k] for s in sites]) for k in sites[0]}

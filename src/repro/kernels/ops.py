@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode
+(the kernel body runs under the Pallas interpreter — bit-faithful to the
+TPU program structure); on a real TPU pass ``interpret=False`` (the
+default flips on backend detection).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedagg import fedagg as _fedagg
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Blocked causal GQA attention. q: [B,Hq,L,D], k/v: [B,Hkv,L,D]."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=interp)
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 128,
+               interpret: Optional[bool] = None):
+    """RWKV-6 WKV recurrence with VMEM-resident state."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _rwkv6(r, k, v, w, u, chunk=chunk, interpret=interp)
+
+
+def fedagg(stacked_params, weights, *, block_n: int = 65536,
+           interpret: Optional[bool] = None):
+    """Streaming FedAvg aggregation over a [S, N] stacked param matrix."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _fedagg(stacked_params, weights, block_n=block_n, interpret=interp)
+
+
+def fedagg_pytree(stacked_tree, weights, *, interpret: Optional[bool] = None):
+    """Eq. 1 over a site-stacked pytree: flatten → one streaming kernel pass
+    → unflatten.  Pads the flat buffer to the kernel's block multiple."""
+    leaves, treedef = jax.tree.flatten(stacked_tree)
+    s = leaves[0].shape[0]
+    flat = jnp.concatenate([x.reshape(s, -1).astype(jnp.float32) for x in leaves], axis=1)
+    n = flat.shape[1]
+    block = 65536 if n >= 65536 else n
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = fedagg(flat, weights, block_n=block, interpret=interpret)[:n]
+    res, ofs = [], 0
+    for x in leaves:
+        size = x[0].size
+        res.append(out[ofs: ofs + size].reshape(x.shape[1:]).astype(x.dtype))
+        ofs += size
+    return jax.tree.unflatten(treedef, res)
+
+
+def mamba_scan(dt, b_mat, c_mat, x, log_a, *, chunk: int = 128,
+               block_di: int = 512, interpret: Optional[bool] = None):
+    """Mamba selective scan with VMEM-resident state (see mamba_scan.py)."""
+    from repro.kernels.mamba_scan import mamba_scan as _mamba
+    interp = _default_interpret() if interpret is None else interpret
+    return _mamba(dt, b_mat, c_mat, x, log_a, chunk=chunk,
+                  block_di=block_di, interpret=interp)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D]. fp32 softmax, GQA."""
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (d ** -0.5)
+    q_pos = jnp.arange(lq) + (lk - lq)
+    k_pos = jnp.arange(lk)
+    ok = jnp.ones((lq, lk), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state=None):
+    """Exact WKV recurrence. r/k/v/w: [B, H, L, D]; u: [H, D].
+
+    out_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = w_t ⊙ S_{t-1} + k_t ⊗ v_t
+    (decay applies along the k-index of S).
+    """
+    b, h, l, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = [x.astype(jnp.float32) for x in xs]
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), state
+
+
+def fedagg_ref(stacked, weights):
+    """Weighted site aggregation: out = Σ_s w_s · x_s.  stacked: [S, N]."""
+    return jnp.tensordot(weights.astype(jnp.float32),
+                         stacked.astype(jnp.float32), axes=1).astype(stacked.dtype)
+
+
+def mamba_scan_ref(dt, b_mat, c_mat, x, log_a):
+    """Exact selective scan oracle. dt/x: [B, L, di]; b/c: [B, L, ds]."""
+    a = -jnp.exp(log_a.astype(jnp.float32))
+
+    def step(s, inp):
+        dt_t, b_t, c_t, x_t = [i.astype(jnp.float32) for i in inp]
+        dec = jnp.exp(dt_t[..., None] * a)
+        s = dec * s + (dt_t * x_t)[..., None] * b_t[..., None, :]
+        y = jnp.einsum("bis,bs->bi", s, c_t)
+        return s, y
+
+    bsz, l, di = dt.shape
+    s0 = jnp.zeros((bsz, di, log_a.shape[-1]), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, b_mat, c_mat, x))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dt.dtype), s

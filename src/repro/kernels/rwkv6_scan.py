@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+TPU adaptation of the (GPU, warp-per-head) CUDA wkv6 kernel: instead of
+per-warp shuffles, each grid cell owns one (batch, head) recurrence and
+keeps the [D, D] state resident in VMEM scratch across time-chunk grid
+steps — HBM traffic is one pass over r/k/v/w plus the output, never the
+per-step state (which is what makes the jnp ``lax.scan`` version
+memory-bound: it round-trips the state every token).
+
+  grid = (B, H, L/chunk)   — time chunks are the innermost "arbitrary"
+                             axis; state scratch persists across them
+  blocks: r/k/v/w [1, 1, chunk, D] in VMEM; out the same; u [1, D].
+
+The time loop inside a chunk is a ``fori_loop`` over VMEM-resident
+slices (D=64: one MXU-aligned [64,64] outer product per step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0].astype(jnp.float32)                     # [D]
+
+    def step(t, state):
+        r_t = r_ref[0, 0, t].astype(jnp.float32)         # [D]
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]                 # [D, D]
+        out = ((state + u[:, None] * kv) * r_t[:, None]).sum(axis=0)
+        o_ref[0, 0, t] = out.astype(o_ref.dtype)
+        return w_t[:, None] * state + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 128, interpret: bool = True):
+    """r/k/v/w: [B, H, L, D]; u: [H, D] -> out [B, H, L, D].
+
+    Returns the WKV outputs (final state write-back variant lives in
+    ``ops.rwkv6_scan_with_state`` for decode hand-off).
+    """
+    b, h, l, d = r.shape
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    grid = (b, h, l // chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, d), lambda b_, h_, c: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, l, d), r.dtype),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,287 @@
+"""While-loop-aware analysis of compiled (SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 59 layers contributes a single layer of FLOPs
+(verified empirically: scan vs unrolled differ by exactly the trip
+count).  Since the layer stack, microbatch accumulation, KV-chunked
+attention and the recurrent mixers are all scans, naive cost analysis
+underestimates compute/traffic by 1–2 orders of magnitude.
+
+This module parses the optimized HLO text instead:
+
+  * splits the module into named computations,
+  * extracts ``known_trip_count`` from every ``while`` instruction and
+    propagates execution-count multipliers through the call graph
+    (while bodies/conditions, fusions, and other ``calls=``),
+  * counts per-instruction costs × execution count:
+      - FLOPs: ``dot`` (2·prod(result)·prod(contracting)) and
+        ``convolution`` (2·prod(result)·prod(kernel window)·Cin/groups)
+      - bytes: result + operand bytes of top-level (non-fused-interior)
+        instructions — fusion interiors stay in registers/VMEM
+      - collective bytes by kind (all-gather / all-reduce /
+        reduce-scatter / all-to-all / collective-permute)
+
+The result feeds EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\s*\{\\?"n\\?":\\?"(\d+)')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops whose "operands+result" don't represent real HBM traffic
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "custom-call"}
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of a (possibly tuple) shape string like 'f32[8,16]' or
+    '(s32[], f32[4])'."""
+    total = 0.0
+    for ty, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(ty, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[List[int], str]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], "f32"
+    ty, dims = m.group(1), m.group(2)
+    return [int(d) for d in dims.split(",") if d], ty
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str          # result type/shape portion
+    op: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+
+
+_OP_TOKEN_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+        if (header and s.endswith("{") and "->" in s and " = " not in s
+                and not s.startswith("ROOT")):
+            cur = Computation(header.group(1))
+            comps[cur.name] = cur
+            continue
+        if s == "}" or cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # rest: "<type> <op>(...), attrs"  (type may be a tuple "(..)")
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            type_str, tail = rest[: i + 1], rest[i + 1:].strip()
+        else:
+            sp = rest.find(" ")
+            type_str, tail = rest[:sp], rest[sp + 1:]
+        om = _OP_TOKEN_RE.match(tail)
+        op = om.group(1) if om else tail.split("(")[0].strip()
+        # operands: inside the first (...) of tail
+        lp = tail.find("(")
+        depth, rp = 0, len(tail)
+        for i in range(lp, len(tail)):
+            depth += tail[i] == "("
+            depth -= tail[i] == ")"
+            if depth == 0:
+                rp = i
+                break
+        operand_str = tail[lp + 1: rp] if lp >= 0 else ""
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.instructions.append(Instruction(name, type_str, op, s, operands))
+    return comps
+
+
+def execution_counts(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Multiplier per computation: product of enclosing while trip counts."""
+    counts: Dict[str, float] = {}
+
+    def visit(cname: str, mult: float):
+        if cname not in comps:
+            return
+        counts[cname] = counts.get(cname, 0.0) + mult
+        for ins in comps[cname].instructions:
+            trip = 1.0
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            callees = _CALLS_RE.findall(ins.line)
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                callees += _OPERAND_RE.findall(bm.group(1)) or [
+                    c.strip().lstrip("%") for c in bm.group(1).split(",")]
+            for callee in callees:
+                child_mult = mult * (trip if ins.op == "while" else 1.0)
+                visit(callee, child_mult)
+
+    visit(entry, 1.0)
+    return counts
+
+
+def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    res_dims, _ = _shape_dims(ins.type_str)
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not cm or not ins.operands:
+        return 2.0 * n_res          # degenerate
+    lhs_shape = shapes.get(ins.operands[0], "")
+    lhs_dims, _ = _shape_dims(lhs_shape)
+    contract = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    res_dims, _ = _shape_dims(ins.type_str)
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    wm = re.search(r"window=\{size=([\dx]+)", ins.line)
+    win = 1
+    if wm:
+        for d in wm.group(1).split("x"):
+            win *= int(d)
+    # input feature count from rhs (kernel) shape: last-but-one conventional
+    cin = 1
+    if len(ins.operands) >= 2:
+        k_dims, _ = _shape_dims(shapes.get(ins.operands[1], ""))
+        if k_dims:
+            cin = max(k_dims[-2] if len(k_dims) >= 2 else 1, 1)
+    fm = re.search(r"feature_group_count=(\d+)", ins.line)
+    groups = int(fm.group(1)) if fm else 1
+    return 2.0 * n_res * win * cin / max(groups, 1)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: float = 0.0
+    dot_count: float = 0.0
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo: str) -> HloCosts:
+    comps = parse_module(hlo)
+    entry = None
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if em:
+        entry = em.group(1)
+    else:  # fall back to last computation
+        entry = list(comps)[-1]
+    counts = execution_counts(comps, entry)
+
+    # global symbol table name -> type_str (names unique per module in
+    # practice; collisions only risk tiny flop misattribution)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instructions:
+            shapes[ins.name] = ins.type_str
+
+    # fusion-interior computations: bytes counted at the fusion call site
+    interior = set()
+    slicing_fusions = set()          # fusions that read a slice of operands
+    inplace_fusions = set()          # fusions that update a slice in place
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.op == "fusion":
+                for callee in _CALLS_RE.findall(ins.line):
+                    interior.add(callee)
+                    callee_ops = {i.op for i in comps.get(callee, Computation("")).instructions}
+                    if callee_ops & {"dynamic-slice", "gather", "slice"}:
+                        slicing_fusions.add(ins.name)
+                    if "dynamic-update-slice" in callee_ops or "scatter" in callee_ops:
+                        inplace_fusions.add(ins.name)
+
+    out = HloCosts(collective_bytes={k: 0.0 for k in COLLECTIVE_KINDS})
+    for cname, comp in comps.items():
+        mult = counts.get(cname, 0.0)
+        if mult == 0.0:
+            continue
+        for ins in comp.instructions:
+            if ins.op == "dot":
+                out.flops += mult * _dot_flops(ins, shapes)
+                out.dot_count += mult
+            elif ins.op == "convolution":
+                out.flops += mult * _conv_flops(ins, shapes)
+            for kind in COLLECTIVE_KINDS:
+                if ins.op == kind or ins.op.startswith(kind + "-start"):
+                    out.collective_bytes[kind] += mult * _shape_bytes(ins.type_str)
+                    out.collective_count += mult
+            if cname not in interior and ins.op not in _FREE_OPS \
+                    and not ins.op.endswith("-done"):
+                res_b = _shape_bytes(ins.type_str)
+                if ins.op == "dynamic-update-slice" or ins.name in inplace_fusions:
+                    # aliased in-place update: traffic = the small update
+                    # operands (write + read-modify), not the whole buffer
+                    small = sum(_shape_bytes(shapes[o]) for o in ins.operands[1:]
+                                if o in shapes and _shape_bytes(shapes[o]) < res_b)
+                    out.bytes += mult * 2 * small
+                    continue
+                b = res_b
+                for opnd in ins.operands:
+                    if opnd in shapes:
+                        ob = _shape_bytes(shapes[opnd])
+                        # slicing fusions (scan reading one layer's params)
+                        # touch ~result-sized slices, not the whole operand
+                        if ins.name in slicing_fusions:
+                            ob = min(ob, res_b)
+                        b += ob
+                out.bytes += mult * b
+    return out

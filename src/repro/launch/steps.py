@@ -1,0 +1,243 @@
+"""Per-(architecture × input-shape) step builders for dry-run / launch.
+
+Produces, for any assigned arch and workload shape:
+
+  * ``abstract_state()``  — ShapeDtypeStruct pytrees for every input
+    (params, optimizer state, batches, caches) — no allocation
+  * ``step_fn``           — the jit-able function:
+        train_4k              -> one federated round (local step + exchange)
+        prefill_32k           -> serve_prefill (batched logits + caches)
+        decode_32k/long_500k  -> serve_decode (ONE token against the cache)
+  * ``in_shardings`` / ``out_shardings`` on the FL mesh
+
+The federated train step is the *paper-faithful* path: site-stacked
+params, per-site local training, strategy exchange (FedAvg default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (FederationConfig, InputShape, JobConfig,
+                                MeshConfig, ModelConfig, PrecisionConfig,
+                                INPUT_SHAPES)
+from repro.configs.registry import get_arch
+from repro.core import federation as F
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as sh
+from repro.models import shardhints
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    name: str
+    mesh: Any                      # jax Mesh (FL view)
+    step_fn: Callable
+    abstract_inputs: tuple         # positional ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Train (federated round)
+# ---------------------------------------------------------------------------
+
+# per-arch microbatch (per site) chosen so remat activations fit 16 GiB
+# HBM (v5e); derivation + iterations recorded in EXPERIMENTS.md §Perf
+TRAIN_MICROBATCH = {
+    "deepseek-v2-236b": 4,
+    "jamba-1.5-large-398b": 2,
+    "chameleon-34b": 4,
+    "qwen3-moe-30b-a3b": 4,
+    "qwen3-8b": 4,
+    "rwkv6-7b": 8,
+    "granite-3-2b": 8,
+    "gemma3-1b": 8,
+    "smollm-135m": 8,
+    "musicgen-medium": 8,
+}
+
+
+def build_train(arch_id: str, shape_name: str = "train_4k",
+                multi_pod: bool = False, strategy: str = "fedavg",
+                local_steps: int = 1, moe_impl: str = "dispatch",
+                fsdp_params: bool = True, override_mesh: Optional[MeshConfig] = None,
+                hierarchical: bool = True,
+                microbatch: Optional[int] = None,
+                hints: bool = True) -> StepArtifacts:
+    arch = get_arch(arch_id)
+    cfg: ModelConfig = arch.CONFIG
+    shape: InputShape = INPUT_SHAPES[shape_name]
+    mesh_cfg: MeshConfig = override_mesh or arch.mesh_for(shape, multi_pod)
+    prec: PrecisionConfig = arch.precision_for(shape)
+    mesh = mesh_lib.make_fl_mesh(mesh_cfg)
+
+    s_total = mesh_cfg.total_sites
+    per_site_batch = max(shape.global_batch // s_total, 1)
+    if microbatch is None:
+        microbatch = TRAIN_MICROBATCH.get(cfg.name)
+    pdt = _dtype(prec.param_dtype)
+    sdt = _dtype(prec.opt_state_dtype)
+
+    fed = FederationConfig(num_sites=s_total, strategy=strategy,
+                           local_steps=local_steps)
+    opt = adamw(1e-4, weight_decay=0.01, state_dtype=sdt)
+
+    def loss_fn(params, batch):
+        return T.next_token_loss(params, batch, cfg, remat=True, moe_impl=moe_impl)
+
+    ctx = F.FLContext(
+        fed=fed, mesh=mesh_cfg, case_weights=jnp.asarray(fed.case_weights()),
+        loss_fn=loss_fn, logits_fn=None, optimizer=opt, grad_clip=1.0,
+        dcml_lr=1e-4, hierarchical=hierarchical, microbatch=microbatch,
+        accum_dtype=(jnp.bfloat16 if prec.opt_state_dtype == "bfloat16"
+                     else jnp.float32))
+
+    fl_round = F.build_fl_round(ctx)
+
+    def init_params(key):
+        return T.init(key, cfg, dtype=pdt)
+
+    def abstract_state():
+        params = jax.eval_shape(
+            lambda k: F.init_fl_state(ctx, init_params, k), jax.random.PRNGKey(0))
+        return params
+
+    fl_state_abs = abstract_state()
+    tok_shape = (s_total, local_steps, per_site_batch, shape.seq_len)
+    if cfg.num_codebooks > 1:
+        tok_shape = tok_shape + (cfg.num_codebooks,)
+    batches_abs = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    round_inputs_abs = {
+        "active": jax.ShapeDtypeStruct((s_total,), jnp.bool_),
+        "partner": jax.ShapeDtypeStruct((s_total,), jnp.int32),
+        "is_receiver": jax.ShapeDtypeStruct((s_total,), jnp.bool_),
+    }
+
+    # shardings
+    def state_shardings(state_abs):
+        out = {}
+        out["params"] = sh.param_shardings(mesh, state_abs["params"], stacked_site=True)
+        out["opt"] = {
+            "step": NamedSharding(mesh, P(mesh_lib.site_axes(mesh_cfg)
+                                          if s_total > 1 else None)),
+            "mu": sh.param_shardings(mesh, state_abs["opt"]["mu"], stacked_site=True),
+            "nu": sh.param_shardings(mesh, state_abs["opt"]["nu"], stacked_site=True),
+        }
+        out["strategy"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), state_abs["strategy"],
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        if state_abs["strategy"]:
+            # fedprox global model: unstacked params — shard like params sans site
+            out["strategy"] = {"global": sh.param_shardings(
+                mesh, state_abs["strategy"]["global"], stacked_site=False)}
+        out["round"] = NamedSharding(mesh, P())
+        return out
+
+    st_sh = state_shardings(fl_state_abs)
+    site_ax = mesh_lib.site_axes(mesh_cfg)
+    site_ax = site_ax if len(site_ax) > 1 else site_ax[0]
+    bt_sh = {"tokens": NamedSharding(
+        mesh, sh.batch_spec_train(mesh, len(tok_shape)))}
+    ri_sh = {k: NamedSharding(mesh, P()) for k in round_inputs_abs}
+
+    def step_fn(fl_state, batches, round_inputs):
+        import contextlib
+        hctx = (shardhints.enable(model_axis=mesh_cfg.model_parallel)
+                if hints else contextlib.nullcontext())
+        with hctx:
+            new_state, metrics = fl_round(fl_state, batches, round_inputs)
+        return new_state, jax.tree.map(jnp.mean, metrics)
+
+    return StepArtifacts(
+        name=f"{arch_id}:{shape_name}:{'2pod' if multi_pod else '1pod'}",
+        mesh=mesh, step_fn=step_fn,
+        abstract_inputs=(fl_state_abs, batches_abs, round_inputs_abs),
+        in_shardings=(st_sh, bt_sh, ri_sh),
+        out_shardings=(st_sh, None),
+        notes=f"sites={s_total} per_site_batch={per_site_batch} "
+              f"micro={microbatch} strategy={strategy}")
+
+
+# ---------------------------------------------------------------------------
+# Serve (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def build_serve(arch_id: str, shape_name: str, multi_pod: bool = False,
+                moe_impl: str = "dispatch") -> StepArtifacts:
+    arch = get_arch(arch_id)
+    cfg: ModelConfig = arch.CONFIG
+    shape: InputShape = INPUT_SHAPES[shape_name]
+    mesh_cfg: MeshConfig = arch.mesh_for(shape, multi_pod)
+    prec: PrecisionConfig = arch.precision_for(shape)
+    mesh = mesh_lib.make_fl_mesh(mesh_cfg)
+    pdt = _dtype(prec.param_dtype)
+
+    params_abs = jax.eval_shape(lambda k: T.init(k, cfg, dtype=pdt),
+                                jax.random.PRNGKey(0))
+    p_sh = sh.param_shardings(mesh, params_abs, stacked_site=False)
+    b = shape.global_batch
+
+    if shape.kind == "prefill":
+        tok_shape = (b, shape.seq_len) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ())
+        toks_abs = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+        t_sh = NamedSharding(mesh, sh.batch_spec_serve(mesh, tok_shape))
+
+        def step_fn(params, tokens):
+            with shardhints.enable(model_axis=mesh_cfg.model_parallel):
+                logits, caches = T.prefill(params, tokens, cfg,
+                                           cache_capacity=shape.seq_len,
+                                           moe_impl=moe_impl)
+            return logits, caches
+
+        caches_abs = jax.eval_shape(
+            lambda: T.init_caches(b, shape.seq_len, cfg, dtype=jnp.bfloat16))
+        c_sh = sh.cache_shardings(mesh, caches_abs, b)
+        return StepArtifacts(
+            name=f"{arch_id}:{shape_name}:{'2pod' if multi_pod else '1pod'}",
+            mesh=mesh, step_fn=step_fn,
+            abstract_inputs=(params_abs, toks_abs),
+            in_shardings=(p_sh, t_sh),
+            out_shardings=(None, c_sh),
+            notes=f"prefill batch={b} seq={shape.seq_len}")
+
+    # decode: ONE new token against a seq_len cache
+    tok_shape = (b, 1) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ())
+    toks_abs = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    caches_abs = jax.eval_shape(
+        lambda: T.init_caches(b, shape.seq_len, cfg, dtype=jnp.bfloat16))
+    c_sh = sh.cache_shardings(mesh, caches_abs, b)
+    t_sh = NamedSharding(mesh, sh.batch_spec_serve(mesh, tok_shape))
+
+    def step_fn(params, tokens, caches):
+        with shardhints.enable(model_axis=mesh_cfg.model_parallel):
+            return T.decode_step(params, tokens, caches, cfg, moe_impl=moe_impl)
+
+    return StepArtifacts(
+        name=f"{arch_id}:{shape_name}:{'2pod' if multi_pod else '1pod'}",
+        mesh=mesh, step_fn=step_fn,
+        abstract_inputs=(params_abs, toks_abs, caches_abs),
+        in_shardings=(p_sh, t_sh, c_sh),
+        out_shardings=(None, c_sh),
+        notes=f"decode batch={b} cache={shape.seq_len}")
+
+
+def build(arch_id: str, shape_name: str, multi_pod: bool = False, **kw) -> StepArtifacts:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train(arch_id, shape_name, multi_pod, **kw)
+    return build_serve(arch_id, shape_name, multi_pod)

@@ -1,0 +1,345 @@
+"""Attention mixers: GQA (with qk-norm / sliding window) and DeepSeek-V2 MLA.
+
+Two entry modes per mixer:
+  * ``*_apply``  — full-sequence (training / prefill). Returns output and,
+    if ``return_cache``, the KV cache for subsequent decode.
+  * ``*_decode`` — one new token against an existing cache (serve_decode).
+
+The cache layout is a dict of arrays with a static ``length`` capacity and a
+dynamic ``index`` scalar, so decode steps lower to in-place dynamic-update
+slices (no reallocation) and shard cleanly over the mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import shardhints
+from repro.models.layers import apply_rope, dense_init, l2norm
+
+NEG_INF = -1e30
+
+# full-sequence attention switches to the online-softmax blockwise path at
+# this length (below it the L² reference is cheaper to compile and exact)
+BLOCKWISE_MIN_LEN = 1024
+
+
+# ---------------------------------------------------------------------------
+# Masking / softmax core
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_len: int, kv_len: int, window: Optional[int] = None):
+    """[q_len, kv_len] additive mask. Queries are the *last* q_len positions."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa_blockwise(q, k, v, causal: bool = True, window: Optional[int] = None,
+                   chunk: int = 512, scale: Optional[float] = None):
+    """Memory-bounded attention: online-softmax scan over KV chunks.
+
+    Exact (fp32 accumulators), never materializes the [Lq, Lk] score
+    matrix — peak transient is [B, Lq, H, chunk].  This is the pure-jnp
+    analogue of the Pallas flash kernel (kernels/flash_attention.py) and
+    what the full-scale training/prefill paths use.
+
+    q: [B, Lq, Hq, D]; k/v: [B, Lk, Hkv, D].
+    """
+    b, lq, hq, d = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    nchunks = lk // chunk if lk % chunk == 0 else 1
+    c = lk // nchunks
+    q32 = q.reshape(b, lq, hkv, g, d).astype(jnp.float32) * scale
+    q_pos = jnp.arange(lq) + (lk - lq)
+
+    kc = jnp.moveaxis(k.reshape(b, nchunks, c, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nchunks, c, hkv, dv), 1, 0)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kj, vj, j = xs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", q32, kj.astype(jnp.float32))
+        k_pos = j * c + jnp.arange(c)
+        ok = jnp.ones((lq, c), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, lq, hkv, g, dv), jnp.float32)
+    m0 = jnp.full((b, lq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, lq, hkv, g), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(body), (acc0, m0, l0),
+        (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, lq, hq, dv).astype(q.dtype)
+
+
+def sdpa(q, k, v, mask=None, scale: Optional[float] = None):
+    """Reference scaled-dot-product attention with GQA head broadcasting.
+
+    q: [B, Lq, Hq, D]; k/v: [B, Lk, Hkv, D(v)]. fp32 softmax.
+    """
+    b, lq, hq, d = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, lq, hkv, groups, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = logits + mask                     # mask broadcasts over [b,h,g]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, lq, hq, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.head_dim if cfg.head_dim is not None else d // hq
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype=dtype)
+    return p
+
+
+def _gqa_project(params, x, cfg: ModelConfig, positions):
+    b, l, _ = x.shape
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.head_dim if cfg.head_dim is not None else cfg.d_model // hq
+    q = (x @ params["wq"]).reshape(b, l, hq, hd)
+    k = (x @ params["wk"]).reshape(b, l, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, l, hkv, hd)
+    if cfg.qk_norm:
+        q = l2norm(q) * params["q_norm"].astype(q.dtype)
+        k = l2norm(k) * params["k_norm"].astype(k.dtype)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # seed head sharding so score contractions stay device-local
+    return (shardhints.constrain_heads(q), shardhints.constrain_heads(k),
+            shardhints.constrain_heads(v))
+
+
+def gqa_apply(params, x, cfg: ModelConfig, window: Optional[int] = None,
+              return_cache: bool = False, cache_len: Optional[int] = None):
+    """Full-sequence GQA attention (train / prefill)."""
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(l), (b, l))
+    q, k, v = _gqa_project(params, x, cfg, positions)
+    if l >= BLOCKWISE_MIN_LEN:
+        out = sdpa_blockwise(q, k, v, causal=True, window=window)
+    else:
+        out = sdpa(q, k, v, causal_mask(l, l, window))
+    y = out.reshape(b, l, -1) @ params["wo"]
+    if not return_cache:
+        return y, None
+    cap = cache_len if cache_len is not None else l
+    cache = init_gqa_cache(b, cap, cfg, dtype=k.dtype, window=window)
+    ring_cap = cache["k"].shape[1]               # == min(cap, window)
+    if l >= ring_cap:
+        # keep the trailing window, placed at each position's ring slot
+        slots = jnp.mod(jnp.arange(l - ring_cap, l), ring_cap)
+        kpad = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, -ring_cap:])
+        vpad = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, -ring_cap:])
+    else:
+        kpad = jnp.zeros_like(cache["k"]).at[:, :l].set(k)
+        vpad = jnp.zeros_like(cache["v"]).at[:, :l].set(v)
+    cache = {**cache, "k": kpad, "v": vpad, "index": jnp.full((), l, jnp.int32)}
+    return y, cache
+
+
+def init_gqa_cache(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat16,
+                   window: Optional[int] = None):
+    """Allocate an empty KV cache. Sliding-window layers allocate only the
+    window (ring buffer) — this is what makes gemma3 long_500k feasible."""
+    hkv = cfg.num_kv_heads
+    hd = cfg.head_dim if cfg.head_dim is not None else cfg.d_model // cfg.num_heads
+    cap = min(capacity, window) if window is not None else capacity
+    return {
+        "k": jnp.zeros((batch, cap, hkv, hd), dtype),
+        "v": jnp.zeros((batch, cap, hkv, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),        # absolute position count
+    }
+
+
+def gqa_decode(params, x, cache, cfg: ModelConfig, window: Optional[int] = None):
+    """One-token decode. x: [B, 1, D]; cache from ``init_gqa_cache``."""
+    b = x.shape[0]
+    idx = cache["index"]
+    positions = jnp.broadcast_to(idx[None, None], (b, 1))
+    q, k_new, v_new = _gqa_project(params, x, cfg, positions)
+    cap = cache["k"].shape[1]
+    slot = jnp.mod(idx, cap) if window is not None else idx
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # validity mask over cache slots
+    pos = jnp.arange(cap)
+    if window is not None:
+        valid = (pos <= slot) | (idx >= cap)      # ring buffer: all valid once full
+    else:
+        valid = pos <= idx
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    out = sdpa(q, k, v, mask)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = {"k": k, "v": v, "index": idx + 1}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 Multi-head Latent Attention (MLA)
+# ---------------------------------------------------------------------------
+#
+# Projections (names follow the DeepSeek-V2 paper):
+#   q:  x --(wq_a: d->q_lora)--> norm --(wq_b: q_lora -> H*(nope+rope))-->
+#   kv: x --(wkv_a: d->(kv_lora + rope))-->  latent c_kv [kv_lora] + k_rope
+#       c_kv --(wkv_b: kv_lora -> H*(nope + v))--> k_nope, v
+# The decode cache stores ONLY (c_kv, k_rope): (kv_lora + rope) per position.
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype=dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * m.qk_head_dim, dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype=dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(params, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rmsnorm_apply
+    m: MLAConfig = cfg.mla
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    cq = rmsnorm_apply({"scale": params["q_norm"]}, x @ params["wq_a"], cfg.norm_eps)
+    q = (cq @ params["wq_b"]).reshape(b, l, h, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # the concat loses head sharding without an explicit seed (EXPERIMENTS
+    # §Perf deepseek iteration 2: 32 TB/round of score all-reduces without it)
+    return shardhints.constrain_heads(jnp.concatenate([q_nope, q_rope], axis=-1))
+
+
+def _mla_kv_latent(params, x, cfg: ModelConfig, positions):
+    from repro.models.layers import rmsnorm_apply
+    m: MLAConfig = cfg.mla
+    kv = x @ params["wkv_a"]                                 # [B,L,kv_lora+rope]
+    c_kv = rmsnorm_apply({"scale": params["kv_norm"]}, kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]         # [B,L,1,rope]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_expand(params, c_kv, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    b, l, _ = c_kv.shape
+    h = cfg.num_heads
+    kv = (c_kv @ params["wkv_b"]).reshape(b, l, h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def mla_apply(params, x, cfg: ModelConfig, return_cache: bool = False,
+              cache_len: Optional[int] = None):
+    m: MLAConfig = cfg.mla
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(l), (b, l))
+    q = _mla_q(params, x, cfg, positions)                    # [B,L,H,nope+rope]
+    c_kv, k_rope = _mla_kv_latent(params, x, cfg, positions)
+    k_nope, v = _mla_expand(params, c_kv, cfg)
+    v = shardhints.constrain_heads(v)
+    k = shardhints.constrain_heads(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, l, cfg.num_heads, m.qk_rope_head_dim))],
+        axis=-1))
+    if l >= BLOCKWISE_MIN_LEN:
+        out = sdpa_blockwise(q, k, v, causal=True, scale=m.qk_head_dim ** -0.5)
+    else:
+        out = sdpa(q, k, v, causal_mask(l, l), scale=m.qk_head_dim ** -0.5)
+    y = out.reshape(b, l, -1) @ params["wo"]
+    if not return_cache:
+        return y, None
+    cap = cache_len if cache_len is not None else l
+    cache = init_mla_cache(b, cap, cfg, dtype=c_kv.dtype)
+    cache["c_kv"] = cache["c_kv"].at[:, :l].set(c_kv)
+    cache["k_rope"] = cache["k_rope"].at[:, :l].set(k_rope)
+    cache["index"] = jnp.full((), l, jnp.int32)
+    return y, cache
+
+
+def init_mla_cache(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m: MLAConfig = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache, cfg: ModelConfig):
+    """One-token MLA decode against the compressed latent cache.
+
+    Attention is computed in the *latent* space (the DeepSeek-V2 absorbed
+    formulation): q_nope is absorbed through wkv_b's k-half so scores are
+    dot-products against c_kv — the cache stays (kv_lora + rope) wide.
+    """
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    idx = cache["index"]
+    positions = jnp.broadcast_to(idx[None, None], (b, 1))
+    q = _mla_q(params, x, cfg, positions)                    # [B,1,H,nope+rope]
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    c_new, r_new = _mla_kv_latent(params, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, idx, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], r_new.astype(cache["k_rope"].dtype), (0, idx, 0))
+    # absorb q_nope through the k-half of wkv_b: [kv_lora, H, nope]
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_k, w_v = wkv_b[..., : m.qk_nope_head_dim], wkv_b[..., m.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+    scores = jnp.einsum("bqhc,bkc->bhqk", q_lat, c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores *= m.qk_head_dim ** -0.5
+    cap = cache["c_kv"].shape[1]
+    valid = jnp.arange(cap) <= idx
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkc->bqhc", probs, c_kv.astype(jnp.float32))   # latent values
+    out = jnp.einsum("bqhc,chd->bqhd", out_lat, w_v.astype(jnp.float32))
+    y = out.reshape(b, 1, -1).astype(x.dtype) @ params["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "index": idx + 1}

@@ -1,0 +1,152 @@
+"""Shared neural-net building blocks (pure-function style: init + apply).
+
+Every module is a pair of functions::
+
+    params = <name>_init(key, ...)
+    y      = <name>_apply(params, x, ...)
+
+Parameters are plain dict pytrees so they stack cleanly along the federated
+site axis (see ``repro.core.stacking``) and shard with simple
+``PartitionSpec`` rules.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init for a [d_in, d_out] kernel."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    """RMS layer norm; statistics in fp32 regardless of input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def l2norm(x, eps: float = 1e-6):
+    """Per-head L2 normalization used by qk-norm variants (Qwen3/Gemma3)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for rotary embedding (half-dim)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Apply rotary embedding.
+
+    x: [..., L, H, D] (D even), positions: broadcastable to [..., L].
+    Uses the interleaved-pairs convention in fp32 then casts back.
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                        # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., L, D/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]                               # [..., L, 1, D/2]
+    cos = cos[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int, dtype=jnp.float32):
+    """Classic transformer sinusoidal table (MusicGen-style)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    table = jnp.zeros((length, d_model), dtype=jnp.float32)
+    table = table.at[:, 0::2].set(jnp.sin(ang))
+    table = table.at[:, 1::2].set(jnp.cos(ang))
+    return table.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward networks
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str = "swiglu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params, x, activation: str = "swiglu"):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = _act(activation)(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Token shift (RWKV)
+# ---------------------------------------------------------------------------
+
+
+def token_shift(x, last: Optional[jnp.ndarray] = None):
+    """Shift the sequence right by one: y[t] = x[t-1]; y[0] = last or 0.
+
+    x: [B, L, D]. ``last`` is the final token of the previous chunk
+    ([B, D]) when running chunked/stateful decode.
+    """
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)

@@ -1,0 +1,162 @@
+"""Mamba (S6) selective-scan mixer, used by Jamba's non-attention layers.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t        (per channel)
+    y_t = C_t . h_t + D * x_t
+
+State: [B, d_inner, d_state].  Same nested-chunked-scan memory strategy as
+rwkv6 (outer scan over chunks with checkpointing, exact inner scan).
+Decode is a single recurrence step with a rolling conv window.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.models.layers import dense_init
+
+
+def _dims(cfg: ModelConfig):
+    m: MambaConfig = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank if m.dt_rank is not None else math.ceil(cfg.d_model / 16)
+    return m, d_inner, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m, d_inner, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (d_inner, m.d_state))
+    return {
+        "w_in": dense_init(ks[0], cfg.d_model, 2 * d_inner, dtype),      # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_bcdt": dense_init(ks[2], d_inner, 2 * m.d_state + dt_rank, dtype),
+        "w_dt": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": (jax.random.uniform(ks[4], (d_inner,), minval=-4.6, maxval=-2.3)).astype(dtype),
+        "log_a": jnp.log(a_init),                                        # fp32
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[5], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _conv1d(x, w, b, last_window: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [B,L,C]; w: [K,C]. ``last_window`` is the
+    trailing K-1 inputs of the previous segment for stateful decode."""
+    k = w.shape[0]
+    if last_window is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = last_window
+    xp = jnp.concatenate([pad, x], axis=1)                               # [B, L+K-1, C]
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_inputs(params, x, cfg: ModelConfig):
+    """Project to per-token SSM inputs (dt, B, C). x: [B,L,d_inner].
+
+    The discretized decay/drive tensors ([.., d_inner, d_state]) are NOT
+    materialized here — they are 16x larger than the projections and are
+    formed chunk-by-chunk inside ``selective_scan`` (peak transient one
+    chunk instead of the whole sequence).
+    """
+    m, d_inner, dt_rank = _dims(cfg)
+    bcdt = x @ params["w_bcdt"]
+    b_mat = bcdt[..., : m.d_state]
+    c_mat = bcdt[..., m.d_state: 2 * m.d_state]
+    dt = jax.nn.softplus(bcdt[..., 2 * m.d_state:] @ params["w_dt"]
+                         + params["dt_bias"].astype(x.dtype))            # [B,L,d_inner]
+    return dt, b_mat, c_mat
+
+
+def discretize(dt, b_mat, x, log_a):
+    """(decay, drive) for a token block. dt/x: [..., di]; b_mat: [..., ds]."""
+    a = -jnp.exp(log_a)                                                  # [di, ds]
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    drive = (dt.astype(jnp.float32) * x.astype(jnp.float32))[..., None] \
+        * b_mat.astype(jnp.float32)[..., None, :]
+    return decay, drive
+
+
+def selective_scan(dt, b_mat, c_mat, x, log_a, state=None, chunk: int = 128):
+    """Exact selective scan with chunked checkpointing.
+
+    dt/x: [B, L, d_inner]; b_mat/c_mat: [B, L, d_state].
+    Returns (y [B, L, d_inner], final_state [B, d_inner, d_state]).
+    """
+    b, l, di = dt.shape
+    ds = b_mat.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, di, ds), jnp.float32)
+    c = min(chunk, l)
+    if l % c:
+        c = l
+    nchunks = l // c
+
+    def chunk_body(st, xs):
+        dtc, bc, cc, xc = xs                                            # [c, B, ...]
+        def step(s, inp):
+            dt_t, b_t, c_t, x_t = inp
+            dec, drv = discretize(dt_t, b_t, x_t, log_a)
+            s = dec * s + drv
+            y = jnp.einsum("bis,bs->bi", s, c_t.astype(jnp.float32))
+            return s, y
+        st, ys = jax.lax.scan(step, st, (dtc, bc, cc, xc))
+        return st, ys
+
+    chunk_body = jax.checkpoint(chunk_body)
+    swap = lambda t: jnp.moveaxis(t.reshape((b, nchunks, c) + t.shape[2:]), 0, 2)
+    xs = (swap(dt), swap(b_mat), swap(c_mat), swap(x))                  # [nc, c, B, ...]
+    state, ys = jax.lax.scan(chunk_body, state, xs)                     # [nc, c, B, di]
+    y = jnp.moveaxis(ys, 2, 0).reshape(b, l, di)
+    return y, state
+
+
+def mamba_apply(params, x, cfg: ModelConfig, return_cache: bool = False):
+    m, d_inner, _ = _dims(cfg)
+    b, l, _ = x.shape
+    xz = x @ params["w_in"]
+    xin, z = xz[..., :d_inner], xz[..., d_inner:]
+    xc = jax.nn.silu(_conv1d(xin, params["conv_w"], params["conv_b"]))
+    dt, b_mat, c_mat = _ssm_inputs(params, xc, cfg)
+    y, state = selective_scan(dt, b_mat, c_mat, xc, params["log_a"],
+                              chunk=m.chunk_size)
+    y = y.astype(x.dtype) + params["d_skip"].astype(x.dtype) * xc
+    y = (y * jax.nn.silu(z)) @ params["w_out"]
+    if not return_cache:
+        return y, None
+    window = xin[:, -(m.d_conv - 1):] if l >= m.d_conv - 1 else \
+        jnp.concatenate([jnp.zeros((b, m.d_conv - 1 - l, d_inner), xin.dtype), xin], axis=1)
+    return y, {"state": state, "conv_window": window, "index": jnp.full((), l, jnp.int32)}
+
+
+def init_mamba_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    m, d_inner, _ = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, d_inner, m.d_state), jnp.float32),
+        "conv_window": jnp.zeros((batch, m.d_conv - 1, d_inner), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_decode(params, x, cache, cfg: ModelConfig):
+    """One-token decode: O(1) state + rolling conv window."""
+    m, d_inner, _ = _dims(cfg)
+    b = x.shape[0]
+    xz = x @ params["w_in"]
+    xin, z = xz[..., :d_inner], xz[..., d_inner:]
+    xc = jax.nn.silu(_conv1d(xin, params["conv_w"], params["conv_b"],
+                             last_window=cache["conv_window"]))
+    dt, b_mat, c_mat = _ssm_inputs(params, xc, cfg)
+    decay, drive = discretize(dt, b_mat, xc, params["log_a"])
+    s = decay[:, 0] * cache["state"] + drive[:, 0]
+    y = jnp.einsum("bis,bs->bi", s, c_mat[:, 0].astype(jnp.float32))[:, None, :]
+    y = y.astype(x.dtype) + params["d_skip"].astype(x.dtype) * xc
+    y = (y * jax.nn.silu(z)) @ params["w_out"]
+    window = jnp.concatenate([cache["conv_window"][:, 1:], xin], axis=1)
+    return y, {"state": s, "conv_window": window, "index": cache["index"] + 1}

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 / Qwen3-MoE / Jamba style).
+
+Dense-einsum formulation: every token computes a routing distribution, the
+top-k experts are selected, and expert FFNs are evaluated as a single
+[E, d_model, d_expert] batched einsum with a [tokens, E] dispatch/combine
+weight matrix.  On TPU this lowers to MXU-friendly batched matmuls and —
+when the expert dimension is sharded over the "model" axis — to the
+all-to-all-free expert-parallel pattern (each device computes all tokens for
+its expert shard and the combine is a reduce over the expert axis).
+
+The router's load-balance auxiliary loss (Switch-style, as used by all three
+assigned MoE archs) is returned for the trainer to add; it is computed
+per-site in federated training (see DESIGN.md §5: under non-IID data each
+site balances its *own* token distribution — the global balance emerges via
+FedAvg on router weights).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    e, de = cfg.num_experts, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], d_model, e, dtype=jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, de)) * (d_model ** -0.5)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, de)) * (d_model ** -0.5)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, de, d_model)) * (de ** -0.5)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        ds = cfg.d_shared_total
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d_model, ds, dtype),
+            "w_up": dense_init(ks[5], d_model, ds, dtype),
+            "w_down": dense_init(ks[6], ds, d_model, dtype),
+        }
+    return p
+
+
+def router_probs(params, x, cfg: MoEConfig) -> jnp.ndarray:
+    """[.., L, E] softmax routing probabilities (fp32)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def topk_dispatch(probs: jnp.ndarray, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k combine weights as a dense [.., E] matrix plus the aux loss.
+
+    Returns (combine[.., E], aux_loss scalar).
+    """
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)          # [.., k]
+    if cfg.normalize_router_weights:
+        top_vals = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-9)
+    onehot = jax.nn.one_hot(top_idx, cfg.num_experts, dtype=probs.dtype)  # [..,k,E]
+    combine = jnp.einsum("...k,...ke->...e", top_vals, onehot)
+    # Switch-style load balance: E * sum_e( mean_frac_tokens_e * mean_prob_e )
+    tokens_per_expert = jnp.mean(jnp.sum(onehot, axis=-2), axis=tuple(range(onehot.ndim - 2)))
+    mean_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = cfg.num_experts * jnp.sum(tokens_per_expert * mean_prob)
+    return combine, aux
+
+
+def moe_apply(params, x, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, L, D] -> (y: [B, L, D], aux_loss scalar).
+
+    Dense dispatch: compute all experts' contributions weighted by the
+    combine matrix.  FLOP-exact for dry-run cost analysis of the *dense
+    compute* formulation; the Pallas/production path can swap in gathered
+    dispatch without changing semantics (combine weights are identical).
+    """
+    combine, aux = topk_dispatch(router_probs(params, x, cfg), cfg)   # [B,L,E]
+    h = jax.nn.silu(jnp.einsum("bld,edf->belf", x, params["w_gate"]))
+    h = h * jnp.einsum("bld,edf->belf", x, params["w_up"])
+    y = jnp.einsum("belf,efd,ble->bld", h, params["w_down"],
+                   combine.astype(x.dtype))
+    if cfg.num_shared_experts:
+        s = params["shared"]
+        y = y + (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+    return y, aux
+
+
+def moe_apply_dispatch(params, x, cfg: MoEConfig, capacity_factor: float = 1.25,
+                       group_size: int = 2048) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard/Switch-style grouped capacity dispatch — the production path.
+
+    Tokens are split into groups of ``group_size``; within each group a
+    token is routed to per-expert buffers of capacity
+    ``C = ceil(group_size * top_k / E * capacity_factor)`` (overflow
+    drops, standard semantics).  Expert FFNs run as [G, E, C, D] x
+    [E, D, F] batched matmuls.  Grouping bounds the dispatch/combine
+    tensors at ~tokens * top_k * capacity_factor elements regardless of
+    sequence length — without it a 32k-prefill's dispatch matrix is
+    petabyte-scale.  With the expert axis sharded over "model" the
+    group-to-expert resharding lowers to the expert-parallel all-to-all.
+    Active-expert FLOPs only.
+    """
+    b, l, d = x.shape
+    tokens = b * l
+    s = min(group_size, tokens)
+    if tokens % s:
+        s = tokens                      # ragged: fall back to one group
+    g = tokens // s
+    xt = x.reshape(g, s, d)
+    probs = router_probs(params, xt, cfg)                              # [G,S,E]
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)                # [G,S,k]
+    if cfg.normalize_router_weights:
+        top_vals = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-9)
+    onehot = jax.nn.one_hot(top_idx, cfg.num_experts, dtype=jnp.float32)  # [G,S,k,E]
+    # aux loss (Switch): E * sum_e mean_tokens_e * mean_prob_e
+    tokens_per_expert = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(tokens_per_expert * mean_prob)
+
+    cap = int(max(4, s * cfg.top_k / cfg.num_experts * capacity_factor))
+    cap = min(cap, s)
+    # accumulate dispatch/combine one top-k slot at a time so the peak
+    # temporary is a single [G, S, E, C] buffer (sharded over E)
+    dispatch = jnp.zeros((g, s, cfg.num_experts, cap), x.dtype)
+    combine = jnp.zeros((g, s, cfg.num_experts, cap), x.dtype)
+    count = jnp.zeros((g, cfg.num_experts), jnp.float32)
+    for j in range(cfg.top_k):
+        assign = onehot[:, :, j, :]                                    # [G,S,E]
+        pos = jnp.cumsum(assign, axis=1) * assign - 1.0 + count[:, None, :] * assign
+        keep = (pos >= 0) & (pos < cap) & (assign > 0)
+        d_j = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype) \
+            * keep.astype(x.dtype)[..., None]                          # [G,S,E,C]
+        dispatch = dispatch + d_j
+        combine = combine + top_vals[:, :, j, None, None].astype(x.dtype) * d_j
+        count = count + jnp.sum(assign, axis=1)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt)                    # [G,E,C,D]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])             # [G,E,C,D]
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye).reshape(b, l, d)
+    if cfg.num_shared_experts:
+        sh = params["shared"]
+        y = y + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    return y, aux
+
+
+def moe_apply_sparse(params, x, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-gather (active-expert-only) formulation.
+
+    Evaluates only the k selected experts per token via gathered parameter
+    matmuls — O(k/E) of the dense-einsum FLOPs.  This is the
+    *beyond-paper* optimized path used after the faithful baseline is
+    recorded (see EXPERIMENTS.md §Perf): XLA lowers the gather over the
+    expert-sharded weights to an all-to-all on the "model" axis.
+    """
+    probs = router_probs(params, x, cfg)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)               # [B,L,k]
+    if cfg.normalize_router_weights:
+        top_vals = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-9)
+    onehot = jax.nn.one_hot(top_idx, cfg.num_experts, dtype=probs.dtype)
+    tokens_per_expert = jnp.mean(jnp.sum(onehot, axis=-2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(tokens_per_expert * mean_prob)
+
+    wg = params["w_gate"][top_idx]                                    # [B,L,k,D,F]
+    wu = params["w_up"][top_idx]
+    wd = params["w_down"][top_idx]                                    # [B,L,k,F,D]
+    h = jax.nn.silu(jnp.einsum("bld,blkdf->blkf", x, wg))
+    h = h * jnp.einsum("bld,blkdf->blkf", x, wu)
+    y = jnp.einsum("blkf,blkfd,blk->bld", h, wd, top_vals.astype(x.dtype))
+    if cfg.num_shared_experts:
+        s = params["shared"]
+        y = y + (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+    return y, aux

@@ -1,0 +1,205 @@
+"""RWKV-6 "Finch" mixer (arXiv:2404.05892): data-dependent decay linear
+recurrence, plus the RWKV channel-mix FFN.
+
+State per head: S in R^[hd, hd] with per-channel (k-dim) decay
+
+    out_t[j] = sum_i r_t[i] * ( S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j] )
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+Training/prefill runs a memory-bounded *nested* scan: an outer
+``lax.scan`` over chunks carrying only the [B,H,hd,hd] state (with
+``jax.checkpoint`` on the chunk body so the backward pass recomputes
+intra-chunk activations instead of storing L copies of S), and an exact
+inner scan over the chunk.  Decode is the single-step recurrence.  The
+Pallas kernel (``repro.kernels.rwkv6_scan``) implements the chunked
+matmul formulation for the MXU; this module is the semantic reference the
+kernel is validated against.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, Rwkv6Config
+from repro.models.layers import dense_init, token_shift
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    r: Rwkv6Config = cfg.rwkv
+    d = cfg.d_model
+    h = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # static token-shift interpolators (per channel, per branch)
+        "mu_base": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        "mu_x": (jax.random.uniform(ks[1], (d,)) * 0.5).astype(dtype),
+        # data-dependent token-shift LoRA: d -> 5*rank -> 5*d
+        "ts_w1": dense_init(ks[2], d, 5 * r.tokenshift_lora_rank, dtype),
+        "ts_w2": (jax.random.normal(ks[3], (5, r.tokenshift_lora_rank, d)) * 0.01).astype(dtype),
+        # projections
+        "w_r": dense_init(ks[4], d, d, dtype),
+        "w_k": dense_init(ks[5], d, d, dtype),
+        "w_v": dense_init(ks[6], d, d, dtype),
+        "w_g": dense_init(ks[7], d, d, dtype),
+        "w_o": dense_init(ks[8], d, d, dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x W1) W2))
+        "decay_w0": jnp.full((d,), -5.0, dtype),
+        "decay_w1": dense_init(ks[9], d, r.decay_lora_rank, dtype),
+        "decay_w2": (jax.random.normal(ks[10], (r.decay_lora_rank, d)) * 0.01).astype(dtype),
+        # per-(head,channel) bonus for the current token
+        "u": (jax.random.normal(ks[11], (h, r.head_dim)) * 0.1).astype(dtype),
+        # per-head output group-norm
+        "gn_scale": jnp.ones((d,), dtype),
+    }
+    return p
+
+
+def _branch_inputs(params, x, last: Optional[jnp.ndarray]):
+    """Data-dependent token-shift mixing (the Finch innovation)."""
+    xs = token_shift(x, last)
+    dx = xs - x
+    xxx = x + dx * params["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(xxx @ params["ts_w1"])
+    b, l, _ = x.shape
+    rank = params["ts_w2"].shape[1]
+    lora = lora.reshape(b, l, 5, rank)
+    mu_dyn = jnp.einsum("blfr,frd->fbld", lora, params["ts_w2"].astype(x.dtype))
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        mu = params["mu_base"][i].astype(x.dtype) + mu_dyn[i]
+        out[name] = x + dx * mu
+    return out
+
+
+def _rkvwg(params, x, cfg: ModelConfig, last: Optional[jnp.ndarray] = None):
+    rcfg: Rwkv6Config = cfg.rwkv
+    hd = rcfg.head_dim
+    h = cfg.d_model // hd
+    b, l, _ = x.shape
+    br = _branch_inputs(params, x, last)
+    r = (br["r"] @ params["w_r"]).reshape(b, l, h, hd)
+    k = (br["k"] @ params["w_k"]).reshape(b, l, h, hd)
+    v = (br["v"] @ params["w_v"]).reshape(b, l, h, hd)
+    g = jax.nn.silu(br["g"] @ params["w_g"])
+    logw = -jnp.exp(
+        params["decay_w0"].astype(jnp.float32)
+        + (jnp.tanh(br["w"] @ params["decay_w1"]) @ params["decay_w2"]).astype(jnp.float32))
+    w = jnp.exp(logw).reshape(b, l, h, hd)                    # in (0, 1)
+    return r, k, v, w, g
+
+
+def _wkv_step(state, rkvw, u):
+    """Single recurrence step. state: [B,H,hd,hd]; r/k/v/w: [B,H,hd]."""
+    r, k, v, w = rkvw
+    kv = k[..., :, None] * v[..., None, :]                    # [B,H,hd,hd]
+    att = state + u[None, :, :, None] * kv
+    out = jnp.einsum("bhi,bhij->bhj", r, att)
+    new_state = w[..., :, None] * state + kv
+    return new_state, out
+
+
+def wkv_scan(r, k, v, w, u, state=None, chunk: int = 128):
+    """Exact WKV recurrence via nested (chunked) scan.
+
+    r/k/v/w: [B, L, H, hd] (fp32 recommended); u: [H, hd].
+    Returns (out [B, L, H, hd], final_state [B, H, hd, hd]).
+    """
+    b, l, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    c = min(chunk, l)
+    if l % c:
+        c = l  # fall back to a single chunk for ragged lengths
+    nchunks = l // c
+
+    def chunk_body(st, xs):
+        rc, kc, vc, wc = xs                                   # [c, B, H, hd]
+        def step(s, x):
+            return _wkv_step(s, x, u)
+        st, outs = jax.lax.scan(step, st, (rc, kc, vc, wc))
+        return st, outs
+
+    chunk_body = jax.checkpoint(chunk_body)
+    swap = lambda t: jnp.moveaxis(t, 1, 0).reshape(nchunks, c, b, h, hd)
+    xs = tuple(swap(t.astype(jnp.float32)) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(chunk_body, state, xs)         # outs: [nc, c, B, H, hd]
+    out = jnp.moveaxis(outs.reshape(l, b, h, hd), 0, 1)
+    return out, state
+
+
+def _group_norm(x, scale, h, eps=1e-5):
+    """Per-head layer norm on [B, L, D] reshaped to heads."""
+    b, l, d = x.shape
+    xh = x.reshape(b, l, h, d // h).astype(jnp.float32)
+    mean = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, l, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv6_apply(params, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence time-mix. Cache = (last_token_x, wkv_state)."""
+    rcfg: Rwkv6Config = cfg.rwkv
+    h = cfg.d_model // rcfg.head_dim
+    b, l, d = x.shape
+    r, k, v, w, g = _rkvwg(params, x, cfg)
+    out, state = wkv_scan(r, k, v, w, params["u"].astype(jnp.float32), chunk=rcfg.chunk_size)
+    y = _group_norm(out.reshape(b, l, d).astype(x.dtype), params["gn_scale"], h) * g
+    y = y @ params["w_o"]
+    if not return_cache:
+        return y, None
+    return y, {"last_x": x[:, -1], "state": state, "index": jnp.full((), l, jnp.int32)}
+
+
+def init_rwkv6_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    rcfg: Rwkv6Config = cfg.rwkv
+    h = cfg.d_model // rcfg.head_dim
+    return {
+        "last_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, h, rcfg.head_dim, rcfg.head_dim), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def rwkv6_decode(params, x, cache, cfg: ModelConfig):
+    """One-token decode: O(1) state update — why rwkv6 runs long_500k."""
+    rcfg: Rwkv6Config = cfg.rwkv
+    h = cfg.d_model // rcfg.head_dim
+    b, _, d = x.shape
+    r, k, v, w, g = _rkvwg(params, x, cfg, last=cache["last_x"])
+    take = lambda t: t[:, 0].astype(jnp.float32)
+    state, out = _wkv_step(cache["state"], (take(r), take(k), take(v), take(w)),
+                           params["u"].astype(jnp.float32))
+    y = _group_norm(out.reshape(b, 1, d).astype(x.dtype), params["gn_scale"], h) * g
+    y = y @ params["w_o"]
+    return y, {"last_x": x[:, -1], "state": state, "index": cache["index"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (the FFN used between time-mix layers)
+# ---------------------------------------------------------------------------
+
+
+def cmix_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "w_k": dense_init(ks[1], d, f, dtype),
+        "w_v": dense_init(ks[2], f, d, dtype),
+        "w_r": dense_init(ks[0], d, d, dtype),
+    }
+
+
+def cmix_apply(params, x, last: Optional[jnp.ndarray] = None):
+    xs = token_shift(x, last)
+    dx = xs - x
+    xk = x + dx * params["mu_k"].astype(x.dtype)
+    xr = x + dx * params["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])

@@ -1,0 +1,262 @@
+"""SA-Net (Scale Attention Network) — the paper's predictive backbone.
+
+Faithful to Figure 5: a ResNet-style encoder whose residual blocks carry
+squeeze-and-excitation (ResSE), a mirrored decoder with a single ResSE
+block per level, and a *scale attention* block per decoder level that
+resizes all encoder scales to a common resolution, sums them, squeezes
+(GAP + SE), and softmax-normalizes per-channel weights **across scales**
+— the decoder fuses the attention output by element-wise summation
+(not concatenation).  Deep supervision heads at every decoder level.
+
+Used for all three KBP+ tasks with task-specific losses:
+  * dose prediction — voxel-wise MAE (paper §III.A.3)
+  * tumor segmentation — Jaccard distance + focal loss (§III.B.3)
+  * OAR segmentation — cross-entropy + Jaccard distance (§III.C.3)
+
+Layout: channels-last volumes [B, D, H, W, C].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DIMNUMS = ("NDHWC", "DHWIO", "NDHWC")
+
+
+@dataclass(frozen=True)
+class SANetConfig:
+    in_channels: int = 11              # OpenKBP: CT + PTVs + OAR masks
+    out_channels: int = 1              # dose (1) or segmentation classes
+    base_filters: int = 24
+    num_levels: int = 4
+    se_ratio: int = 4
+    task: str = "dose"                 # dose | segmentation
+    deep_supervision: bool = True
+
+    def filters(self, level: int) -> int:
+        return self.base_filters * (2 ** level)
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, k: Tuple[int, int, int], cin: int, cout: int, dtype=jnp.float32):
+    fan_in = cin * k[0] * k[1] * k[2]
+    w = jax.random.truncated_normal(key, -2, 2, k + (cin, cout)) * (2.0 / fan_in) ** 0.5
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def conv_apply(p, x, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride,) * 3, padding="SAME",
+        dimension_numbers=DIMNUMS) + p["b"]
+
+
+def groupnorm_init(c: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def groupnorm_apply(p, x, groups: int = 8, eps: float = 1e-5):
+    b = x.shape[0]
+    c = x.shape[-1]
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(b, -1, g, c // g).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(x.shape) * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def se_init(key, c: int, ratio: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    hidden = max(c // ratio, 4)
+    return {"w1": (jax.random.normal(k1, (c, hidden)) * (c ** -0.5)).astype(dtype),
+            "w2": (jax.random.normal(k2, (hidden, c)) * (hidden ** -0.5)).astype(dtype)}
+
+
+def se_apply(p, x):
+    """Squeeze-and-excitation on [B, D, H, W, C]."""
+    s = jnp.mean(x, axis=(1, 2, 3))                    # [B, C]
+    s = jax.nn.relu(s @ p["w1"]) @ p["w2"]
+    return x * jax.nn.sigmoid(s)[:, None, None, None, :]
+
+
+def resse_init(key, cin: int, cout: int, ratio: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": groupnorm_init(cin, dtype),
+        "conv1": conv_init(ks[0], (3, 3, 3), cin, cout, dtype),
+        "norm2": groupnorm_init(cout, dtype),
+        "conv2": conv_init(ks[1], (3, 3, 3), cout, cout, dtype),
+        "se": se_init(ks[2], cout, ratio, dtype),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(ks[3], (1, 1, 1), cin, cout, dtype)
+    return p
+
+
+def resse_apply(p, x):
+    """Pre-activation residual block with SE (Figure 5(b))."""
+    h = conv_apply(p["conv1"], jax.nn.relu(groupnorm_apply(p["norm1"], x)))
+    h = conv_apply(p["conv2"], jax.nn.relu(groupnorm_apply(p["norm2"], h)))
+    h = se_apply(p["se"], h)
+    skip = conv_apply(p["proj"], x) if "proj" in p else x
+    return skip + h
+
+
+def resize_volume(x, target_shape: Tuple[int, int, int]):
+    """Nearest-neighbour spatial resize of [B, D, H, W, C]."""
+    b, d, h, w, c = x.shape
+    return jax.image.resize(x, (b,) + tuple(target_shape) + (c,), method="nearest")
+
+
+# ---------------------------------------------------------------------------
+# Scale attention block (Figure 5(c))
+# ---------------------------------------------------------------------------
+
+
+def scale_attn_init(key, cfg: SANetConfig, level: int, dtype=jnp.float32):
+    c = cfg.filters(level)
+    ks = jax.random.split(key, cfg.num_levels + 1)
+    # 1x1 convs mapping each encoder scale's channels to this level's width
+    proj = [conv_init(ks[i], (1, 1, 1), cfg.filters(i), c, dtype)
+            for i in range(cfg.num_levels)]
+    return {"proj": proj, "se": se_init(ks[-1], c * cfg.num_levels, cfg.se_ratio, dtype)}
+
+
+def scale_attn_apply(p, enc_feats, cfg: SANetConfig, level: int):
+    """Fuse all encoder scales into one map at ``level`` resolution."""
+    target = enc_feats[level].shape[1:4]
+    c = cfg.filters(level)
+    maps = [conv_apply(p["proj"][i], resize_volume(f, target))
+            for i, f in enumerate(enc_feats)]           # each [B,*,*,*,C]
+    summed = sum(maps)
+    # squeeze: GAP of the sum, then SE producing per-(scale, channel) logits
+    s = jnp.mean(summed, axis=(1, 2, 3))                # [B, C]
+    s_all = jnp.tile(s, (1, cfg.num_levels))            # [B, S*C]
+    e = jax.nn.relu(s_all @ p["se"]["w1"]) @ p["se"]["w2"]   # [B, S*C]
+    logits = e.reshape(s.shape[0], cfg.num_levels, c)
+    weights = jax.nn.softmax(logits, axis=1)            # softmax over scales
+    out = sum(weights[:, i][:, None, None, None, :] * maps[i]
+              for i in range(cfg.num_levels))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full network
+# ---------------------------------------------------------------------------
+
+
+def sanet_init(key, cfg: SANetConfig, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": conv_init(next(ks), (3, 3, 3), cfg.in_channels, cfg.filters(0), dtype)}
+    # encoder: 2 ResSE blocks per level, stride-2 downsample conv between levels
+    p["enc"] = []
+    for lvl in range(cfg.num_levels):
+        c = cfg.filters(lvl)
+        blocks = {"b1": resse_init(next(ks), c, c, cfg.se_ratio, dtype),
+                  "b2": resse_init(next(ks), c, c, cfg.se_ratio, dtype)}
+        if lvl < cfg.num_levels - 1:
+            blocks["down"] = conv_init(next(ks), (3, 3, 3), c, cfg.filters(lvl + 1), dtype)
+        p["enc"].append(blocks)
+    # scale attention + decoder (single ResSE per level) + deep supervision
+    p["scale_attn"] = [scale_attn_init(next(ks), cfg, lvl, dtype)
+                       for lvl in range(cfg.num_levels - 1)]
+    p["dec"] = []
+    p["ds_heads"] = []
+    for lvl in range(cfg.num_levels - 2, -1, -1):
+        cin, cout = cfg.filters(lvl + 1), cfg.filters(lvl)
+        p["dec"].append({
+            "up": conv_init(next(ks), (1, 1, 1), cin, cout, dtype),
+            "block": resse_init(next(ks), cout, cout, cfg.se_ratio, dtype),
+        })
+        p["ds_heads"].append(conv_init(next(ks), (1, 1, 1), cout, cfg.out_channels, dtype))
+    return p
+
+
+def sanet_apply(params, x, cfg: SANetConfig):
+    """x: [B, D, H, W, in_channels] -> (output, deep-supervision list).
+
+    ``output`` is [B, D, H, W, out_channels]; deep-supervision outputs are
+    produced at every decoder level and resized to full resolution.
+    """
+    h = conv_apply(params["stem"], x)
+    enc_feats = []
+    for lvl in range(cfg.num_levels):
+        b = params["enc"][lvl]
+        h = resse_apply(b["b2"], resse_apply(b["b1"], h))
+        enc_feats.append(h)
+        if lvl < cfg.num_levels - 1:
+            h = conv_apply(b["down"], h, stride=2)
+    # decoder
+    ds_outs = []
+    d = enc_feats[-1]
+    for i, lvl in enumerate(range(cfg.num_levels - 2, -1, -1)):
+        target = enc_feats[lvl].shape[1:4]
+        up = conv_apply(params["dec"][i]["up"], resize_volume(d, target))
+        fused = up + scale_attn_apply(params["scale_attn"][lvl], enc_feats, cfg, lvl)
+        d = resse_apply(params["dec"][i]["block"], fused)
+        ds = conv_apply(params["ds_heads"][i], d)
+        ds_outs.append(resize_volume(ds, x.shape[1:4]))
+    return ds_outs[-1], ds_outs
+
+
+# ---------------------------------------------------------------------------
+# Task losses (paper §III)
+# ---------------------------------------------------------------------------
+
+
+def dose_loss(params, batch, cfg: SANetConfig, ds_weight: float = 0.5):
+    """Voxel-wise MAE with deep supervision (dose prediction, §III.A.3).
+
+    ``batch["mask"]`` restricts the loss to the patient volume (possible
+    dose region), matching OpenKBP's evaluation protocol.
+    """
+    pred, ds_outs = sanet_apply(params, batch["volume"], cfg)
+    mask = batch.get("mask")
+    def mae(p):
+        err = jnp.abs(p - batch["dose"])
+        if mask is not None:
+            return jnp.sum(err * mask) / (jnp.sum(mask) + 1e-6)
+        return jnp.mean(err)
+    loss = mae(pred)
+    if cfg.deep_supervision and len(ds_outs) > 1:
+        aux = sum(mae(o) for o in ds_outs[:-1]) / max(len(ds_outs) - 1, 1)
+        loss = loss + ds_weight * aux
+    return loss, {"mae": loss}
+
+
+def _soft_jaccard(probs, onehot, eps=1e-6):
+    inter = jnp.sum(probs * onehot, axis=(1, 2, 3))
+    union = jnp.sum(probs + onehot, axis=(1, 2, 3)) - inter
+    return 1.0 - (inter + eps) / (union + eps)          # [B, C]
+
+
+def segmentation_loss(params, batch, cfg: SANetConfig, focal_gamma: float = 2.0,
+                      use_focal: bool = False, ds_weight: float = 0.5):
+    """Jaccard distance + (focal or plain) CE (paper §III.B.3 / §III.C.3)."""
+    pred, ds_outs = sanet_apply(params, batch["volume"], cfg)
+    labels = batch["labels"]                             # [B, D, H, W] int
+    onehot = jax.nn.one_hot(labels, cfg.out_channels)
+
+    def term(logits):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        if use_focal:
+            pt = jnp.exp(-ce)
+            ce = ce * (1.0 - pt) ** focal_gamma
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.mean(ce) + jnp.mean(_soft_jaccard(probs, onehot))
+
+    loss = term(pred)
+    if cfg.deep_supervision and len(ds_outs) > 1:
+        loss = loss + ds_weight * sum(term(o) for o in ds_outs[:-1]) / max(len(ds_outs) - 1, 1)
+    return loss, {"seg_loss": loss}

@@ -1,0 +1,54 @@
+"""Activation-sharding hints for the model code.
+
+Model modules are mesh-agnostic; the launcher enables hints with the mesh
+axis sizes and the model drops ``with_sharding_constraint`` seeds at the
+few places XLA's propagation goes wrong (measured, not speculative — see
+EXPERIMENTS.md §Perf: without the q/k/v head constraint the MLA score
+contraction partial-sums over the model axis, 32 TB of all-reduce per
+deepseek round).
+
+Usage (launcher):
+    with shardhints.enable(model_axis=16):
+        jax.jit(step).lower(...)
+
+Model code:
+    q = shardhints.constrain_heads(q)      # [B, L, H, D] — H over "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _cfg():
+    return getattr(_state, "cfg", None)
+
+
+@contextlib.contextmanager
+def enable(model_axis: int, axis_name: str = "model"):
+    prev = _cfg()
+    _state.cfg = {"model_axis": model_axis, "axis_name": axis_name}
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def constrain_heads(x, head_axis: int = -2):
+    """Constrain a [..., H, D] activation's head dim over the model axis
+    (no-op when hints are disabled or H doesn't divide)."""
+    cfg = _cfg()
+    if cfg is None:
+        return x
+    h = x.shape[head_axis]
+    if h % cfg["model_axis"]:
+        return x
+    spec = [None] * x.ndim
+    spec[head_axis % x.ndim] = cfg["axis_name"]
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,427 @@
+"""Decoder-only transformer stack covering all assigned architecture families.
+
+Key design points (production-framework behaviour, not a toy):
+
+* **Per-layer block dispatch** — each layer's mixer (GQA / MLA / RWKV6 /
+  Mamba) and FFN (dense / MoE) comes from ``ModelConfig.layer_spec(i)``,
+  so DeepSeek-V2 (dense first layer, MLA+MoE rest), Jamba (1:7
+  attention:Mamba, MoE every other layer) and Gemma-3 (5:1
+  local:global windows) are plain configs.
+
+* **Scan-group compilation** — consecutive layers with identical parameter
+  *shapes* are stacked along a leading repeat axis and executed with
+  ``jax.lax.scan``; per-layer scalars that vary inside a group (sliding
+  window size) are passed as scanned-over data.  This keeps HLO size and
+  compile time O(unique-layer-shapes), which matters when lowering a 398B
+  Jamba for a 512-chip mesh.  ``remat`` wraps the scan body for training.
+
+* **Stateful serving** — ``prefill`` returns per-layer caches (KV, MLA
+  latent, RWKV/Mamba states); ``decode_step`` advances one token. Sliding
+  window layers allocate ring-buffer caches of window size only.
+
+All functions are pure; parameters are dict pytrees that stack cleanly
+along the federated site axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (dense_init, embed_init, mlp_apply, mlp_init,
+                                 rmsnorm_init, rmsnorm_apply, sinusoidal_positions)
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+
+def _signature(cfg: ModelConfig, i: int):
+    spec = cfg.layer_spec(i)
+    return (spec.mixer, spec.ffn, cfg.dense_ff_for_layer(i), spec.sliding_window)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanGroup:
+    """``n_repeats`` repetitions of a ``period``-layer block pattern.
+
+    Sliding windows are part of the group signature, so every period
+    position has a single static window (ring-buffer caches stack
+    homogeneously — gemma3's 5 local + 1 global becomes period 6).
+    """
+
+    start: int
+    period: int
+    n_repeats: int
+    specs: Tuple[LayerSpec, ...]            # one per period position
+
+
+def plan_groups(cfg: ModelConfig, max_period: int = 8) -> Tuple[Tuple[int, ...], Optional[ScanGroup]]:
+    """Split layers into an unrolled prefix + one periodic scan group.
+
+    Returns (prefix_layer_indices, group-or-None).  The group covers the
+    longest periodic suffix whose layers have identical parameter shapes
+    and specs; remaining leading layers are unrolled (e.g. DeepSeek-V2's
+    dense first layer).
+    """
+    n = cfg.num_layers
+    sigs = [_signature(cfg, i) for i in range(n)]
+    for start in range(n):
+        remaining = n - start
+        if remaining < 2:
+            break
+        for p in range(1, max_period + 1):
+            if remaining % p or remaining // p < 2:
+                continue
+            if all(sigs[i] == sigs[start + ((i - start) % p)] for i in range(start, n)):
+                specs = tuple(cfg.layer_spec(start + j) for j in range(p))
+                return tuple(range(start)), ScanGroup(start, p, remaining // p, specs)
+    return tuple(range(n)), None
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, i: int, dtype):
+    spec = cfg.layer_spec(i)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                         "norm2": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn.mla_init(ks[0], cfg, dtype)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = rwkv_mod.rwkv6_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.mamba_init(ks[0], cfg, dtype)
+    if spec.ffn == "moe":
+        p["ffn"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.moe, dtype)
+    elif spec.mixer == "rwkv6":
+        p["ffn"] = rwkv_mod.cmix_init(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.dense_ff_for_layer(i), cfg.ffn_activation, dtype)
+    return p
+
+
+def _layer_apply(params, x, cfg: ModelConfig, spec: LayerSpec, window,
+                 cache=None, decode: bool = False, make_cache: bool = False,
+                 cache_len: Optional[int] = None, moe_impl: str = "dense"):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if spec.mixer in ("attn",):
+        if decode:
+            y, new_cache = attn.gqa_decode(params["mixer"], h, cache, cfg, window=window)
+        else:
+            y, new_cache = attn.gqa_apply(params["mixer"], h, cfg, window=window,
+                                          return_cache=make_cache, cache_len=cache_len)
+    elif spec.mixer == "mla":
+        if decode:
+            y, new_cache = attn.mla_decode(params["mixer"], h, cache, cfg)
+        else:
+            y, new_cache = attn.mla_apply(params["mixer"], h, cfg,
+                                          return_cache=make_cache, cache_len=cache_len)
+    elif spec.mixer == "rwkv6":
+        if decode:
+            y, new_cache = rwkv_mod.rwkv6_decode(params["mixer"], h,
+                                                 cache["mixer"], cfg)
+        else:
+            y, new_cache = rwkv_mod.rwkv6_apply(params["mixer"], h, cfg,
+                                                return_cache=make_cache)
+    elif spec.mixer == "mamba":
+        if decode:
+            y, new_cache = mamba_mod.mamba_decode(params["mixer"], h, cache, cfg)
+        else:
+            y, new_cache = mamba_mod.mamba_apply(params["mixer"], h, cfg, return_cache=make_cache)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    h2 = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "moe":
+        apply_fn = {"dense": moe_mod.moe_apply,
+                    "gather": moe_mod.moe_apply_sparse,
+                    "dispatch": moe_mod.moe_apply_dispatch}[moe_impl]
+        y2, aux = apply_fn(params["ffn"], h2, cfg.moe)
+    elif spec.mixer == "rwkv6":
+        # channel-mix token shift is stateful across decode steps too
+        last = cache["cmix_last"] if decode else None
+        y2 = rwkv_mod.cmix_apply(params["ffn"], h2, last=last)
+        if new_cache is not None:
+            new_cache = {"mixer": new_cache, "cmix_last": h2[:, -1]}
+    else:
+        y2 = mlp_apply(params["ffn"], h2, cfg.ffn_activation)
+    return x + y2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Initialize full model parameters (dict pytree)."""
+    prefix, group = plan_groups(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params: Dict[str, Any] = {}
+    vpad = cfg.padded_vocab
+    if cfg.num_codebooks > 1:
+        params["embed"] = jnp.stack(
+            [embed_init(k, vpad, cfg.d_model, dtype)
+             for k in jax.random.split(keys[0], cfg.num_codebooks)])
+    else:
+        params["embed"] = embed_init(keys[0], vpad, cfg.d_model, dtype)
+    params["prefix_layers"] = [_layer_init(keys[1 + i], cfg, i, dtype) for i in prefix]
+    if group is not None:
+        stacked = []
+        for j in range(group.period):
+            reps = [_layer_init(keys[1 + group.start + r * group.period + j], cfg,
+                                group.start + r * group.period + j, dtype)
+                    for r in range(group.n_repeats)]
+            stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        params["scan_layers"] = stacked
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            params["lm_head"] = jnp.stack(
+                [dense_init(k, cfg.d_model, vpad, dtype)
+                 for k in jax.random.split(keys[-1], cfg.num_codebooks)])
+        else:
+            params["lm_head"] = dense_init(keys[-1], cfg.d_model, vpad, dtype)
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via ``jax.eval_shape`` over ``init``.
+
+    ``active_only`` subtracts inactive routed-expert parameters
+    (MoE: only top_k of num_experts are live per token).
+    """
+    shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = sum(1 for s in cfg.layer_specs() if s.ffn == "moe")
+        per_expert = 3 * cfg.d_model * m.d_expert
+        total -= n_moe_layers * per_expert * (m.num_experts - m.top_k)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, position_offset=0):
+    """tokens: [B, L] or [B, L, K] (codebooks). Returns [B, L, D]."""
+    if cfg.num_codebooks > 1:
+        x = sum(jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                for k in range(cfg.num_codebooks))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embedding == "sinusoidal":
+        l = x.shape[1]
+        if isinstance(position_offset, int) and position_offset == 0:
+            x = x + sinusoidal_positions(l, cfg.d_model, x.dtype)[None]
+        else:
+            # decode: compute the sinusoidal row at the dynamic offset
+            pos = jnp.asarray(position_offset, jnp.float32)
+            dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+            ang = pos / jnp.power(10000.0, dim / cfg.d_model)
+            row = jnp.zeros((cfg.d_model,), jnp.float32)
+            row = row.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+            x = x + row.astype(x.dtype)[None, None, :]
+    return x
+
+
+def _mask_pad(logits, cfg: ModelConfig):
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    return jnp.where(pad, -1e30, logits)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    """[B, L, D] -> logits over the PADDED vocab ([B,L,Vp] or [B,L,K,Vp]);
+    padding rows are masked to -inf so the softmax ignores them."""
+    x32 = x.astype(jnp.float32)
+    if cfg.num_codebooks > 1:
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bld,kvd->blkv", x32, w.astype(jnp.float32))
+        else:
+            logits = jnp.einsum("bld,kdv->blkv", x32, w.astype(jnp.float32))
+        return _mask_pad(logits, cfg)
+    if cfg.tie_embeddings:
+        logits = x32 @ params["embed"].astype(jnp.float32).T
+    else:
+        logits = x32 @ params["lm_head"].astype(jnp.float32)
+    return _mask_pad(logits, cfg)
+
+
+def _scan_forward(params, x, cfg: ModelConfig, group: ScanGroup,
+                  remat: bool, moe_impl: str):
+    """Run the periodic scan group (training/eval path, no caches)."""
+
+    def body(carry, layer_params):
+        h, aux = carry
+        for j in range(group.period):
+            h, _, a = _layer_apply(layer_params[j], h, cfg, group.specs[j],
+                                   group.specs[j].sliding_window,
+                                   moe_impl=moe_impl)
+            aux = aux + a
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["scan_layers"])
+    return x, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, remat: bool = False,
+            moe_impl: str = "dense", inputs_embeds=None):
+    """Training/eval forward pass. Returns (logits, aux_loss)."""
+    prefix, group = plan_groups(cfg)
+    x = embed_tokens(params, tokens, cfg) if inputs_embeds is None else inputs_embeds
+    aux = jnp.zeros((), jnp.float32)
+    for n, i in enumerate(prefix):
+        spec = cfg.layer_spec(i)
+        x, _, a = _layer_apply(params["prefix_layers"][n], x, cfg, spec,
+                               spec.sliding_window, moe_impl=moe_impl)
+        aux = aux + a
+    if group is not None:
+        x, a = _scan_forward(params, x, cfg, group, remat, moe_impl)
+        aux = aux + a
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(params, batch, cfg: ModelConfig, remat: bool = False,
+                    moe_impl: str = "dense", aux_coef: Optional[float] = None):
+    """Mean next-token cross-entropy (+ MoE load-balance aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens, cfg, remat=remat, moe_impl=moe_impl)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if cfg.num_codebooks > 1:
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]  # [B,L-1,K]
+    else:
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    coef = aux_coef if aux_coef is not None else (cfg.moe.router_aux_coef if cfg.moe else 0.0)
+    return loss + coef * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_for_layer(batch: int, capacity: int, cfg: ModelConfig, spec: LayerSpec,
+                     window: Optional[int], dtype):
+    if spec.mixer == "attn":
+        return attn.init_gqa_cache(batch, capacity, cfg, dtype, window=window)
+    if spec.mixer == "mla":
+        return attn.init_mla_cache(batch, capacity, cfg, dtype)
+    if spec.mixer == "rwkv6":
+        return {"mixer": rwkv_mod.init_rwkv6_cache(batch, cfg, dtype),
+                "cmix_last": jnp.zeros((batch, cfg.d_model), dtype)}
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba_cache(batch, cfg, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_caches(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Empty per-layer caches: (prefix list, stacked scan-group caches)."""
+    prefix, group = plan_groups(cfg)
+    pre = [_cache_for_layer(batch, capacity, cfg, cfg.layer_spec(i),
+                            cfg.layer_spec(i).sliding_window, dtype) for i in prefix]
+    scan_caches = None
+    if group is not None:
+        scan_caches = []
+        for j in range(group.period):
+            reps = [_cache_for_layer(batch, capacity, cfg, group.specs[j],
+                                     group.specs[j].sliding_window, dtype)
+                    for _ in range(group.n_repeats)]
+            scan_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    return {"prefix": pre, "scan": scan_caches}
+
+
+def decode_step(params, tokens, caches, cfg: ModelConfig, moe_impl: str = "dispatch"):
+    """One-token decode. tokens: [B, 1] (or [B, 1, K]). Returns (logits, caches)."""
+    prefix, group = plan_groups(cfg)
+
+    def _index_of(c):
+        return c["index"] if "index" in c else c["mixer"]["index"]
+
+    index0 = (_index_of(caches["prefix"][0]) if caches["prefix"]
+              else _index_of(caches["scan"][0])[0])
+    x = embed_tokens(params, tokens, cfg, position_offset=index0)
+    new_prefix = []
+    for n, i in enumerate(prefix):
+        spec = cfg.layer_spec(i)
+        x, c, _ = _layer_apply(params["prefix_layers"][n], x, cfg, spec,
+                               spec.sliding_window, cache=caches["prefix"][n],
+                               decode=True, moe_impl=moe_impl)
+        new_prefix.append(c)
+    new_scan = None
+    if group is not None:
+        def body(h, xs):
+            layer_params, layer_caches = xs
+            new_cs = []
+            for j in range(group.period):
+                h, c, _ = _layer_apply(layer_params[j], h, cfg, group.specs[j],
+                                       group.specs[j].sliding_window,
+                                       cache=layer_caches[j],
+                                       decode=True, moe_impl=moe_impl)
+                new_cs.append(c)
+            return h, new_cs
+        x, new_scan = jax.lax.scan(body, x, (params["scan_layers"], caches["scan"]))
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, {"prefix": new_prefix, "scan": new_scan}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_capacity: int,
+            moe_impl: str = "dispatch", cache_dtype=jnp.bfloat16):
+    """Full-sequence prefill producing logits + decode-ready caches."""
+    prefix, group = plan_groups(cfg)
+    x = embed_tokens(params, tokens, cfg)
+    new_prefix = []
+    for n, i in enumerate(prefix):
+        spec = cfg.layer_spec(i)
+        x, c, _ = _layer_apply(params["prefix_layers"][n], x, cfg, spec,
+                               spec.sliding_window, make_cache=True,
+                               cache_len=cache_capacity, moe_impl=moe_impl)
+        new_prefix.append(c)
+    new_scan = None
+    if group is not None:
+        def body(h, layer_params):
+            new_cs = []
+            for j in range(group.period):
+                h, c, _ = _layer_apply(layer_params[j], h, cfg, group.specs[j],
+                                       group.specs[j].sliding_window, make_cache=True,
+                                       cache_len=cache_capacity, moe_impl=moe_impl)
+                new_cs.append(c)
+            return h, new_cs
+        x, new_scan = jax.lax.scan(body, x, params["scan_layers"])
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params, x[:, -1:], cfg), {"prefix": new_prefix, "scan": new_scan}

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adamw, sgd, Optimizer, apply_updates,
+                                    global_norm, clip_by_global_norm)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["adamw", "sgd", "Optimizer", "apply_updates", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup_cosine"]

@@ -1,0 +1,101 @@
+"""Minimal-but-production optimizer library (optax-style pure functions).
+
+Implemented in-repo (no optax dependency) so the optimizer state dtype
+policy (fp32 vs bf16 moments for the ≥236B archs) and the site-stacked
+vmap path are fully under our control.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]   # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr, momentum: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """SGD with optional (heavy-ball) momentum. ``lr`` may be a schedule fn."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: (momentum * m.astype(jnp.float32)
+                              + g.astype(jnp.float32)).astype(state_dtype),
+                state["mom"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m.astype(jnp.float32), mom)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with bias correction and configurable moment dtype."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            u = -(lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+            return u, m32.astype(state_dtype), v32.astype(state_dtype)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_v = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)

