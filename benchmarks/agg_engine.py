@@ -1,0 +1,120 @@
+"""Aggregate-latency + server-memory: legacy paths vs AggregationEngine.
+
+"Before" is the seed's three disjoint Eq. 1 implementations:
+
+  * per-leaf ``jnp.einsum`` tree_map (the old ``fedavg_aggregate``),
+  * the aggregation server's pure-Python scaled-copy loop, which
+    materializes one fp32 model per site (O(S·N) server memory).
+
+"After" is the engine's single padded [S, N] reduction (jnp fallback on
+this CPU container; the Pallas kernel path is timed under the
+interpreter only for a small N so CI stays fast) and the server's O(N)
+streaming accumulator.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ARTIFACTS
+from repro.core.agg_engine import AggregationEngine, StreamingAccumulator
+from repro.core.stacking import weighted_mean
+from repro.models.sanet import SANetConfig, sanet_init
+
+
+def _legacy_server_average(uploads, weights):
+    """The seed's O(S·N) server loop (kept here as the 'before' baseline)."""
+    tot = sum(weights[i] for i in uploads)
+    acc = None
+    for i, tree in uploads.items():
+        w = weights[i] / tot
+        scaled = jax.tree.map(lambda x: np.asarray(x, np.float32) * w, tree)
+        acc = scaled if acc is None else jax.tree.map(np.add, acc, scaled)
+    return acc
+
+
+def _time(fn, iters):
+    fn()                                             # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def run(quick: bool = False):
+    s = 8
+    scfg = SANetConfig(in_channels=4, out_channels=1, base_filters=8,
+                      num_levels=2)
+    params = sanet_init(jax.random.PRNGKey(0), scfg)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (s,) + x.shape) *
+        (1.0 + 0.01 * jnp.arange(s).reshape((s,) + (1,) * x.ndim)), params)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    cw = jnp.asarray(np.random.default_rng(0).uniform(0.5, 2.0, s), jnp.float32)
+    w = cw / jnp.sum(cw)
+    iters = 3 if quick else 10
+
+    # -- device-side latency: per-leaf einsum vs one flat reduction ---------
+    legacy = jax.jit(lambda t: weighted_mean(t, w))
+    engine = AggregationEngine(use_pallas=False)
+    eng_fn = jax.jit(lambda t: engine.global_mean(t, w))
+    us_legacy = _time(lambda: jax.block_until_ready(legacy(stacked)), iters)
+    us_engine = _time(lambda: jax.block_until_ready(eng_fn(stacked)), iters)
+
+    # Pallas path correctness + latency on a small buffer (interpret mode on
+    # CPU is faithful-but-slow, so keep N modest and call it out in the JSON)
+    pal = AggregationEngine(use_pallas=True, interpret=True, block_n=4096)
+    small = {"w": jax.random.normal(jax.random.PRNGKey(1), (s, 10_000))}
+    pal_fn = jax.jit(lambda t: pal.global_mean(t, w))
+    ref_small = weighted_mean(small, w)
+    np.testing.assert_allclose(
+        np.asarray(pal_fn(small)["w"]), np.asarray(ref_small["w"]),
+        rtol=1e-5, atol=1e-5)
+    us_pallas_small = _time(lambda: jax.block_until_ready(pal_fn(small)),
+                            max(1, iters // 3))
+
+    # -- server-side: O(S·N) loop vs O(N) streaming accumulator -------------
+    host = jax.tree.map(np.asarray, stacked)
+    uploads = {i: jax.tree.map(lambda x: np.array(x[i], np.float32), host)
+               for i in range(s)}
+    weights = {i: float(cw[i]) for i in range(s)}
+    us_srv_legacy = _time(lambda: _legacy_server_average(uploads, weights), iters)
+
+    def _stream():
+        acc = StreamingAccumulator()
+        for i in range(s):
+            # copy models the way decode_writable hands them to the server
+            acc.fold(jax.tree.map(np.copy, uploads[i]), weights[i])
+        return acc.finalize()
+    us_srv_stream = _time(_stream, iters)
+    acc = StreamingAccumulator()
+    acc.fold(jax.tree.map(np.copy, uploads[0]), 1.0)
+    stream_bytes = acc.nbytes
+    legacy_bytes = s * sum(x.nbytes for x in jax.tree.leaves(uploads[0]))
+
+    out = {
+        "bench": "agg_engine Eq.1 before/after",
+        "sites": s, "params": int(n),
+        "device_us": {"legacy_per_leaf_einsum": us_legacy,
+                      "engine_flat_jnp": us_engine,
+                      "engine_pallas_interpret_small_n": us_pallas_small,
+                      "pallas_note": "interpret mode (CPU container); "
+                                     "compiled on TPU/GPU"},
+        "server_us": {"legacy_scaled_copies": us_srv_legacy,
+                      "streaming_accumulator": us_srv_stream},
+        "server_resident_bytes": {"before_o_sn": legacy_bytes,
+                                  "after_o_n": stream_bytes,
+                                  "ratio": legacy_bytes / stream_bytes},
+    }
+    (ARTIFACTS / "agg_engine.json").write_text(json.dumps(out, indent=2))
+    derived = (f"engine_us={us_engine:.0f};legacy_us={us_legacy:.0f};"
+               f"server_mem_ratio={legacy_bytes / stream_bytes:.1f}x")
+    return derived, out
+
+
+if __name__ == "__main__":
+    print(run()[0])

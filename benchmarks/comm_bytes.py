@@ -26,6 +26,13 @@ def run(quick: bool = False):
     host_tree = jax.tree.map(np.asarray, params)
     wire = len(encode_message("model", {"site": 0, "round": 1}, host_tree))
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    raw = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+    # server-resident mid-round state: the seed held every decoded upload
+    # (O(S·N)); the streaming accumulator holds one fp32 model (O(N))
+    from repro.core.agg_engine import StreamingAccumulator
+    acc = StreamingAccumulator()
+    acc.fold(jax.tree.map(np.copy, host_tree), 1.0)
+    acc_bytes = acc.nbytes
     rows = {}
     for s in [5, 8, 16, 32]:
         rows[s] = {
@@ -33,11 +40,14 @@ def run(quick: bool = False):
             "fedprox_server_bytes": 2 * s * wire,
             "gcml_p2p_bytes": (s // 2) * wire,
             "gcml_vs_fedavg_ratio": (s // 2) / (2 * s),
+            "server_resident_bytes_before": s * raw,
+            "server_resident_bytes_after": acc_bytes,
         }
     out = {"table": "Table 1 / comm model",
            "sanet_params": int(n_params),
            "wire_bytes_per_model": wire,
            "overhead_vs_raw": wire / (n_params * 4),
+           "streaming_accumulator_bytes": acc_bytes,
            "per_site_count": rows}
     (ARTIFACTS / "comm_bytes.json").write_text(json.dumps(out, indent=2))
     derived = f"wire_bytes={wire};overhead={out['overhead_vs_raw']:.4f};" \

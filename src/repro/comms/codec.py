@@ -72,7 +72,16 @@ def encode_message(kind: str, meta: Dict[str, Any], tree: Any = None) -> bytes:
     return _HDR.pack(MAGIC, len(header)) + header + payload.getvalue()
 
 
-def decode_message(data: bytes) -> Tuple[str, Dict[str, Any], Any]:
+def decode_message(data: bytes, *, writable: bool = False
+                   ) -> Tuple[str, Dict[str, Any], Any]:
+    """Decode wire bytes back to (kind, metadata, pytree).
+
+    By default leaves are zero-copy read-only ``np.frombuffer`` views
+    into ``data``.  Pass ``writable=True`` to get owned, writable copies
+    — required by in-place consumers such as the aggregation server's
+    streaming accumulator (assignment into a read-only view raises
+    ``ValueError``).
+    """
     magic, hlen = _HDR.unpack_from(data, 0)
     if magic != MAGIC:
         raise ValueError("bad magic — not a FedKBP+ frame")
@@ -86,6 +95,8 @@ def decode_message(data: bytes) -> Tuple[str, Dict[str, Any], Any]:
             count *= d
         arr = np.frombuffer(data, dtype=np.dtype(rec["dtype"]),
                             count=count, offset=start).reshape(tuple(rec["shape"]))
+        if writable:
+            arr = arr.copy()
         leaves.append(arr)
     tree = _unflatten(header["skeleton"], leaves) if header["skeleton"] is not None else None
     return header["kind"], header["meta"], tree

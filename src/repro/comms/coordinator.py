@@ -1,8 +1,9 @@
 """Coordination / aggregation services (paper Figs 3 & 4, Algorithm 1).
 
-``AggregationServer`` — centralized FL: receives site weight uploads,
-computes the case-weighted average (Eq. 1) once all active sites report,
-and hands the global model back on download.
+``AggregationServer`` — centralized FL: folds each site weight upload
+into a streaming Eq. 1 accumulator on arrival (O(N) server memory — one
+fp32 model, not one decoded model per site), normalizes once all active
+sites report, and hands the global model back on download.
 
 ``CoordinationServer`` — decentralized FL: never touches weights.  It
 tracks site metadata (address, active/dropped status), pairs active
@@ -12,60 +13,75 @@ assignment — the sites then exchange models directly peer-to-peer.
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.comms.codec import encode_message
 from repro.comms.transport import Server
+from repro.core.agg_engine import StreamingAccumulator
 from repro.core.gossip import pair_sites
 
 
-def _weighted_average(uploads: Dict[int, Any], weights: Dict[int, float]) -> Any:
-    tot = sum(weights[i] for i in uploads)
-    import jax
-    acc = None
-    for i, tree in uploads.items():
-        w = weights[i] / tot
-        scaled = jax.tree.map(lambda x: np.asarray(x, np.float32) * w, tree)
-        acc = scaled if acc is None else jax.tree.map(np.add, acc, scaled)
-    return acc
-
-
 class AggregationServer:
-    """Centralized FL server (FedAvg/FedProx upload→aggregate→broadcast)."""
+    """Centralized FL server (FedAvg/FedProx upload→aggregate→broadcast).
+
+    Uploads stream through a :class:`StreamingAccumulator`: each arrival
+    is scaled and added into one running fp32 sum (the server is O(N) in
+    memory however many sites join — the scaling term Sheller et al. and
+    APPFL identify as the server bottleneck).  Duplicate uploads for the
+    same round are acknowledged but not folded twice.  A download that
+    outwaits ``download_timeout`` gets an ``error`` reply (surfaced to
+    the client as a ``RuntimeError``) instead of a ``None`` global model.
+    """
 
     def __init__(self, host: str, port: int, num_sites: int,
-                 case_weights: Optional[List[float]] = None):
+                 case_weights: Optional[List[float]] = None,
+                 download_timeout: float = 60.0):
         self.num_sites = num_sites
         self.weights = {i: (case_weights[i] if case_weights else 1.0)
                         for i in range(num_sites)}
+        self.download_timeout = download_timeout
         self._lock = threading.Condition()
-        self._uploads: Dict[int, Any] = {}
+        self._acc = StreamingAccumulator()
+        self._folded: Set[int] = set()
         self._round = 0
         self._global: Any = None
-        self.server = Server(host, port, self._handle).start()
+        # writable decode lets the accumulator scale fp32 uploads in place
+        self.server = Server(host, port, self._handle,
+                             decode_writable=True).start()
         self.addr = self.server.addr
 
     def _handle(self, kind, meta, tree):
         if kind == "upload":
             with self._lock:
-                self._uploads[int(meta["site"])] = tree
+                site = int(meta["site"])
+                if site not in self._folded:
+                    self._acc.fold(tree, self.weights[site])
+                    self._folded.add(site)
                 expected = int(meta.get("active_sites", self.num_sites))
-                if len(self._uploads) >= expected:
-                    self._global = _weighted_average(self._uploads, self.weights)
-                    self._uploads = {}
+                if len(self._folded) >= expected:
+                    self._global = self._acc.finalize()
+                    self._folded = set()
                     self._round += 1
                     self._lock.notify_all()
             return encode_message("ack", {"round": self._round}, None)
         if kind == "download":
             want_round = int(meta["round"])
             with self._lock:
-                self._lock.wait_for(lambda: self._round >= want_round, timeout=60)
+                done = self._lock.wait_for(lambda: self._round >= want_round,
+                                           timeout=self.download_timeout)
+                if not done:
+                    return encode_message(
+                        "error",
+                        {"message": f"timeout: round {want_round} not complete "
+                                    f"(server at round {self._round}, "
+                                    f"{len(self._folded)} uploads folded)"},
+                        None)
                 return encode_message("global", {"round": self._round}, self._global)
         if kind == "status":
             return encode_message("status", {"round": self._round,
-                                             "pending": len(self._uploads)}, None)
+                                             "pending": len(self._folded)}, None)
         raise ValueError(f"unknown rpc {kind!r}")
 
     def stop(self):
@@ -97,10 +113,6 @@ class CoordinationServer:
                 site = int(meta["site"])
                 if site in self._sites:
                     self._sites[site]["active"] = bool(meta["active"])
-                ready = (len(self._sites) == self.num_sites)
-                if ready and all(m.get("reported_round", -1) is not None
-                                 for m in self._sites.values()):
-                    pass
             return encode_message("ack", {}, None)
         if kind == "get_assignment":           # Algorithm 1 coordinator side
             want_round = int(meta["round"])

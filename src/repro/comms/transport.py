@@ -25,11 +25,17 @@ class Server:
     ``handler(kind, meta, tree) -> reply bytes | None`` runs on the
     connection thread; exceptions are returned to the caller as an
     ``error`` message (mirroring gRPC status codes).
+
+    ``decode_writable=True`` hands the handler writable array leaves
+    (copies) instead of zero-copy read-only views — for handlers that
+    mutate payloads in place (e.g. the streaming aggregation server).
     """
 
-    def __init__(self, host: str, port: int, handler: Handler):
+    def __init__(self, host: str, port: int, handler: Handler,
+                 decode_writable: bool = False):
         self.addr: Address = (host, port)
         self.handler = handler
+        self.decode_writable = decode_writable
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind(self.addr)
@@ -62,7 +68,8 @@ class Server:
                 except (ConnectionError, OSError):
                     return
                 try:
-                    kind, meta, tree = decode_message(data)
+                    kind, meta, tree = decode_message(
+                        data, writable=self.decode_writable)
                     reply = self.handler(kind, meta, tree)
                     if reply is None:
                         reply = encode_message("ok", {}, None)
@@ -83,9 +90,16 @@ class Server:
 
 
 class Channel:
-    """Client connection to a peer/coordinator (request → response)."""
+    """Client connection to a peer/coordinator (request → response).
 
-    def __init__(self, addr: Address, timeout: float = 30.0):
+    ``timeout`` bounds the socket wait for a reply and must exceed any
+    server-side ``wait_for`` window (the aggregation server blocks a
+    download up to ``download_timeout=60`` s before replying with an
+    ``error``) — otherwise the client dies on a raw ``socket.timeout``
+    instead of receiving the server's actionable error reply.
+    """
+
+    def __init__(self, addr: Address, timeout: float = 120.0):
         self.addr = addr
         self._sock = socket.create_connection(addr, timeout=timeout)
         self._lock = threading.Lock()

@@ -1,0 +1,238 @@
+"""The single implementation of Eq. 1 — one padded, backend-dispatched engine.
+
+Previously the case-weighted FedAvg average lived in three disjoint
+places: a per-leaf ``jnp.einsum`` path (``core/aggregation.py``), an
+interpret-only Pallas kernel that rejected any ``N`` not divisible by
+its block (``kernels/fedagg.py``), and a pure-Python scaled-copy loop on
+the aggregation server that materialized one full model per site
+(O(S·N) server memory).  ``AggregationEngine`` replaces all three:
+
+  * any params pytree is raveled ONCE into a contiguous ``[S, N]`` fp32
+    buffer (the ravel layout is cached per treedef/shape/dtype key),
+  * ``N`` is zero-padded up to a block multiple so the Pallas ``fedagg``
+    kernel accepts arbitrary parameter counts,
+  * the reduction dispatches to the compiled Pallas kernel on TPU/GPU
+    and to a fused ``jnp.einsum`` on CPU (tests may force either path),
+  * flat and hierarchical (per-pod partials → cross-pod combine)
+    reductions plus active-site masking share the same buffer.
+
+``StreamingAccumulator`` is the host-side (numpy) counterpart for the
+aggregation server: each upload is folded into a running weighted sum on
+arrival, so the server holds O(N) state mid-round instead of S decoded
+models — the memory term that gates scaling FL to many institutions
+(cf. Sheller et al. 2020; APPFL).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stacking import broadcast_to_sites, where_site
+from repro.kernels.fedagg import fedagg as _fedagg_kernel
+
+_EPS = 1e-12
+
+
+def normalized_weights(case_weights: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """m_i/m over the active subset; zero for inactive sites."""
+    w = case_weights.astype(jnp.float32) * active.astype(jnp.float32)
+    return w / (jnp.sum(w) + _EPS)
+
+
+@dataclasses.dataclass(frozen=True)
+class RavelLayout:
+    """How a site-stacked pytree maps into one contiguous [S, N] buffer."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]    # per-leaf shapes WITHOUT the site axis
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    n: int                                 # total flat param count
+
+
+class AggregationEngine:
+    """Eq. 1 for every consumer: strategies, ``global_model``, kernels API.
+
+    ``use_pallas``/``interpret`` default to backend detection: compiled
+    Pallas on TPU/GPU, jnp fallback on CPU.  Construct with
+    ``use_pallas=True, interpret=True`` to exercise the kernel path under
+    the Pallas interpreter (bit-faithful to the TPU program) on CPU.
+    """
+
+    def __init__(self, *, block_n: int = 65536,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        self.block_n = block_n
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self._layouts: Dict[Any, RavelLayout] = {}
+
+    # -- backend dispatch ---------------------------------------------------
+
+    def _dispatch(self) -> Tuple[bool, bool]:
+        backend = jax.default_backend()
+        accel = backend in ("tpu", "gpu")
+        use_pallas = accel if self.use_pallas is None else self.use_pallas
+        interpret = (not accel) if self.interpret is None else self.interpret
+        return use_pallas, interpret
+
+    def reduce_flat(self, flat: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+        """One weighted reduction over the site axis: [S, N] × [S] → [N]."""
+        w = weights.astype(jnp.float32)
+        use_pallas, interpret = self._dispatch()
+        if use_pallas:
+            return _fedagg_kernel(flat, w, block_n=self.block_n,
+                                  interpret=interpret)
+        return jnp.einsum("s,sn->n", w, flat.astype(jnp.float32))
+
+    # -- ravel layout (cached per treedef/shapes/dtypes) --------------------
+
+    def layout_of(self, params_stacked) -> RavelLayout:
+        leaves, treedef = jax.tree.flatten(params_stacked)
+        key = (treedef, tuple(x.shape for x in leaves),
+               tuple(str(x.dtype) for x in leaves))
+        layout = self._layouts.get(key)
+        if layout is None:
+            shapes = tuple(x.shape[1:] for x in leaves)
+            dtypes = tuple(x.dtype for x in leaves)
+            sizes = [int(np.prod(sh, dtype=np.int64)) for sh in shapes]
+            offsets = tuple(int(o) for o in np.cumsum([0] + sizes[:-1]))
+            layout = RavelLayout(treedef, shapes, dtypes, offsets, sum(sizes))
+            self._layouts[key] = layout
+        return layout
+
+    def flatten(self, params_stacked) -> Tuple[jnp.ndarray, RavelLayout]:
+        """Ravel a site-stacked pytree into one [S, N] fp32 buffer."""
+        layout = self.layout_of(params_stacked)
+        leaves = jax.tree.leaves(params_stacked)
+        s = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [x.reshape(s, -1).astype(jnp.float32) for x in leaves], axis=1)
+        return flat, layout
+
+    def unflatten(self, flat_global: jnp.ndarray, layout: RavelLayout):
+        """[N] buffer → unstacked pytree, restoring per-leaf dtypes."""
+        leaves = []
+        for shape, dtype, ofs in zip(layout.shapes, layout.dtypes, layout.offsets):
+            size = int(np.prod(shape, dtype=np.int64))
+            leaves.append(flat_global[ofs: ofs + size].reshape(shape).astype(dtype))
+        return jax.tree.unflatten(layout.treedef, leaves)
+
+    # -- Eq. 1 entry points -------------------------------------------------
+
+    def global_mean(self, params_stacked, weights: jnp.ndarray):
+        """Σ_s weights_s · params_s (weights already normalized) → pytree."""
+        flat, layout = self.flatten(params_stacked)
+        return self.unflatten(self.reduce_flat(flat, weights), layout)
+
+    def aggregate(self, params_stacked, case_weights: jnp.ndarray,
+                  active: Optional[jnp.ndarray] = None):
+        """Eq. 1.  Returns (new stacked params, global params): the global
+        model broadcast to active sites; inactive sites keep their local
+        weights (the "disconnect" scenario)."""
+        s = jax.tree.leaves(params_stacked)[0].shape[0]
+        if active is None:
+            active = jnp.ones((s,), bool)
+        w = normalized_weights(jnp.asarray(case_weights), active)
+        global_params = self.global_mean(params_stacked, w)
+        broadcast = broadcast_to_sites(global_params, s)
+        return where_site(active, broadcast, params_stacked), global_params
+
+    def aggregate_hierarchical(self, params_stacked, case_weights: jnp.ndarray,
+                               sites_per_pod: int,
+                               active: Optional[jnp.ndarray] = None):
+        """Two-level FedAvg on the same flat buffer: per-pod partial means
+        (ICI all-reduce), then cross-pod combine (DCN) through the kernel.
+        Mathematically equal to ``aggregate`` — weighted means compose."""
+        s = jax.tree.leaves(params_stacked)[0].shape[0]
+        npods = s // sites_per_pod
+        if active is None:
+            active = jnp.ones((s,), bool)
+        flat, layout = self.flatten(params_stacked)
+        w = jnp.asarray(case_weights).astype(jnp.float32) * active.astype(jnp.float32)
+        wp = w.reshape(npods, sites_per_pod)
+        pod_tot = jnp.sum(wp, axis=1)                       # [P]
+        fp = flat.reshape(npods, sites_per_pod, layout.n)
+        pod_mean = jnp.einsum("ps,psn->pn", wp / (pod_tot[:, None] + _EPS), fp)
+        gflat = self.reduce_flat(pod_mean, pod_tot / (jnp.sum(pod_tot) + _EPS))
+        global_params = self.unflatten(gflat, layout)
+        broadcast = broadcast_to_sites(global_params, s)
+        return where_site(active, broadcast, params_stacked), global_params
+
+    def aggregate_round(self, params_stacked, round_inputs, ctx):
+        """Strategy ``post_exchange`` entry: pick flat vs hierarchical from
+        the mesh config and return (new stacked params, global params)."""
+        active = round_inputs["active"]
+        if ctx.mesh.multi_pod and ctx.hierarchical:
+            return self.aggregate_hierarchical(
+                params_stacked, ctx.case_weights, ctx.mesh.sites_per_pod, active)
+        return self.aggregate(params_stacked, ctx.case_weights, active)
+
+
+_DEFAULT_ENGINE: Optional[AggregationEngine] = None
+
+
+def get_engine() -> AggregationEngine:
+    """Process-wide default engine (shared ravel-layout cache)."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = AggregationEngine()
+    return _DEFAULT_ENGINE
+
+
+class StreamingAccumulator:
+    """O(N)-memory running Eq. 1 sum for the aggregation server.
+
+    ``fold`` folds one site's upload into the accumulator on arrival —
+    the server never holds more than one fp32 model copy, however many
+    sites report.  Incoming fp32 leaves that are *writable* (see
+    ``decode_message(..., writable=True)``) are scaled in place, so a
+    fold allocates nothing beyond transient non-fp32 casts.
+    """
+
+    def __init__(self):
+        self._treedef = None
+        self._acc: Optional[List[np.ndarray]] = None
+        self._weight_total = 0.0
+        self.count = 0
+
+    @property
+    def nbytes(self) -> int:
+        """Resident accumulator bytes (the O(N) mid-round state)."""
+        return sum(a.nbytes for a in self._acc) if self._acc else 0
+
+    @staticmethod
+    def _scaled(x, w: np.float32) -> np.ndarray:
+        x = np.asarray(x)
+        if x.dtype == np.float32 and x.flags.writeable:
+            return np.multiply(x, w, out=x)        # in place — no model copy
+        return np.multiply(x, w, dtype=np.float32)
+
+    def fold(self, tree, weight: float) -> None:
+        w = np.float32(weight)
+        leaves, treedef = jax.tree.flatten(tree)
+        if self._acc is None:
+            self._treedef = treedef
+            self._acc = [self._scaled(x, w) for x in leaves]
+        else:
+            if treedef != self._treedef:
+                raise ValueError("upload pytree structure changed mid-round")
+            for a, x in zip(self._acc, leaves):
+                np.add(a, self._scaled(x, w), out=a)
+        self._weight_total += float(weight)
+        self.count += 1
+
+    def finalize(self):
+        """Normalize by the folded weight total and return the global pytree
+        (fp32 leaves).  Resets the accumulator for the next round."""
+        if self._acc is None:
+            return None
+        inv = np.float32(1.0 / self._weight_total)
+        leaves = [np.multiply(a, inv, out=a) for a in self._acc]
+        tree = jax.tree.unflatten(self._treedef, leaves)
+        self._treedef, self._acc = None, None
+        self._weight_total, self.count = 0.0, 0
+        return tree

@@ -9,60 +9,33 @@ them from the round.
 pod first (ICI all-reduce), then across pods (DCN) — bandwidth-optimal
 when the "pod" axis is the slow link, and semantically identical because
 FedAvg's weighted mean is associative over correctly re-weighted groups.
+
+Both are thin wrappers over the shared :class:`AggregationEngine`
+(``repro.core.agg_engine``), the single implementation of Eq. 1: one
+padded [S, N] ravel, Pallas kernel on TPU/GPU, jnp reduction on CPU.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.stacking import broadcast_to_sites, weighted_mean, where_site
-
-
-def normalized_weights(case_weights: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
-    """m_i/m over the active subset; zero for inactive sites."""
-    w = case_weights.astype(jnp.float32) * active.astype(jnp.float32)
-    return w / (jnp.sum(w) + 1e-12)
+from repro.core.agg_engine import get_engine, normalized_weights  # noqa: F401
 
 
 def fedavg_aggregate(params_stacked, case_weights: jnp.ndarray,
                      active: Optional[jnp.ndarray] = None):
-    """Eq. 1. Returns the new stacked params (global model broadcast to
-    active sites; inactive sites keep their current local weights)."""
-    s = jax.tree.leaves(params_stacked)[0].shape[0]
-    if active is None:
-        active = jnp.ones((s,), bool)
-    w = normalized_weights(case_weights, active)
-    global_params = weighted_mean(params_stacked, w)
-    broadcast = broadcast_to_sites(global_params, s)
-    return where_site(active, broadcast, params_stacked), global_params
+    """Eq. 1 via the AggregationEngine.  Returns the new stacked params
+    (global model broadcast to active sites; inactive sites keep their
+    current local weights) and the global params."""
+    return get_engine().aggregate(params_stacked, case_weights, active)
 
 
 def hierarchical_aggregate(params_stacked, case_weights: jnp.ndarray,
                            sites_per_pod: int,
                            active: Optional[jnp.ndarray] = None):
-    """Two-level FedAvg: per-pod partial means, then cross-pod combine.
-
-    Mathematically equal to ``fedavg_aggregate`` (weighted means compose);
-    structurally it lowers to an in-pod all-reduce followed by a much
-    smaller cross-pod exchange, matching how a real deployment would nest
-    gRPC aggregation servers per region.
-    """
-    s = jax.tree.leaves(params_stacked)[0].shape[0]
-    npods = s // sites_per_pod
-    if active is None:
-        active = jnp.ones((s,), bool)
-    w = (case_weights.astype(jnp.float32) * active.astype(jnp.float32))
-    wp = w.reshape(npods, sites_per_pod)
-    pod_tot = jnp.sum(wp, axis=1)                          # [P]
-
-    def agg(x):
-        xp = x.astype(jnp.float32).reshape((npods, sites_per_pod) + x.shape[1:])
-        pod_mean = jnp.einsum("ps,ps...->p...", wp / (pod_tot[:, None] + 1e-12), xp)
-        g = jnp.einsum("p,p...->...", pod_tot / (jnp.sum(pod_tot) + 1e-12), pod_mean)
-        return g.astype(x.dtype)
-
-    global_params = jax.tree.map(agg, params_stacked)
-    broadcast = broadcast_to_sites(global_params, s)
-    return where_site(active, broadcast, params_stacked), global_params
+    """Two-level FedAvg via the AggregationEngine: per-pod partial means,
+    then cross-pod combine — mathematically equal to ``fedavg_aggregate``
+    (weighted means compose)."""
+    return get_engine().aggregate_hierarchical(
+        params_stacked, case_weights, sites_per_pod, active)

@@ -168,5 +168,6 @@ def build_fl_round(ctx: FLContext, remat_local: bool = False):
 def global_model(fl_state, ctx: FLContext):
     """Case-weighted global model from the current stacked params
     (what gets served / checkpointed as 'the' model)."""
+    from repro.core.agg_engine import get_engine
     w = ctx.case_weights / jnp.sum(ctx.case_weights)
-    return stacking.weighted_mean(fl_state["params"], w)
+    return get_engine().global_mean(fl_state["params"], w)

@@ -1,7 +1,7 @@
 """FedAvg (McMahan et al. 2017) — paper Eq. 1."""
 from __future__ import annotations
 
-from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
+from repro.core.agg_engine import get_engine
 from repro.core.strategies.base import Strategy, register
 
 
@@ -10,11 +10,6 @@ class FedAvg(Strategy):
     name = "fedavg"
 
     def post_exchange(self, fl_state, round_inputs, ctx):
-        active = round_inputs["active"]
-        if ctx.mesh.multi_pod and ctx.hierarchical:
-            params, global_params = hierarchical_aggregate(
-                fl_state["params"], ctx.case_weights, ctx.mesh.sites_per_pod, active)
-        else:
-            params, global_params = fedavg_aggregate(
-                fl_state["params"], ctx.case_weights, active)
+        params, _global_params = get_engine().aggregate_round(
+            fl_state["params"], round_inputs, ctx)
         return {**fl_state, "params": params}

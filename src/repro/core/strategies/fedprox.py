@@ -9,8 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
-from repro.core.stacking import weighted_mean
+from repro.core.agg_engine import get_engine
 from repro.core.strategies.base import Strategy, register
 
 
@@ -27,21 +26,15 @@ class FedProx(Strategy):
 
     def init_state(self, params_stacked, ctx):
         # the round-0 global model is the shared initialization
-        import jax.numpy as jnp
         s = jax.tree.leaves(params_stacked)[0].shape[0]
         w = jnp.ones((s,), jnp.float32) / s
-        return {"global": weighted_mean(params_stacked, w)}
+        return {"global": get_engine().global_mean(params_stacked, w)}
 
     def local_loss_extra(self, params_site, strat_state, ctx):
         return prox_term(params_site, strat_state["global"], ctx.fed.prox_mu)
 
     def post_exchange(self, fl_state, round_inputs, ctx):
-        active = round_inputs["active"]
-        if ctx.mesh.multi_pod and ctx.hierarchical:
-            params, global_params = hierarchical_aggregate(
-                fl_state["params"], ctx.case_weights, ctx.mesh.sites_per_pod, active)
-        else:
-            params, global_params = fedavg_aggregate(
-                fl_state["params"], ctx.case_weights, active)
+        params, global_params = get_engine().aggregate_round(
+            fl_state["params"], round_inputs, ctx)
         return {**fl_state, "params": params,
                 "strategy": {"global": global_params}}

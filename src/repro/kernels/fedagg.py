@@ -7,17 +7,29 @@ single fused multiply-accumulate per element — no intermediate global
 buffers per site (which a naive ``sum`` of scaled pytrees would
 allocate).
 
-  grid = (N / block_n); each cell loads the [S, block_n] slab into VMEM,
-  reduces against the [S] weight vector on the VPU, and writes
+  grid = (ceil(N / block_n)); each cell loads the [S, block_n] slab into
+  VMEM, reduces against the [S] weight vector on the VPU, and writes
   [block_n] once.
+
+Arbitrary ``N`` is supported: the buffer is zero-padded up to a block
+multiple (zero columns contribute nothing and are sliced off the
+output).  ``interpret`` defaults to compiled on TPU/GPU and to the
+Pallas interpreter elsewhere.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_LANE = 128   # TPU lane width — pad so compiled blocks tile cleanly
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
 
 
 def _fedagg_kernel(x_ref, w_ref, o_ref):
@@ -27,19 +39,25 @@ def _fedagg_kernel(x_ref, w_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def fedagg(stacked, weights, *, block_n: int = 65536, interpret: bool = True):
+def fedagg(stacked, weights, *, block_n: int = 65536,
+           interpret: Optional[bool] = None):
     """stacked: [S, N] (flattened params); weights: [S] -> [N]."""
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
     s, n = stacked.shape
-    block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
-    return pl.pallas_call(
+    block_n = min(block_n, _round_up(n, _LANE))
+    padded = _round_up(n, block_n)
+    if padded != n:
+        stacked = jnp.pad(stacked, ((0, 0), (0, padded - n)))
+    out = pl.pallas_call(
         _fedagg_kernel,
-        grid=(n // block_n,),
+        grid=(padded // block_n,),
         in_specs=[
             pl.BlockSpec((s, block_n), lambda i: (0, i)),
             pl.BlockSpec((s,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded,), stacked.dtype),
         interpret=interpret,
     )(stacked, weights)
+    return out[:n] if padded != n else out

@@ -18,7 +18,7 @@ from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
@@ -44,24 +44,20 @@ def fedagg(stacked_params, weights, *, block_n: int = 65536,
     return _fedagg(stacked_params, weights, block_n=block_n, interpret=interp)
 
 
+_PYTREE_ENGINES = {}
+
+
 def fedagg_pytree(stacked_tree, weights, *, interpret: Optional[bool] = None):
     """Eq. 1 over a site-stacked pytree: flatten → one streaming kernel pass
-    → unflatten.  Pads the flat buffer to the kernel's block multiple."""
-    leaves, treedef = jax.tree.flatten(stacked_tree)
-    s = leaves[0].shape[0]
-    flat = jnp.concatenate([x.reshape(s, -1).astype(jnp.float32) for x in leaves], axis=1)
-    n = flat.shape[1]
-    block = 65536 if n >= 65536 else n
-    pad = (-n) % block
-    if pad:
-        flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    out = fedagg(flat, weights, block_n=block, interpret=interpret)[:n]
-    res, ofs = [], 0
-    for x in leaves:
-        size = x[0].size
-        res.append(out[ofs: ofs + size].reshape(x.shape[1:]).astype(x.dtype))
-        ofs += size
-    return jax.tree.unflatten(treedef, res)
+    → unflatten.  Delegates to the AggregationEngine (forced onto the
+    Pallas path), which pads the flat buffer to the kernel's block
+    multiple and caches the ravel layout."""
+    from repro.core.agg_engine import AggregationEngine
+    eng = _PYTREE_ENGINES.get(interpret)
+    if eng is None:
+        eng = _PYTREE_ENGINES.setdefault(
+            interpret, AggregationEngine(use_pallas=True, interpret=interpret))
+    return eng.global_mean(stacked_tree, weights)
 
 
 def mamba_scan(dt, b_mat, c_mat, x, log_a, *, chunk: int = 128,

@@ -137,13 +137,10 @@ def build_train(arch_id: str, shape_name: str = "train_4k",
             "mu": sh.param_shardings(mesh, state_abs["opt"]["mu"], stacked_site=True),
             "nu": sh.param_shardings(mesh, state_abs["opt"]["nu"], stacked_site=True),
         }
-        out["strategy"] = jax.tree.map(
-            lambda _: NamedSharding(mesh, P()), state_abs["strategy"],
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-        if state_abs["strategy"]:
-            # fedprox global model: unstacked params — shard like params sans site
-            out["strategy"] = {"global": sh.param_shardings(
-                mesh, state_abs["strategy"]["global"], stacked_site=False)}
+        # strategy state entries are unstacked model-shaped pytrees (e.g.
+        # fedprox's global model) — shard like params sans the site axis
+        out["strategy"] = {k: sh.param_shardings(mesh, v, stacked_site=False)
+                           for k, v in state_abs["strategy"].items()}
         out["round"] = NamedSharding(mesh, P())
         return out
 

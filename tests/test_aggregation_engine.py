@@ -1,0 +1,211 @@
+"""AggregationEngine: the single Eq. 1 implementation, on both backends.
+
+The reference is the original per-leaf einsum math (``stacking.
+weighted_mean`` + ``where_site``), kept independent of the engine so the
+comparison is meaningful.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agg_engine import (AggregationEngine, StreamingAccumulator,
+                                   get_engine, normalized_weights)
+from repro.core.aggregation import fedavg_aggregate, hierarchical_aggregate
+from repro.core.stacking import broadcast_to_sites, weighted_mean, where_site
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _mixed_tree(s, seed=0):
+    """Odd leaf sizes (N = 13·3 + 5 + 111 + 1 = 156... deliberately not a
+    block multiple) and mixed dtypes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "conv": {"w": jax.random.normal(ks[0], (s, 13, 3)),
+                 "b": jax.random.normal(ks[1], (s, 5)).astype(jnp.float16)},
+        "head": jax.random.normal(ks[2], (s, 111)).astype(jnp.bfloat16),
+        "scale": (jax.random.normal(ks[3], (s, 1)),),
+    }
+
+
+def _reference(tree, cw, active):
+    w = normalized_weights(cw, active)
+    g = weighted_mean(tree, w)
+    new = where_site(active, broadcast_to_sites(g, cw.shape[0]), tree)
+    return new, g
+
+
+def _assert_trees_close(a, b, rtol=1e-5, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("s", [2, 4, 7])
+@pytest.mark.parametrize("engine_kw", [
+    {"use_pallas": False},
+    {"use_pallas": True, "interpret": True, "block_n": 64},   # forces padding
+])
+def test_engine_matches_reference(s, engine_kw):
+    rng = np.random.default_rng(s)
+    tree = _mixed_tree(s, seed=s)
+    cw = jnp.asarray(rng.uniform(0.5, 3.0, s), jnp.float32)
+    active = jnp.asarray(rng.random(s) > 0.3)
+    if not bool(active.any()):
+        active = jnp.ones((s,), bool)
+    eng = AggregationEngine(**engine_kw)
+    new, g = eng.aggregate(tree, cw, active)
+    ref_new, ref_g = _reference(tree, cw, active)
+    # fp16/bf16 leaves: tolerance set by the half-precision cast-back
+    _assert_trees_close(g, ref_g, rtol=1e-2, atol=1e-2)
+    _assert_trees_close(new, ref_new, rtol=1e-2, atol=1e-2)
+    # fp32 leaves must match tightly
+    np.testing.assert_allclose(np.asarray(g["conv"]["w"]),
+                               np.asarray(ref_g["conv"]["w"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path_odd_n():
+    """Kernel path (padded, interpret) ≡ jnp fallback to ≤1e-5 when N is
+    not a multiple of block_n."""
+    s, n = 5, 1000                                  # 1000 % 128 != 0
+    x = {"w": jax.random.normal(KEY, (s, n))}
+    cw = jnp.asarray(np.random.default_rng(1).uniform(0.1, 2.0, s), jnp.float32)
+    jnp_eng = AggregationEngine(use_pallas=False)
+    pal_eng = AggregationEngine(use_pallas=True, interpret=True, block_n=128)
+    _, gj = jnp_eng.aggregate(x, cw)
+    _, gp = pal_eng.aggregate(x, cw)
+    np.testing.assert_allclose(np.asarray(gp["w"]), np.asarray(gj["w"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("s,spp", [(4, 2), (8, 4)])
+def test_hierarchical_equals_flat_through_engine(s, spp):
+    tree = _mixed_tree(s, seed=s)
+    rng = np.random.default_rng(s)
+    cw = jnp.asarray(rng.uniform(0.5, 2.0, s), jnp.float32)
+    active = jnp.asarray([True] * (s - 1) + [False])
+    flat_new, gf = fedavg_aggregate(tree, cw, active)
+    hier_new, gh = hierarchical_aggregate(tree, cw, sites_per_pod=spp,
+                                          active=active)
+    _assert_trees_close(gf, gh, rtol=1e-2, atol=1e-2)
+    _assert_trees_close(flat_new, hier_new, rtol=1e-2, atol=1e-2)
+
+
+def test_wrappers_route_through_engine():
+    """fedavg_aggregate is literally the shared engine (one implementation)."""
+    tree = {"w": jnp.arange(12.0).reshape(4, 3)}
+    cw = jnp.array([1.0, 2.0, 3.0, 4.0])
+    new_w, g_w = fedavg_aggregate(tree, cw)
+    new_e, g_e = get_engine().aggregate(tree, cw)
+    np.testing.assert_array_equal(np.asarray(g_w["w"]), np.asarray(g_e["w"]))
+    np.testing.assert_array_equal(np.asarray(new_w["w"]), np.asarray(new_e["w"]))
+
+
+def test_engine_inside_jit():
+    """post_exchange runs under jit — the engine must be traceable."""
+    tree = _mixed_tree(4, seed=9)
+    cw = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+
+    @jax.jit
+    def agg(t, w, active):
+        return get_engine().aggregate(t, w, active)[1]
+
+    g = agg(tree, cw, jnp.ones((4,), bool))
+    ref = _reference(tree, cw, jnp.ones((4,), bool))[1]
+    _assert_trees_close(g, ref, rtol=1e-2, atol=1e-2)
+
+
+def test_layout_cache_reused():
+    eng = AggregationEngine(use_pallas=False)
+    tree = _mixed_tree(3)
+    l1 = eng.layout_of(tree)
+    l2 = eng.layout_of(tree)
+    assert l1 is l2
+    assert l1.n == sum(x[0].size for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# StreamingAccumulator / AggregationServer O(N) state
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_accumulator_matches_weighted_average():
+    rng = np.random.default_rng(0)
+    trees = [{"a": rng.normal(size=(17,)).astype(np.float32),
+              "b": {"c": rng.normal(size=(4, 3)).astype(np.float16)}}
+             for _ in range(5)]
+    ws = [1.0, 2.0, 0.5, 3.0, 1.5]
+    tot = sum(ws)
+    # expectations first: fold() adopts writable fp32 leaves in place
+    want_a = sum(np.float32(w / tot) * t["a"] for t, w in zip(trees, ws))
+    want_c = sum(np.float32(w / tot) * t["b"]["c"].astype(np.float32)
+                 for t, w in zip(trees, ws))
+    acc = StreamingAccumulator()
+    for t, w in zip(trees, ws):
+        acc.fold(t, w)
+    g = acc.finalize()
+    np.testing.assert_allclose(g["a"], want_a, rtol=1e-5)
+    np.testing.assert_allclose(g["b"]["c"], want_c, rtol=1e-3)
+    assert acc.count == 0 and acc.nbytes == 0        # reset for next round
+
+
+def test_accumulator_folds_writable_fp32_in_place():
+    x = np.arange(6, dtype=np.float32)
+    acc = StreamingAccumulator()
+    acc.fold({"w": x}, 2.0)
+    # the writable fp32 upload was scaled in place and adopted (no copy)
+    assert np.shares_memory(acc._acc[0], x)
+
+
+def test_aggregation_server_holds_one_accumulator_mid_round():
+    """O(N) server state: after S-1 uploads the server retains exactly one
+    fp32 model-sized accumulator, not S decoded uploads."""
+    from repro.comms.coordinator import AggregationServer
+    from repro.comms.peer import Peer
+
+    n = 1024
+    model_bytes = n * 4                               # fp32 accumulator
+    agg = AggregationServer("127.0.0.1", 0, num_sites=4,
+                            case_weights=[1.0, 2.0, 3.0, 4.0])
+    peers = [Peer(i) for i in range(4)]
+    try:
+        for i in range(3):                            # 3 of 4 sites report
+            peers[i].upload(agg.addr, {"w": np.full(n, float(i), np.float32)}, 1)
+        with agg._lock:
+            assert agg._acc.count == 3
+            assert agg._acc.nbytes == model_bytes     # one model, not three
+            assert not hasattr(agg, "_uploads")       # the O(S·N) dict is gone
+        peers[3].upload(agg.addr, {"w": np.full(n, 3.0, np.float32)}, 1)
+        g = peers[0].download(agg.addr, 1)
+        want = sum(i * (i + 1) for i in range(4)) / 10.0
+        np.testing.assert_allclose(g["w"], want, rtol=1e-6)
+    finally:
+        for p in peers:
+            p.close()
+        agg.stop()
+
+
+def test_aggregation_server_ignores_duplicate_upload():
+    from repro.comms.coordinator import AggregationServer
+    from repro.comms.peer import Peer
+
+    agg = AggregationServer("127.0.0.1", 0, num_sites=2)
+    peers = [Peer(i) for i in range(2)]
+    try:
+        peers[0].upload(agg.addr, {"w": np.full(3, 2.0, np.float32)}, 1)
+        peers[0].upload(agg.addr, {"w": np.full(3, 2.0, np.float32)}, 1)
+        with agg._lock:
+            assert agg._acc.count == 1                # not double-folded
+        peers[1].upload(agg.addr, {"w": np.full(3, 4.0, np.float32)}, 1)
+        g = peers[0].download(agg.addr, 1)
+        np.testing.assert_allclose(g["w"], 3.0, rtol=1e-6)
+    finally:
+        for p in peers:
+            p.close()
+        agg.stop()

@@ -15,6 +15,37 @@ def test_codec_header_magic():
         decode_message(b"XXXX" + data[4:])
 
 
+def test_codec_decode_readonly_vs_writable():
+    """Default decode returns zero-copy read-only views; ``writable=True``
+    returns owned buffers an in-place consumer can mutate (regression for
+    'assignment destination is read-only' in the streaming server)."""
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    data = encode_message("model", {"site": 0}, tree)
+    _, _, ro = decode_message(data)
+    with pytest.raises(ValueError, match="read-only"):
+        ro["w"] *= 2.0
+    _, _, rw = decode_message(data, writable=True)
+    rw["w"] *= 2.0                                   # in place, no error
+    np.testing.assert_array_equal(rw["w"], tree["w"] * 2.0)
+    # the writable copy does not alias the wire buffer
+    _, _, again = decode_message(data)
+    np.testing.assert_array_equal(again["w"], tree["w"])
+
+
+def test_download_timeout_returns_error_not_none():
+    """A download that outwaits the round must fail loudly at the server
+    (error reply → RuntimeError at the client), not hand back tree=None."""
+    agg = AggregationServer("127.0.0.1", 0, num_sites=2, download_timeout=0.2)
+    p = Peer(0)
+    try:
+        p.upload(agg.addr, {"w": np.ones(3, np.float32)}, 1)  # 1 of 2 sites
+        with pytest.raises(RuntimeError, match="timeout"):
+            p.download(agg.addr, 1)
+    finally:
+        p.close()
+        agg.stop()
+
+
 def test_centralized_roundtrip_weighted():
     """Upload from 4 sites with case weights -> download == Eq. 1 average."""
     agg = AggregationServer("127.0.0.1", 0, num_sites=4,

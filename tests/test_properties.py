@@ -1,4 +1,10 @@
 """Hypothesis property-based tests on the system's invariants."""
+import pytest
+
+# optional dev extra (see pyproject.toml): skip cleanly instead of dying
+# at collection when hypothesis isn't installed
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
