@@ -1,4 +1,9 @@
-"""Shared harness for the paper-figure benchmarks (CPU-scale synthetic)."""
+"""Shared bits for the paper-figure benchmarks (CPU-scale synthetic).
+
+The FL execution itself lives behind :class:`repro.api.FederatedJob` —
+each benchmark declares jobs and reads their :class:`JobResult`; no
+benchmark hand-rolls a round loop.
+"""
 from __future__ import annotations
 
 import sys
@@ -6,81 +11,5 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import FederationConfig, MeshConfig
-from repro.core import federation as F
-from repro.core.dropout import SiteAvailability
-from repro.models import sanet as sanet_mod
-from repro.optim import adamw
-
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 ARTIFACTS.mkdir(exist_ok=True)
-
-
-def make_sanet_ctx(strategy, sites, case_weights=None, lr=3e-3, task="dose",
-                   scenario="disconnect"):
-    scfg = (sanet_mod.SANetConfig(in_channels=4, out_channels=1, base_filters=8,
-                                  num_levels=2, task="dose") if task == "dose"
-            else sanet_mod.SANetConfig(in_channels=2, out_channels=3,
-                                       base_filters=8, num_levels=2,
-                                       task="segmentation"))
-    if task == "dose":
-        loss = lambda p, b: sanet_mod.dose_loss(p, b, scfg)
-
-        def logits_fn(params, batch):
-            pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
-            # dose regression viewed as binary high/low for DCML regions
-            logits = jnp.concatenate([pred, -pred], axis=-1)
-            labels = (batch["dose"][..., 0] > 0.5).astype(jnp.int32)
-            return logits, labels
-    else:
-        loss = lambda p, b: sanet_mod.segmentation_loss(p, b, scfg)
-
-        def logits_fn(params, batch):
-            pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
-            return pred, batch["labels"]
-
-    fed = FederationConfig(num_sites=sites, strategy=strategy,
-                           site_case_counts=case_weights,
-                           dropout_scenario=scenario)
-    ctx = F.FLContext(
-        fed=fed, mesh=MeshConfig(sites_per_pod=sites, fsdp=1,
-                                 data_axis_size=sites),
-        case_weights=jnp.asarray(fed.case_weights()),
-        loss_fn=loss, logits_fn=logits_fn, optimizer=adamw(lr),
-        grad_clip=1.0, dcml_lr=lr)
-    return ctx, scfg
-
-
-def run_fl(ctx, scfg, gen, rounds, batch=2, local_steps=1, max_dropout=0,
-           seed=0, eval_fn=None, pool_sites=False):
-    """Generic FL loop; returns (loss history, final state, eval results).
-
-    ``pool_sites=True`` implements the paper's Pooled baseline faithfully:
-    the SAME per-site heterogeneous data is generated, then concatenated
-    into one site's batch (centralized aggregation of all site data).
-    """
-    init_fn = lambda k: sanet_mod.sanet_init(k, scfg)
-    state = F.init_fl_state(ctx, init_fn, jax.random.PRNGKey(seed))
-    rnd = jax.jit(F.build_fl_round(ctx))
-    avail = SiteAvailability(ctx.fed.num_sites, max_dropout, seed=seed + 7)
-    rng = np.random.default_rng(seed)
-    history = []
-    for r in range(rounds):
-        b = jax.tree.map(jnp.asarray, gen.stacked_batches(r, local_steps, batch))
-        if pool_sites:
-            # [S, K, B, ...] -> [1, K, S*B, ...]
-            b = jax.tree.map(
-                lambda x: jnp.reshape(jnp.swapaxes(x, 0, 1),
-                                      (1, x.shape[1], -1) + x.shape[3:]), b)
-        ri = F.make_round_inputs(ctx, avail, rng, r)
-        if ctx.fed.strategy == "gcml":
-            ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
-            ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
-        state, m = rnd(state, b, ri)
-        history.append(float(jnp.mean(m["loss"])))
-    evals = eval_fn(state, ctx) if eval_fn else None
-    return history, state, evals

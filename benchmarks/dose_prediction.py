@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ARTIFACTS, make_sanet_ctx, run_fl
-from repro.core import federation as F
+from benchmarks.common import ARTIFACTS
+from repro.api import FederatedJob, TaskConfig
 from repro.core.stacking import site_slice
 from repro.data.partition import OPENKBP_IID_TRAIN, OPENKBP_NONIID_TRAIN
 from repro.data.synthetic import DoseTaskGenerator
@@ -53,34 +53,34 @@ def run(quick: bool = False):
         # each site a case pool proportional to its count and weighting
         # aggregation with m_i (Eq. 1)
         pools = None if dist == "iid" else tuple(max(c // 4, 1) for c in counts)
+        # every strategy (incl. Pooled, which concatenates the site axis)
+        # trains on the SAME per-site data
+        task = TaskConfig(kind="dose", volume=VOL, num_oars=2, sites=SITES,
+                          heterogeneity=0.0, seed=1, batch=2, site_pools=pools)
         for strategy in ["pooled", "fedavg", "individual"]:
             pooled = strategy == "pooled"
-            sites = 1 if pooled else SITES
-            cw = None if pooled else tuple(counts)
-            ctx, scfg = make_sanet_ctx(strategy, sites, case_weights=cw)
-            # pooled sees the SAME per-site data, concatenated
-            gen = DoseTaskGenerator(volume=VOL, num_oars=2,
-                                    num_sites=SITES, heterogeneity=0.0,
-                                    seed=1, site_pools=pools)
-            hist, state, _ = run_fl(ctx, scfg, gen, rounds, batch=2,
-                                    pool_sites=pooled)
+            job = FederatedJob(
+                task=task, strategy=strategy, rounds=rounds, lr=3e-3,
+                case_counts=None if pooled else tuple(counts))
+            res = job.run()
+            scfg = job.task.model_config()
             if strategy == "individual":
                 site_scores = []
-                for s in range(sites):
-                    ds, dv = _scores(site_slice(state["params"], s), scfg, test)
+                for s in range(SITES):
+                    ds, dv = _scores(site_slice(res.state["params"], s),
+                                     scfg, test)
                     site_scores.append({"site": s, "cases": counts[s],
                                         "dose": ds, "dvh": dv})
                 per_site[dist] = site_scores
                 ds = float(np.mean([x["dose"] for x in site_scores]))
                 dv = float(np.mean([x["dvh"] for x in site_scores]))
             else:
-                g = F.global_model(state, ctx)
-                ds, dv = _scores(g, scfg, test)
+                ds, dv = _scores(res.global_params, scfg, test)
             key = f"{dist}:{strategy}"
             results[key] = {"dose_score": ds, "dvh_score": dv,
-                            "final_loss": hist[-1], "loss_curve": hist}
+                            "final_loss": res.final_loss,
+                            "loss_curve": res.losses}
     out = {"figure": "Fig 7/8/9", "results": results, "per_site": per_site}
-    (ARTIFACTS / "dose_prediction.json").write_text(json.dumps(out, indent=2))
     # paper-claim checks (qualitative ordering)
     checks = {
         "fedavg_beats_individual_iid":

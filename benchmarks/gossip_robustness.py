@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ARTIFACTS, make_sanet_ctx, run_fl
-from repro.core import federation as F
+from benchmarks.common import ARTIFACTS
+from repro.api import FederatedJob, TaskConfig
 from repro.data.synthetic import SegTaskGenerator
 from repro.metrics import dice_coefficient, one_way_anova
 from repro.models import sanet as sanet_mod
@@ -35,23 +35,22 @@ def run(quick: bool = False):
     test_gen = SegTaskGenerator(volume=VOL, in_channels=2, num_classes=3,
                                 num_sites=1, seed=777)
     test = jax.tree.map(jnp.asarray, test_gen.sample(0, 0, 10))
+    task = TaskConfig(kind="seg", volume=VOL, sites=SITES, heterogeneity=0.2,
+                      seed=4, batch=2, site_pools=(18, 15, 12, 10, 8))
     groups = {}
     for scenario in ["disconnect", "shutdown"]:
         for n_max in [0, 1, 2]:
             if n_max == 0 and scenario == "shutdown":
                 continue                       # identical to disconnect
-            ctx, scfg = make_sanet_ctx("gcml", SITES, task="seg", lr=5e-3,
-                                       scenario=scenario)
-            gen = SegTaskGenerator(volume=VOL, in_channels=2, num_classes=3,
-                                   num_sites=SITES, heterogeneity=0.2, seed=4,
-                                   site_pools=(18, 15, 12, 10, 8))
-            hist, state, _ = run_fl(ctx, scfg, gen, rounds, batch=2,
-                                    max_dropout=n_max, seed=11)
-            g = F.global_model(state, ctx)
-            dscs = _dsc_per_case(g, scfg, test)
+            job = FederatedJob(task=task, strategy="gcml", rounds=rounds,
+                               lr=5e-3, max_dropout=n_max,
+                               dropout_scenario=scenario, seed=11)
+            res = job.run()
+            scfg = job.task.model_config()
+            dscs = _dsc_per_case(res.global_params, scfg, test)
             key = f"{scenario}:{n_max * 20}%"
             groups[key] = {"dsc": dscs, "mean_dsc": float(np.mean(dscs)),
-                           "final_loss": hist[-1]}
+                           "final_loss": res.final_loss}
     f, p = one_way_anova([np.array(v["dsc"]) for v in groups.values()])
     out = {"figure": "Fig 15", "groups": {k: {kk: vv for kk, vv in v.items()
                                               if kk != "dsc"}

@@ -7,13 +7,10 @@ round-time model.
 from __future__ import annotations
 
 import json
-import time
 
-import numpy as np
-
-from benchmarks.common import ARTIFACTS, make_sanet_ctx, run_fl
+from benchmarks.common import ARTIFACTS
+from repro.api import FederatedJob, TaskConfig
 from repro.data.partition import BRATS_SITE_CASES
-from repro.data.synthetic import SegTaskGenerator
 
 SITES = 8
 VOL = (16, 16, 16)
@@ -22,29 +19,25 @@ VOL = (16, 16, 16)
 def run(quick: bool = False):
     rounds = 6 if quick else 14
     results = {}
+    task = TaskConfig(kind="seg", volume=VOL, sites=SITES, heterogeneity=0.2,
+                      seed=2, batch=2,
+                      site_pools=tuple(max(c // 6, 1) for c in BRATS_SITE_CASES))
     for strategy in ["fedavg", "fedprox", "individual", "pooled"]:
         pooled = strategy == "pooled"
-        sites = 1 if pooled else SITES
-        cw = None if pooled else tuple(BRATS_SITE_CASES)
-        ctx, scfg = make_sanet_ctx(strategy, sites, case_weights=cw,
-                                   task="seg", lr=5e-3)
-        gen = SegTaskGenerator(volume=VOL, in_channels=2, num_classes=3,
-                               num_sites=SITES, heterogeneity=0.2, seed=2,
-                               site_pools=tuple(max(c // 6, 1)
-                                                for c in BRATS_SITE_CASES))
-        t0 = time.time()
-        hist, state, _ = run_fl(ctx, scfg, gen, rounds, batch=2,
-                                pool_sites=pooled)
-        wall = time.time() - t0
-        results[strategy] = {"loss_curve": hist, "final_loss": hist[-1],
-                             "wall_s": wall}
+        job = FederatedJob(
+            task=task, strategy=strategy, rounds=rounds, lr=5e-3,
+            case_counts=None if pooled else tuple(BRATS_SITE_CASES))
+        res = job.run()
+        results[strategy] = {"loss_curve": res.losses,
+                             "final_loss": res.final_loss,
+                             "wall_s": res.wall_s}
 
     # model-exchange bytes per round (the NVFlare-efficiency axis we CAN
     # measure): FedAvg/FedProx move 2*N_params per site per round
     # (upload+download); GCML moves N_params per pair.
     import jax
     from repro.models.sanet import sanet_init
-    params = sanet_init(jax.random.PRNGKey(0), make_sanet_ctx("fedavg", 2)[1])
+    params = sanet_init(jax.random.PRNGKey(0), task.model_config())
     n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     comm = {
         "param_bytes": int(n_bytes),
@@ -53,7 +46,6 @@ def run(quick: bool = False):
         "gcml_bytes_per_round": int((SITES // 2) * n_bytes),
     }
     out = {"figure": "Fig 11/12", "results": results, "comm": comm}
-    (ARTIFACTS / "strategy_compare.json").write_text(json.dumps(out, indent=2))
     checks = {
         "fedavg_beats_individual":
             results["fedavg"]["final_loss"] < results["individual"]["final_loss"],

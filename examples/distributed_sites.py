@@ -1,12 +1,14 @@
 """Real multi-process federation over the TCP comms stack (paper §II.D).
 
-Each site runs in its own OS process with its own model, identified by
-IP:port; round trips go through the AggregationServer exactly as the
-paper's gRPC deployment does (upload → weighted aggregate → download).
+The SAME ``FederatedJob`` that runs the single-process simulator runs
+here with ``transport="tcp"``: each site becomes its own OS process with
+its own model, identified by IP:port; round trips go through the
+``AggregationServer`` exactly as the paper's gRPC deployment does
+(upload → weighted aggregate → download).
 
     PYTHONPATH=src python examples/distributed_sites.py
 """
-import multiprocessing as mp
+import os
 import sys
 from pathlib import Path
 
@@ -14,67 +16,28 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-SITES, ROUNDS = 4, 8
-
-
-def site_process(site_id: int, server_addr, result_q):
-    import jax
-    import jax.numpy as jnp
-    from repro.comms.peer import Peer
-    from repro.configs.registry import get_arch
-    from repro.models import transformer as T
-    from repro.optim import adamw, apply_updates
-    from repro.data.synthetic import TokenTaskGenerator
-
-    cfg = get_arch("smollm-135m").reduced()
-    gen = TokenTaskGenerator(vocab_size=cfg.vocab_size, num_sites=SITES,
-                             heterogeneity=0.4, seed=0)
-    params = T.init(jax.random.PRNGKey(0), cfg)       # shared init (paper)
-    opt = adamw(5e-3)
-    opt_state = opt.init(params)
-    peer = Peer(site_id)
-
-    @jax.jit
-    def step(p, s, batch):
-        (loss, _), g = jax.value_and_grad(
-            lambda q: T.next_token_loss(q, batch, cfg), has_aux=True)(p)
-        upd, s = opt.update(g, s, p)
-        return apply_updates(p, upd), s, loss
-
-    losses = []
-    for r in range(1, ROUNDS + 1):
-        toks = jnp.asarray(gen.sample(site_id, r, 4, 32))
-        params, opt_state, loss = step(params, opt_state, {"tokens": toks})
-        losses.append(float(loss))
-        host = jax.tree.map(np.asarray, params)
-        peer.upload(server_addr, host, r)             # gRPC-equivalent upload
-        new_global = peer.download(server_addr, r)    # broadcast back
-        params = jax.tree.map(jnp.asarray, new_global)
-    peer.close()
-    result_q.put((site_id, losses))
+SITES = int(os.environ.get("FEDKBP_SITES", "4"))
+ROUNDS = int(os.environ.get("FEDKBP_ROUNDS", "8"))
 
 
 def main():
-    from repro.comms.coordinator import AggregationServer
-    server = AggregationServer("127.0.0.1", 0, num_sites=SITES)
-    q = mp.Queue()
-    procs = [mp.Process(target=site_process, args=(i, server.addr, q))
-             for i in range(SITES)]
-    for p in procs:
-        p.start()
-    results = sorted(q.get(timeout=300) for _ in range(SITES))
-    for p in procs:
-        p.join(timeout=30)
-    server.stop()
-    for site, losses in results:
-        print(f"site {site}: losses {['%.3f' % l for l in losses]}")
-    first = np.mean([np.mean(l[:2]) for _, l in results])
-    last = np.mean([np.mean(l[-2:]) for _, l in results])
+    from repro.api import FederatedJob, TaskConfig
+
+    job = FederatedJob(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=SITES,
+                        heterogeneity=0.4, batch=4, seq=32),
+        strategy="fedavg", rounds=ROUNDS, lr=5e-3, transport="tcp")
+    res = job.run()
+
+    losses = np.array([h["per_site_loss"] for h in res.history])   # [R, S]
+    for site in range(SITES):
+        print(f"site {site}: losses {['%.3f' % l for l in losses[:, site]]}")
+    first = float(np.mean(losses[:2]))
+    last = float(np.mean(losses[-2:]))
     print(f"mean loss {first:.4f} -> {last:.4f} across {SITES} real processes")
     assert last < first + 0.02, (first, last)
     print("OK — multi-process FedAvg over TCP (the paper's deployment shape)")
 
 
 if __name__ == "__main__":
-    mp.set_start_method("spawn")
     main()

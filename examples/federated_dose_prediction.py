@@ -2,8 +2,8 @@
 3D dose prediction with SA-Net on OpenKBP-shaped synthetic volumes.
 
 Runs the paper's three-way comparison — Pooled vs FedAvg vs Individual —
-under the non-IID site split (Fig 6 case counts) and reports dose/DVH
-scores on a common test set.
+under the non-IID site split (Fig 6 case counts) as three declarative
+``FederatedJob``s and reports dose scores on a common test set.
 
     PYTHONPATH=src python examples/federated_dose_prediction.py [--rounds N]
 """
@@ -12,14 +12,12 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_sanet_ctx, run_fl
-from repro.core import federation as F
+from repro.api import FederatedJob, TaskConfig
 from repro.data.partition import OPENKBP_NONIID_TRAIN
 from repro.data.synthetic import DoseTaskGenerator
 from repro.metrics import dose_score
@@ -35,19 +33,21 @@ test = jax.tree.map(jnp.asarray,
                                       seed=999).sample(0, 0, 8))
 
 for strategy in ["pooled", "fedavg", "individual"]:
-    sites = 1 if strategy == "pooled" else 8
-    cw = None if strategy == "pooled" else tuple(OPENKBP_NONIID_TRAIN)
-    ctx, scfg = make_sanet_ctx(strategy, sites, case_weights=cw)
-    gen = DoseTaskGenerator(volume=VOL, num_oars=2, num_sites=sites,
-                            heterogeneity=0.0 if sites == 1 else 0.6, seed=1)
-    hist, state, _ = run_fl(ctx, scfg, gen, args.rounds,
-                            batch=8 if strategy == "pooled" else 2)
-    g = F.global_model(state, ctx)
-    pred, _ = sanet_mod.sanet_apply(g, test["volume"], scfg)
+    pooled = strategy == "pooled"
+    job = FederatedJob(
+        task=TaskConfig(kind="dose", volume=VOL,
+                        sites=1 if pooled else 8,
+                        heterogeneity=0.0 if pooled else 0.6, seed=1,
+                        batch=8 if pooled else 2),
+        strategy=strategy, rounds=args.rounds, lr=3e-3,
+        case_counts=None if pooled else tuple(OPENKBP_NONIID_TRAIN))
+    res = job.run()
+    scfg = job.task.model_config()
+    pred, _ = sanet_mod.sanet_apply(res.global_params, test["volume"], scfg)
     ds = np.mean([dose_score(np.asarray(pred[i, ..., 0]),
                              np.asarray(test["dose"][i, ..., 0]),
                              np.asarray(test["mask"][i, ..., 0]))
                   for i in range(8)])
-    print(f"{strategy:12s} final_train_loss={hist[-1]:.4f} "
+    print(f"{strategy:12s} final_train_loss={res.final_loss:.4f} "
           f"test_dose_score={ds:.4f}")
 print("expected ordering: pooled <= fedavg < individual (paper Fig 8)")

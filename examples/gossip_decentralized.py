@@ -1,47 +1,34 @@
 """Decentralized FL with GCML under site churn (paper Fig 4 + Fig 15).
 
 5 sites, gossip pairing each round, regional DCML mutual learning, and
-Algorithm-2 random drop-in/out at up to 40% of sites.
+Algorithm-2 random drop-in/out at up to 40% of sites — one declarative
+``FederatedJob``; the pairing/dropout loop lives in the transport.
 
     PYTHONPATH=src python examples/gossip_decentralized.py
 """
+import os
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api import FederatedJob, TaskConfig
 
-from benchmarks.common import make_sanet_ctx
-from repro.core import federation as F
-from repro.core.dropout import SiteAvailability
-from repro.data.synthetic import SegTaskGenerator
-from repro.models import sanet as sanet_mod
+SITES = int(os.environ.get("FEDKBP_SITES", "5"))
+ROUNDS = int(os.environ.get("FEDKBP_ROUNDS", "10"))
+MAX_DROP = 2
 
-SITES, ROUNDS, MAX_DROP = 5, 10, 2
+job = FederatedJob(
+    task=TaskConfig(kind="seg", sites=SITES, heterogeneity=0.5, seed=4,
+                    batch=2),
+    strategy="gcml", rounds=ROUNDS, lr=3e-3,
+    max_dropout=MAX_DROP, dropout_scenario="shutdown", seed=3)
 
-ctx, scfg = make_sanet_ctx("gcml", SITES, task="seg", scenario="shutdown")
-gen = SegTaskGenerator(volume=(16, 16, 16), in_channels=2, num_classes=3,
-                       num_sites=SITES, heterogeneity=0.5, seed=4)
-state = F.init_fl_state(ctx, lambda k: sanet_mod.sanet_init(k, scfg),
-                        jax.random.PRNGKey(0))
-fl_round = jax.jit(F.build_fl_round(ctx))
-avail = SiteAvailability(SITES, MAX_DROP, seed=3)
-rng = np.random.default_rng(0)
-
-print(f"GCML gossip, {SITES} sites, up to {MAX_DROP * 100 // SITES}0% dropout")
-for r in range(ROUNDS):
-    b = jax.tree.map(jnp.asarray, gen.stacked_batches(r, 1, 2))
-    ri = F.make_round_inputs(ctx, avail, rng, r)
-    ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
-    ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
-    state, m = fl_round(state, b, ri)
-    pairs = [(int(ri["partner"][i]), i) for i in range(SITES)
-             if ri["is_receiver"][i]]
-    print(f"  round {r:2d} loss {float(jnp.mean(m['loss'])):.4f} "
-          f"active {int(np.sum(ri['active']))}/{SITES} "
-          f"pairs(sender->receiver) {pairs}")
+print(f"GCML gossip, {SITES} sites, up to {MAX_DROP * 100 // SITES}% dropout")
+res = job.run()
+for h in res.history:
+    pairs = [(int(h["partner"][i]), i) for i in range(SITES)
+             if h["is_receiver"][i]]
+    print(f"  round {h['round']:2d} loss {h['loss']:.4f} "
+          f"active {h['active']}/{SITES} pairs(sender->receiver) {pairs}")
 print("OK — model exchange continued despite churn (paper Fig 15)")

@@ -1,10 +1,13 @@
 """Quickstart: federated training of an assigned architecture in ~a minute.
 
 Trains a reduced Qwen3 on synthetic non-IID token streams across 4 sites
-with FedAvg, then serves the aggregated global model.
+with FedAvg through the unified ``FederatedJob`` API, then serves the
+aggregated global model.  The same job runs distributed by flipping
+``transport="tcp"`` (see examples/distributed_sites.py).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
 from pathlib import Path
 
@@ -12,39 +15,24 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import FederationConfig, MeshConfig
-from repro.configs.registry import get_arch
-from repro.core import federation as F
-from repro.data.synthetic import TokenTaskGenerator
+from repro.api import FederatedJob, TaskConfig
 from repro.models import transformer as T
-from repro.optim import adamw
 
-SITES, ROUNDS = 4, 12
+SITES = int(os.environ.get("FEDKBP_SITES", "4"))
+ROUNDS = int(os.environ.get("FEDKBP_ROUNDS", "12"))
 
-cfg = get_arch("qwen3-8b").reduced()
-gen = TokenTaskGenerator(vocab_size=cfg.vocab_size, num_sites=SITES,
-                         heterogeneity=0.5, seed=0)
+job = FederatedJob(
+    task=TaskConfig(kind="tokens", arch="qwen3-8b", sites=SITES,
+                    heterogeneity=0.5, batch=4, seq=32),
+    strategy="fedavg", rounds=ROUNDS, lr=2e-3, verbose=True, log_every=1)
 
-fed = FederationConfig(num_sites=SITES, strategy="fedavg")
-ctx = F.FLContext(
-    fed=fed, mesh=MeshConfig(sites_per_pod=SITES, fsdp=16 // SITES),
-    case_weights=jnp.asarray(fed.case_weights()),
-    loss_fn=lambda p, b: T.next_token_loss(p, b, cfg),
-    logits_fn=None, optimizer=adamw(2e-3), grad_clip=1.0, dcml_lr=1e-3)
-
-state = F.init_fl_state(ctx, lambda k: T.init(k, cfg), jax.random.PRNGKey(0))
-fl_round = jax.jit(F.build_fl_round(ctx))
-
-print(f"federated training: {cfg.name}, {SITES} sites, FedAvg")
-for r in range(ROUNDS):
-    batches = jax.tree.map(jnp.asarray, gen.stacked_batches(r, 1, 4, 32))
-    state, metrics = fl_round(state, batches, F.make_round_inputs(ctx))
-    print(f"  round {r:2d}  mean site loss {float(jnp.mean(metrics['loss'])):.4f}")
+print(f"federated training: {job.task.arch} (reduced), {SITES} sites, FedAvg")
+result = job.run()
 
 # serve the aggregated global model
-g = F.global_model(state, ctx)
+cfg = job.task.model_config()
+g = result.global_params
 prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab_size)
 _, caches = T.prefill(g, prompt, cfg, cache_capacity=24, moe_impl="dense")
 tok = prompt[:, -1:]

@@ -1,0 +1,681 @@
+"""One ``FederatedJob`` API — the paper's unified communication stack.
+
+The headline FedKBP+ claim is that participants run the *same* FL
+scripts whether colocated on one workstation or spread across machines.
+This module is that surface: a declarative job object that owns task
+construction (tokens/dose/seg), strategy, dropout schedule,
+checkpointing and metrics, and executes rounds through a pluggable
+:class:`Transport`:
+
+  * :class:`StackedTransport` — the vmapped/jitted single-process
+    simulator (fast default; every strategy incl. GCML gossip).
+  * :class:`ThreadTransport`  — every site is a real ``Peer`` with its
+    own server socket, driven by an in-process thread; rounds go through
+    ``AggregationServer`` / ``CoordinationServer`` over real TCP.
+  * :class:`TcpTransport`     — same wire protocol, but each site is its
+    own OS process (the paper's deployment shape).
+
+On top of the transport seam sits the scheduler seam
+(:mod:`repro.core.session`): ``SyncScheduler`` keeps barrier rounds,
+``BufferedScheduler`` gives FedBuff-style buffered-async aggregation —
+on the stacked simulator *and* on the TCP server, since both fold
+uploads through the same ``StreamingAccumulator``.
+
+    job = FederatedJob(task=TaskConfig(kind="tokens", arch="qwen3-8b",
+                                       sites=4, heterogeneity=0.5),
+                       strategy="fedavg", rounds=12)
+    result = job.run()                        # local, one process
+    result = job.replace(transport="tcp").run()   # real multi-process TCP
+
+``job.run(rounds)`` is the only round loop in the codebase — examples,
+the train CLI and the benchmarks all drive it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederationConfig, MeshConfig
+from repro.core import federation as F
+from repro.core import stacking
+from repro.core.agg_engine import StreamingAccumulator
+from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
+                                RoundScheduler, availability_masks,
+                                resolve_scheduler)
+from repro.core.strategies import base as strat_base
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# Task construction (tokens / dose / seg) — declarative and picklable, so
+# TcpTransport site processes can rebuild the exact task from the job alone.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    """What the federation trains on.  ``kind`` ∈ {tokens, dose, seg}."""
+
+    kind: str = "tokens"
+    sites: int = 4
+    batch: int = 4                      # per-site batch per local step
+    heterogeneity: float = 0.0          # non-IID knob (0 = IID)
+    seed: int = 0                       # data seed (independent of job seed)
+    # -- tokens ------------------------------------------------------------
+    arch: str = "smollm-135m"
+    reduced: bool = True
+    seq: int = 64
+    # -- volumetric (dose / seg) -------------------------------------------
+    volume: Tuple[int, int, int] = (16, 16, 16)
+    num_oars: int = 2                   # dose: OAR channels
+    in_channels: int = 2                # seg: input channels
+    num_classes: int = 3                # seg: label classes
+    base_filters: int = 8
+    num_levels: int = 2
+    site_pools: Optional[Tuple[int, ...]] = None   # per-site distinct cases
+
+    def model_config(self):
+        """The model config this task trains (ModelConfig or SANetConfig)."""
+        from repro.models.sanet import SANetConfig
+        if self.kind == "tokens":
+            from repro.configs.registry import get_arch
+            arch = get_arch(self.arch)
+            return arch.reduced() if self.reduced else arch.CONFIG
+        if self.kind == "dose":
+            return SANetConfig(in_channels=2 + self.num_oars, out_channels=1,
+                               base_filters=self.base_filters,
+                               num_levels=self.num_levels, task="dose")
+        if self.kind == "seg":
+            return SANetConfig(in_channels=self.in_channels,
+                               out_channels=self.num_classes,
+                               base_filters=self.base_filters,
+                               num_levels=self.num_levels, task="segmentation")
+        raise ValueError(f"unknown task kind {self.kind!r}")
+
+    def build(self) -> "TaskBundle":
+        if self.kind == "tokens":
+            return _build_token_task(self)
+        if self.kind in ("dose", "seg"):
+            return _build_volume_task(self)
+        raise ValueError(f"unknown task kind {self.kind!r}")
+
+
+@dataclass
+class TaskBundle:
+    """Built task: loss/init fns + batch samplers over the generator."""
+
+    task: TaskConfig
+    loss_fn: Callable
+    logits_fn: Optional[Callable]
+    init_fn: Callable
+    model_cfg: Any
+    sample: Callable[[int, int], Dict[str, np.ndarray]]   # (site, step) -> [B,…]
+    stacked: Callable[[int, int], Dict[str, np.ndarray]]  # (round, K) -> [S,K,B,…]
+
+    def round_batches(self, round_index: int, local_steps: int,
+                      pooled: bool = False):
+        """[S, K, B, …] batches for one round (K = local steps).  With
+        ``pooled`` the site axis is concatenated into one site's batch
+        ([1, K, S·B, …]) — the paper's Pooled upper baseline."""
+        b = self.stacked(round_index, local_steps)
+        if pooled:
+            b = {k: np.reshape(np.swapaxes(x, 0, 1),
+                               (1, x.shape[1], -1) + x.shape[3:])
+                 for k, x in b.items()}
+        return jax.tree.map(jnp.asarray, b)
+
+    def site_batches(self, site: int, round_index: int, local_steps: int):
+        """[1, K, B, …] — one site's slice of :meth:`round_batches`.  The
+        sample indexing (``round·K + k``) must mirror the generators'
+        ``stacked_batches``; transport parity depends on it, and
+        regenerating only this site's data keeps workers O(B) instead of
+        O(S·B) per round."""
+        ks = [self.sample(site, round_index * local_steps + k)
+              for k in range(local_steps)]
+        b = {k: np.stack([x[k] for x in ks])[None] for k in ks[0]}
+        return jax.tree.map(jnp.asarray, b)
+
+
+def _build_token_task(task: TaskConfig) -> TaskBundle:
+    from repro.data.synthetic import TokenTaskGenerator
+    from repro.models import transformer as T
+    cfg = task.model_config()
+    gen = TokenTaskGenerator(vocab_size=cfg.vocab_size, num_sites=task.sites,
+                             heterogeneity=task.heterogeneity,
+                             num_codebooks=cfg.num_codebooks, seed=task.seed)
+
+    def logits_fn(params, batch):
+        logits, _ = T.forward(params, batch["tokens"], cfg)
+        return logits[:, :-1], batch["tokens"][:, 1:]
+
+    return TaskBundle(
+        task=task,
+        loss_fn=lambda p, b: T.next_token_loss(p, b, cfg),
+        logits_fn=logits_fn,
+        init_fn=lambda k: T.init(k, cfg),
+        model_cfg=cfg,
+        sample=lambda site, step: {
+            "tokens": gen.sample(site, step, task.batch, task.seq)},
+        stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch,
+                                                   task.seq))
+
+
+def _build_volume_task(task: TaskConfig) -> TaskBundle:
+    from repro.data.synthetic import DoseTaskGenerator, SegTaskGenerator
+    from repro.models import sanet as sanet_mod
+    scfg = task.model_config()
+    if task.kind == "dose":
+        gen = DoseTaskGenerator(volume=task.volume, num_oars=task.num_oars,
+                                num_sites=task.sites,
+                                heterogeneity=task.heterogeneity,
+                                seed=task.seed, site_pools=task.site_pools)
+        loss_fn = lambda p, b: sanet_mod.dose_loss(p, b, scfg)
+
+        def logits_fn(params, batch):
+            pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
+            # dose regression viewed as binary high/low for DCML regions
+            logits = jnp.concatenate([pred, -pred], axis=-1)
+            labels = (batch["dose"][..., 0] > 0.5).astype(jnp.int32)
+            return logits, labels
+    else:
+        gen = SegTaskGenerator(volume=task.volume, in_channels=task.in_channels,
+                               num_classes=task.num_classes,
+                               num_sites=task.sites,
+                               heterogeneity=task.heterogeneity,
+                               seed=task.seed, site_pools=task.site_pools)
+        loss_fn = lambda p, b: sanet_mod.segmentation_loss(p, b, scfg)
+
+        def logits_fn(params, batch):
+            pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
+            return pred, batch["labels"]
+
+    return TaskBundle(
+        task=task, loss_fn=loss_fn, logits_fn=logits_fn,
+        init_fn=lambda k: sanet_mod.sanet_init(k, scfg), model_cfg=scfg,
+        sample=lambda site, step: gen.sample(site, step, task.batch),
+        stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch))
+
+
+# ---------------------------------------------------------------------------
+# The job
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FederatedJob:
+    """A fully-specified federated run; ``run()`` executes it through the
+    configured transport and scheduler.  Declarative and picklable — the
+    TCP transport ships the job itself to every site process."""
+
+    task: TaskConfig = field(default_factory=TaskConfig)
+    strategy: str = "fedavg"
+    rounds: int = 10
+    local_steps: int = 1
+    # optimizer / strategy hyper-parameters
+    lr: float = 1e-3
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    prox_mu: float = 0.01
+    gcml_lambda: float = 0.5
+    gcml_contrast_beta: float = 1.0
+    dcml_lr: Optional[float] = None     # default: lr
+    # Algorithm-2 dropout schedule
+    max_dropout: int = 0
+    dropout_scenario: str = "disconnect"
+    case_counts: Optional[Tuple[int, ...]] = None   # Eq. 1 m_i (None=uniform)
+    # execution
+    transport: Union[str, "Transport"] = "stacked"
+    scheduler: Union[str, RoundScheduler] = "sync"
+    seed: int = 0                       # init + dropout + pairing seed
+    io_timeout: float = 120.0           # socket-transport exchange bound
+    # bookkeeping
+    checkpoint_dir: Optional[str] = None
+    ckpt_every: int = 10
+    verbose: bool = False
+    log_every: Optional[int] = None
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def train_sites(self) -> int:
+        """Sites in the *training* federation (Pooled trains as 1 site
+        over the concatenated data)."""
+        return 1 if self.strategy == "pooled" else self.task.sites
+
+    def replace(self, **kw) -> "FederatedJob":
+        return dataclasses.replace(self, **kw)
+
+    def federation(self, num_sites: Optional[int] = None,
+                   strategy: Optional[str] = None) -> FederationConfig:
+        sites = self.train_sites if num_sites is None else num_sites
+        counts = self.case_counts
+        if counts is not None and len(counts) != sites:
+            counts = None               # e.g. a 1-site worker view
+        return FederationConfig(
+            num_sites=sites, strategy=strategy or self.strategy,
+            local_steps=self.local_steps, rounds=self.rounds,
+            prox_mu=self.prox_mu, gcml_lambda=self.gcml_lambda,
+            gcml_contrast_beta=self.gcml_contrast_beta,
+            max_dropout_sites=self.max_dropout,
+            dropout_scenario=self.dropout_scenario,
+            site_case_counts=counts)
+
+    def context(self, bundle: Optional[TaskBundle] = None,
+                num_sites: Optional[int] = None,
+                strategy: Optional[str] = None) -> F.FLContext:
+        """The FLContext view of this job (stacked or per-site worker)."""
+        bundle = bundle or self.task.build()
+        fed = self.federation(num_sites, strategy)
+        return F.FLContext(
+            fed=fed, mesh=MeshConfig.for_sites(fed.num_sites),
+            case_weights=jnp.asarray(fed.case_weights()),
+            loss_fn=bundle.loss_fn, logits_fn=bundle.logits_fn,
+            optimizer=adamw(self.lr, weight_decay=self.weight_decay),
+            grad_clip=self.grad_clip, dcml_lr=self.dcml_lr or self.lr,
+            hierarchical=False)
+
+    def recorder(self, rounds: int, num_sites: int) -> RoundRecorder:
+        return RoundRecorder(rounds, verbose=self.verbose,
+                             log_every=self.log_every,
+                             checkpoint_dir=self.checkpoint_dir,
+                             ckpt_every=self.ckpt_every, num_sites=num_sites)
+
+    def run(self, rounds: Optional[int] = None) -> JobResult:
+        """Execute the federation — the one round loop."""
+        return resolve_transport(self.transport).execute(
+            self, self.rounds if rounds is None else rounds)
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """Execution backend protocol: run ``rounds`` FL rounds of ``job``."""
+
+    name = "base"
+
+    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+        raise NotImplementedError
+
+
+class StackedTransport(Transport):
+    """Single-process vmapped simulator (all strategies, all schedulers)."""
+
+    name = "stacked"
+
+    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+        scheduler = resolve_scheduler(job.scheduler)
+        bundle = job.task.build()
+        if isinstance(scheduler, BufferedScheduler):
+            return self._execute_buffered(job, bundle, scheduler, rounds)
+        return self._execute_sync(job, bundle, scheduler, rounds)
+
+    def _execute_sync(self, job, bundle, scheduler, rounds) -> JobResult:
+        ctx = job.context(bundle)
+        strategy = strat_base.get_strategy(job.strategy)
+        state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+        fl_round = jax.jit(F.build_fl_round(ctx))
+        masks = availability_masks(ctx.fed.num_sites, job.max_dropout,
+                                   job.seed, rounds)
+        pair_rng = np.random.default_rng(job.seed)
+        recorder = job.recorder(rounds, ctx.fed.num_sites)
+        for r in range(rounds):
+            b = bundle.round_batches(r, job.local_steps,
+                                     pooled=(job.strategy == "pooled"))
+            ri = F.make_round_inputs(ctx, rng=pair_rng, round_index=r,
+                                     active=masks[r])
+            extra = {}
+            if strategy.needs_val_batch:
+                ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
+                ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
+            if strategy.needs_pairing:
+                extra = {"partner": ri["partner"].tolist(),
+                         "is_receiver": ri["is_receiver"].tolist()}
+            t_step = time.time()
+            state, metrics = fl_round(state, b, ri)
+            jax.block_until_ready(state)
+            extra["step_s"] = time.time() - t_step   # compute-only round time
+            recorder.record(r, np.asarray(metrics["loss"]), masks[r],
+                            global_fn=lambda: F.global_model(state, ctx),
+                            extra=extra)
+        return recorder.result(F.global_model(state, ctx),
+                               transport=self.name, scheduler=scheduler.name,
+                               state=state)
+
+    def _execute_buffered(self, job, bundle, scheduler, rounds) -> JobResult:
+        """FedBuff-style buffered async, simulated: every round all active
+        sites train locally, then 'arrive' in random order; each arrival
+        folds into the :class:`StreamingAccumulator` at a staleness-
+        discounted weight, and the buffer finalizes into a new global
+        whenever ``scheduler.ready`` fires (K of S).  After uploading,
+        sites pull the latest global — exactly the site loop the socket
+        transports run against the buffered ``AggregationServer``."""
+        if job.strategy != "fedavg":
+            raise ValueError("buffered-async scheduling currently supports "
+                             f"fedavg only, not {job.strategy!r}")
+        ctx = job.context(bundle, strategy="individual")   # local-only rounds
+        num_sites = ctx.fed.num_sites
+        state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+        local_round = jax.jit(F.build_fl_round(ctx))
+        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        case_w = np.asarray(job.federation().case_weights())
+        acc = StreamingAccumulator()
+        order_rng = np.random.default_rng(job.seed + 13)
+        version = 0
+        base_version = np.zeros(num_sites, np.int64)
+        global_params = jax.tree.map(np.asarray, F.global_model(state, ctx))
+        recorder = job.recorder(rounds, num_sites)
+        for r in range(rounds):
+            b = bundle.round_batches(r, job.local_steps)
+            ri = F.make_round_inputs(ctx, active=masks[r])
+            state, metrics = local_round(state, b, ri)
+            active_idx = np.flatnonzero(masks[r])
+            uploaded: List[int] = []
+            for site in order_rng.permutation(active_idx):
+                site = int(site)
+                discount = scheduler.discount(version - int(base_version[site]))
+                if discount is None:                 # too stale: resync only
+                    state = _set_param_sites(state, [site], global_params)
+                    base_version[site] = version
+                    continue
+                acc.fold(jax.tree.map(lambda x: np.asarray(x[site], np.float32),
+                                      state["params"]),
+                         float(case_w[site]) * discount)
+                uploaded.append(site)
+                if scheduler.ready(acc.count, len(active_idx)):
+                    global_params = acc.finalize()
+                    version += 1
+            if uploaded:                             # pull latest global
+                state = _set_param_sites(state, uploaded, global_params)
+                base_version[np.asarray(uploaded)] = version
+            recorder.record(r, np.asarray(metrics["loss"]), masks[r],
+                            global_fn=lambda: global_params,
+                            extra={"version": version})
+        return recorder.result(global_params, transport=self.name,
+                               scheduler=scheduler.name, state=state)
+
+
+def _set_param_sites(fl_state, sites: List[int], global_tree):
+    """Overwrite the given site rows of the stacked params with the
+    (unstacked) global model."""
+    idx = jnp.asarray(sites)
+    new_params = jax.tree.map(
+        lambda x, g: x.at[idx].set(jnp.asarray(np.asarray(g)).astype(x.dtype)),
+        fl_state["params"], global_tree)
+    return {**fl_state, "params": new_params}
+
+
+# -- socket transports (real Peer / AggregationServer / CoordinationServer) --
+
+
+def _site_host_tree(params_stacked):
+    """Site 0 of a [1, …]-stacked tree as host numpy (the wire payload)."""
+    return jax.tree.map(lambda x: np.asarray(x[0]), params_stacked)
+
+
+def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
+              rounds: int) -> Dict[str, Any]:
+    """One site's FL script — identical whether driven by a thread or an
+    OS process (paper Algorithm 1, site side)."""
+    from repro.comms.peer import Peer
+    bundle = job.task.build()
+    buffered = isinstance(resolve_scheduler(job.scheduler), BufferedScheduler)
+    local_strategy = "fedprox" if job.strategy == "fedprox" else "individual"
+    ctx = job.context(bundle, num_sites=1, strategy=local_strategy)
+    state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+    local_round = jax.jit(F.build_fl_round(ctx))
+    # every site replays the same Algorithm-2 chain — no status traffic
+    # needed for the schedule itself
+    masks = availability_masks(job.task.sites, job.max_dropout, job.seed, rounds)
+    strategy = strat_base.get_strategy(job.strategy)
+    dcml_step = None
+    peer = Peer(site_id)
+    ri1 = {"active": np.ones(1, bool), "partner": np.zeros(1, np.int64),
+           "is_receiver": np.zeros(1, bool)}
+    losses: List[float] = []
+    base_round = 0          # server round of the global this site trained on
+    stale_uploads = 0
+    try:
+        if strategy.needs_pairing:
+            from repro.core.strategies.gcml import make_site_dcml
+            dcml_step = jax.jit(make_site_dcml(job.context(bundle)))
+            peer.register(coord_addr)
+        for r in range(rounds):
+            me_active = bool(masks[r, site_id])
+            b = bundle.site_batches(site_id, r, job.local_steps)
+            # -- decentralized pre-exchange: gossip + regional DCML ------
+            if dcml_step is not None and me_active:
+                asg = peer.get_assignment(coord_addr, r + 1)
+                recv_of = {int(asg["partner"][j]): j
+                           for j in range(len(asg["partner"]))
+                           if asg["is_receiver"][j]}
+                if asg["is_sender"][site_id]:
+                    target = recv_of[site_id]
+                    peer.send_model(tuple(asg["addresses"][str(target)]),
+                                    _site_host_tree(state["params"]), r + 1)
+                if asg["is_receiver"][site_id]:
+                    _, incoming = peer.recv_model(timeout=job.io_timeout)
+                    merged, _ = dcml_step(
+                        stacking.site_slice(state["params"], 0),
+                        jax.tree.map(jnp.asarray, incoming),
+                        jax.tree.map(lambda x: x[0, 0], b),
+                        jax.tree.map(lambda x: x[0, -1], b))
+                    state = {**state,
+                             "params": stacking.broadcast_to_sites(merged, 1)}
+            # -- local training ------------------------------------------
+            if me_active or job.dropout_scenario == "disconnect":
+                state, metrics = local_round(state, b, ri1)
+                losses.append(float(np.asarray(metrics["loss"])[0]))
+            else:                                    # workstation off
+                losses.append(float("nan"))
+            # -- centralized exchange: upload → aggregate → download -----
+            if agg_addr is not None and me_active:
+                # sync barrier rounds are tagged with the loop round; under
+                # a buffered scheduler the server finalizes ~S/K times per
+                # loop round, so the upload carries the round of the global
+                # this site last pulled — the FedBuff staleness anchor
+                upload_round = base_round + 1 if buffered else r + 1
+                ack = peer.upload(agg_addr, _site_host_tree(state["params"]),
+                                  upload_round,
+                                  active_sites=int(masks[r].sum()))
+                if ack.get("stale"):
+                    # rejected as too stale: the resync below restores a
+                    # small staleness for the next upload
+                    stale_uploads += 1
+                # buffered async has no barrier at all: pull whatever global
+                # is current (want=0) rather than waiting for a window that
+                # sites which already finished their rounds may never fill;
+                # sync keeps the round-(r+1) barrier
+                want = 0 if buffered else r + 1
+                g, dmeta = peer.download(agg_addr, want, with_meta=True)
+                if g is not None:        # None only if no buffer finalized yet
+                    base_round = int(dmeta["round"])
+                    new_params = jax.tree.map(
+                        lambda x, gg: jnp.broadcast_to(
+                            jnp.asarray(gg).astype(x.dtype)[None], x.shape),
+                        state["params"], g)
+                    state = {**state, "params": new_params}
+                    if local_strategy == "fedprox":  # Eq. 2 proximal anchor
+                        state = {**state, "strategy": {
+                            "global": jax.tree.map(
+                                lambda gg: jnp.asarray(gg, jnp.float32), g)}}
+        return {"losses": losses, "stale_uploads": stale_uploads,
+                "params": _site_host_tree(state["params"])}
+    finally:
+        peer.close()
+
+
+def _site_worker(job, site_id, agg_addr, coord_addr, result_q, rounds):
+    """Queue-reporting wrapper around :func:`_run_site` (thread/process)."""
+    try:
+        result_q.put((site_id, _run_site(job, site_id, agg_addr, coord_addr,
+                                         rounds)))
+    except Exception as e:  # noqa: BLE001 — surface worker death to the job
+        result_q.put((site_id, {"error": f"{type(e).__name__}: {e}"}))
+
+
+class _SocketTransport(Transport):
+    """Shared round-trip machinery for thread- and process-backed sites.
+
+    Round history is assembled from the workers' reports after the run:
+    per-round ``wall_s`` is the run mean (the driver cannot observe
+    individual remote rounds), and checkpointing saves the final global
+    model only.
+    """
+
+    name = "socket"
+
+    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+        scheduler = resolve_scheduler(job.scheduler)
+        strategy = strat_base.get_strategy(job.strategy)
+        if job.strategy == "pooled":
+            raise ValueError("pooled is a single-process baseline; "
+                             "run it on the stacked transport")
+        if strategy.needs_pairing and job.max_dropout:
+            raise ValueError("gossip under dropout needs coordinated status "
+                             "updates; run it on the stacked transport")
+        fed = job.federation()
+        num_sites = fed.num_sites
+        # construct before the workers run so wall_s spans the actual run
+        recorder = job.recorder(rounds, num_sites)
+        from repro.comms.coordinator import (AggregationServer,
+                                             CoordinationServer)
+        servers = []
+        agg_addr = coord_addr = None
+        try:
+            if not strategy.needs_pairing and job.strategy != "individual":
+                agg = AggregationServer(
+                    "127.0.0.1", 0, num_sites=num_sites,
+                    case_weights=list(fed.case_weights()),
+                    download_timeout=job.io_timeout / 2,
+                    scheduler=scheduler)
+                servers.append(agg)
+                agg_addr = agg.addr
+            if strategy.needs_pairing:
+                coord = CoordinationServer("127.0.0.1", 0,
+                                           num_sites=num_sites, seed=job.seed)
+                servers.append(coord)
+                coord_addr = coord.addr
+            results = self._run_workers(job, num_sites, agg_addr, coord_addr,
+                                        rounds)
+        finally:
+            for s in servers:
+                s.stop()
+        per_site = dict(results)
+        dead = {i: p["error"] for i, p in per_site.items() if "error" in p}
+        if dead:
+            raise RuntimeError(f"site workers failed: {dead}")
+        losses = np.stack([per_site[i]["losses"] for i in range(num_sites)])
+        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        stale = [per_site[i].get("stale_uploads", 0) for i in range(num_sites)]
+        round_wall = recorder.elapsed / max(rounds, 1)
+        for r in range(rounds):
+            extra = {"wall_s": round_wall}
+            if r == rounds - 1:
+                extra["stale_uploads"] = stale
+            recorder.record(r, losses[:, r], masks[r], extra=extra)
+        # the served global: case-weighted mean of the final site models
+        # (for FedAvg the sites already hold the last broadcast global)
+        acc = StreamingAccumulator()
+        cw = fed.case_weights()
+        for i in range(num_sites):
+            acc.fold(per_site[i]["params"], float(cw[i]))
+        global_params = acc.finalize()
+        if recorder.store is not None:       # --checkpoint: final global
+            recorder.store.save("global", rounds - 1, global_params)
+        return recorder.result(global_params, transport=self.name,
+                               scheduler=scheduler.name)
+
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+        raise NotImplementedError
+
+
+class ThreadTransport(_SocketTransport):
+    """Real TCP round trips, sites driven by in-process threads."""
+
+    name = "thread"
+
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+        q: "queue.Queue" = queue.Queue()
+        threads = [threading.Thread(
+            target=_site_worker,
+            args=(job, i, agg_addr, coord_addr, q, rounds), daemon=True)
+            for i in range(num_sites)]
+        for t in threads:
+            t.start()
+        results = [q.get(timeout=job.io_timeout * max(rounds, 1))
+                   for _ in range(num_sites)]
+        for t in threads:
+            t.join(timeout=5)
+        return results
+
+
+class TcpTransport(_SocketTransport):
+    """Real TCP round trips, one OS process per site (paper §III.A.3:
+    sites identified by IP:port, colocated or spread across machines)."""
+
+    name = "tcp"
+
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+        import multiprocessing as mp
+        import queue as queue_mod
+        import time as time_mod
+        mpctx = mp.get_context("spawn")
+        q = mpctx.Queue()
+        procs = [mpctx.Process(
+            target=_site_worker,
+            args=(job, i, agg_addr, coord_addr, q, rounds), daemon=True)
+            for i in range(num_sites)]
+        for p in procs:
+            p.start()
+        results: List[Tuple[int, Dict[str, Any]]] = []
+        deadline = time_mod.time() + job.io_timeout * max(rounds, 1)
+        try:
+            while len(results) < num_sites:
+                try:
+                    results.append(q.get(timeout=2.0))
+                except queue_mod.Empty:
+                    # a worker that died before reporting would stall the
+                    # collection until the deadline — fail fast instead
+                    dead = [p for p in procs if not p.is_alive()
+                            and p.exitcode not in (0, None)]
+                    if dead and q.empty():
+                        raise RuntimeError(
+                            f"{len(dead)} site process(es) exited with "
+                            f"{[p.exitcode for p in dead]} before reporting")
+                    if time_mod.time() > deadline:
+                        raise TimeoutError(
+                            f"collected {len(results)}/{num_sites} site "
+                            f"results before timeout")
+        finally:
+            for p in procs:
+                p.join(timeout=30)
+                if p.is_alive():
+                    p.terminate()
+        return results
+
+
+_TRANSPORTS = {"stacked": StackedTransport, "thread": ThreadTransport,
+               "tcp": TcpTransport}
+
+
+def resolve_transport(spec: Union[str, Transport, None]) -> Transport:
+    if spec is None:
+        return StackedTransport()
+    if isinstance(spec, Transport):
+        return spec
+    try:
+        return _TRANSPORTS[spec]()
+    except KeyError:
+        raise KeyError(f"unknown transport {spec!r}; known: "
+                       f"{sorted(_TRANSPORTS)}")

@@ -21,6 +21,7 @@ from repro.comms.codec import encode_message
 from repro.comms.transport import Server
 from repro.core.agg_engine import StreamingAccumulator
 from repro.core.gossip import pair_sites
+from repro.core.session import RoundScheduler, SyncScheduler
 
 
 class AggregationServer:
@@ -33,15 +34,26 @@ class AggregationServer:
     same round are acknowledged but not folded twice.  A download that
     outwaits ``download_timeout`` gets an ``error`` reply (surfaced to
     the client as a ``RuntimeError``) instead of a ``None`` global model.
+
+    The *when to aggregate / at what weight* decision is delegated to a
+    :class:`~repro.core.session.RoundScheduler`.  The default
+    :class:`SyncScheduler` keeps barrier semantics and rejects uploads
+    whose round does not match the round being collected — a straggler's
+    round-(r−1) upload is acked ``{"stale": true}`` and NOT folded into
+    round r's accumulator.  A :class:`BufferedScheduler` instead admits
+    late uploads at a staleness-discounted weight and finalizes after
+    ``buffer_k`` arrivals (FedBuff-style buffered async).
     """
 
     def __init__(self, host: str, port: int, num_sites: int,
                  case_weights: Optional[List[float]] = None,
-                 download_timeout: float = 60.0):
+                 download_timeout: float = 60.0,
+                 scheduler: Optional[RoundScheduler] = None):
         self.num_sites = num_sites
         self.weights = {i: (case_weights[i] if case_weights else 1.0)
                         for i in range(num_sites)}
         self.download_timeout = download_timeout
+        self.scheduler = scheduler or SyncScheduler()
         self._lock = threading.Condition()
         self._acc = StreamingAccumulator()
         self._folded: Set[int] = set()
@@ -56,16 +68,24 @@ class AggregationServer:
         if kind == "upload":
             with self._lock:
                 site = int(meta["site"])
+                # the round currently being collected is self._round + 1;
+                # staleness 0 = an upload for exactly that round
+                upload_round = int(meta.get("round", self._round + 1))
+                discount = self.scheduler.discount(self._round + 1 - upload_round)
+                if discount is None:
+                    return encode_message(
+                        "ack", {"round": self._round, "stale": True}, None)
                 if site not in self._folded:
-                    self._acc.fold(tree, self.weights[site])
+                    self._acc.fold(tree, self.weights[site] * discount)
                     self._folded.add(site)
                 expected = int(meta.get("active_sites", self.num_sites))
-                if len(self._folded) >= expected:
+                if self.scheduler.ready(len(self._folded), expected):
                     self._global = self._acc.finalize()
                     self._folded = set()
                     self._round += 1
                     self._lock.notify_all()
-            return encode_message("ack", {"round": self._round}, None)
+            return encode_message("ack", {"round": self._round,
+                                          "stale": False}, None)
         if kind == "download":
             want_round = int(meta["round"])
             with self._lock:
@@ -91,13 +111,15 @@ class AggregationServer:
 class CoordinationServer:
     """Decentralized FL coordinator: metadata + pairing only (Fig 4)."""
 
-    def __init__(self, host: str, port: int, num_sites: int, seed: int = 0):
+    def __init__(self, host: str, port: int, num_sites: int, seed: int = 0,
+                 keep_assignments: int = 64):
         self.num_sites = num_sites
         self.rng = np.random.default_rng(seed)
+        self.keep_assignments = keep_assignments
         self._lock = threading.Condition()
         self._sites: Dict[int, Dict[str, Any]] = {}       # site -> {addr, active}
-        self._round = 0
-        self._assignment: Optional[Dict[str, Any]] = None
+        self._assignments: Dict[int, Dict[str, Any]] = {} # round -> assignment
+        self._next_round = 1
         self.server = Server(host, port, self._handle).start()
         self.addr = self.server.addr
 
@@ -119,12 +141,15 @@ class CoordinationServer:
             with self._lock:
                 self._lock.wait_for(lambda: len(self._sites) == self.num_sites,
                                     timeout=60)
-                if self._assignment is None or self._assignment["round"] < want_round:
+                # assignments are generated once per round, in round order,
+                # and kept so a lagging site asking for round r never
+                # receives the pairing already generated for round r+1
+                while self._next_round <= want_round:
                     active = np.array([self._sites[i]["active"]
                                        for i in range(self.num_sites)])
                     partner, is_recv, is_send = pair_sites(active, self.rng)
-                    self._assignment = {
-                        "round": want_round,
+                    self._assignments[self._next_round] = {
+                        "round": self._next_round,
                         "partner": partner.tolist(),
                         "is_receiver": is_recv.tolist(),
                         "is_sender": is_send.tolist(),
@@ -132,7 +157,17 @@ class CoordinationServer:
                         "addresses": {str(i): list(self._sites[i]["addr"])
                                       for i in range(self.num_sites)},
                     }
-                return encode_message("assignment", self._assignment, None)
+                    self._next_round += 1
+                for old in [k for k in self._assignments
+                            if k < self._next_round - self.keep_assignments]:
+                    del self._assignments[old]
+                asg = self._assignments.get(want_round)
+                if asg is None:
+                    return encode_message(
+                        "error",
+                        {"message": f"assignment for round {want_round} "
+                                    f"already pruned"}, None)
+                return encode_message("assignment", asg, None)
         raise ValueError(f"unknown rpc {kind!r}")
 
     def stop(self):

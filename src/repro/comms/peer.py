@@ -51,16 +51,24 @@ class Peer:
 
     # centralized-FL verbs
     def upload(self, server_addr: Address, weights: Any, round_index: int,
-               active_sites: Optional[int] = None):
+               active_sites: Optional[int] = None) -> Dict:
+        """Upload local weights; returns the server ack metadata (callers
+        can check ``ack["stale"]`` — a rejected straggler upload)."""
         meta = {"site": self.site_id, "round": round_index}
         if active_sites is not None:
             meta["active_sites"] = active_sites
-        self._channel(server_addr).request("upload", meta, weights)
+        _, ack, _ = self._channel(server_addr).request("upload", meta, weights)
+        return ack
 
-    def download(self, server_addr: Address, round_index: int) -> Any:
+    def download(self, server_addr: Address, round_index: int,
+                 with_meta: bool = False) -> Any:
+        """Block until the server completes ``round_index`` and return the
+        global model; ``with_meta=True`` also returns the reply metadata
+        (``meta["round"]`` = the server round actually served — under a
+        buffered scheduler it may be ahead of the requested one)."""
         _, meta, tree = self._channel(server_addr).request(
             "download", {"round": round_index}, None)
-        return tree
+        return (tree, meta) if with_meta else tree
 
     def register(self, coord_addr: Address):
         self._channel(coord_addr).request(

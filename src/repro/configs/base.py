@@ -256,6 +256,15 @@ class MeshConfig:
     data_axis_size: int = 16
     num_pods: int = 2
 
+    @classmethod
+    def for_sites(cls, sites: int, chip_budget: int = 16) -> "MeshConfig":
+        """Nominal FL mesh for ``sites`` sites over a ``chip_budget``-chip
+        data axis: leftover chips become in-site fsdp when the budget
+        divides evenly, else each site runs unsharded (fsdp=1)."""
+        fsdp = chip_budget // sites if sites and chip_budget % sites == 0 else 1
+        return cls(sites_per_pod=sites, fsdp=fsdp,
+                   data_axis_size=sites * fsdp)
+
     def validate_for_pod(self, chips_per_pod: int = 256) -> None:
         """Checked when an actual device mesh is built (make_fl_mesh);
         CPU-simulation contexts may carry nominal layouts."""

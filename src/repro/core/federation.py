@@ -68,12 +68,20 @@ def init_fl_state(ctx: FLContext, init_params_fn, key):
 
 
 def make_round_inputs(ctx: FLContext, availability=None, rng=None,
-                      round_index: int = 0) -> Dict[str, np.ndarray]:
-    """Host-side coordinator outputs for one round."""
+                      round_index: int = 0,
+                      active: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+    """Host-side coordinator outputs for one round.
+
+    ``active`` overrides the availability chain with a precomputed mask
+    (transports that replay the Algorithm-2 schedule deterministically
+    pass the round's mask directly).
+    """
     from repro.core.gossip import pair_sites
     s = ctx.fed.num_sites
-    active = (availability.step() if availability is not None
-              else np.ones((s,), bool))
+    if active is None:
+        active = (availability.step() if availability is not None
+                  else np.ones((s,), bool))
+    active = np.asarray(active, bool)
     partner = np.arange(s)
     is_recv = np.zeros(s, bool)
     if strat_base.get_strategy(ctx.fed.strategy).needs_pairing:

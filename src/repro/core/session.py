@@ -1,0 +1,225 @@
+"""The sync/buffered-async scheduler seam + shared round bookkeeping.
+
+A :class:`RoundScheduler` decides, for every upload the aggregation
+point sees, (a) whether the upload is admitted and at what weight
+(``discount``), and (b) when the buffered uploads are aggregated into a
+new global model (``ready``).  The same two questions are asked by every
+execution backend — the vmapped in-process simulator, the threaded TCP
+stack, and the multi-process TCP stack — so one scheduler object plugs
+into all of them:
+
+  * :class:`SyncScheduler` — the classic barrier round: admit only
+    uploads for the current round (anything else is acked ``stale`` and
+    dropped), aggregate once every active site has reported.
+  * :class:`BufferedScheduler` — FedBuff-style buffered async (Nguyen et
+    al. 2022): aggregate after ``buffer_k`` of S uploads; admit late
+    uploads at a staleness-discounted weight ``(1+τ)^(-alpha)``; reject
+    uploads staler than ``max_staleness`` (the contributor resyncs to
+    the current global instead).
+
+Both fold straight into the PR-1 :class:`~repro.core.agg_engine.StreamingAccumulator`
+— the accumulator normalizes by the folded weight total, so the
+effective per-upload weights always sum to 1.
+
+:class:`RoundRecorder` / :class:`JobResult` are the transport-agnostic
+history + checkpoint bookkeeping every backend shares, and
+:func:`availability_masks` replays the Algorithm-2 dropout chain
+deterministically so distributed site processes agree on the schedule
+without extra coordination traffic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Scheduler seam
+# ---------------------------------------------------------------------------
+
+
+class RoundScheduler:
+    """When do buffered uploads become a new global model, and at what
+    weight does each upload enter the buffer?"""
+
+    name: str = "base"
+
+    def discount(self, staleness: int) -> Optional[float]:
+        """Weight multiplier for an upload ``staleness`` global-model
+        versions old (0 = trained on the current global).  ``None``
+        rejects the upload outright."""
+        raise NotImplementedError
+
+    def ready(self, buffered: int, expected: int) -> bool:
+        """True once ``buffered`` folded uploads should be finalized into
+        a new global (``expected`` = currently active sites)."""
+        raise NotImplementedError
+
+
+class SyncScheduler(RoundScheduler):
+    """Barrier semantics: current-round uploads only, wait for all."""
+
+    name = "sync"
+
+    def discount(self, staleness: int) -> Optional[float]:
+        return 1.0 if staleness == 0 else None
+
+    def ready(self, buffered: int, expected: int) -> bool:
+        return buffered >= expected
+
+
+@dataclass
+class BufferedScheduler(RoundScheduler):
+    """FedBuff-style K-of-S buffered aggregation with staleness discount.
+
+    ``buffer_k``      — aggregate once this many uploads are buffered
+                        (clamped to the active-site count).
+    ``alpha``         — staleness exponent: weight ∝ (1+τ)^(-alpha).
+    ``max_staleness`` — uploads more than this many versions old are
+                        rejected; their site resyncs without contributing.
+    """
+
+    buffer_k: int = 2
+    alpha: float = 0.5
+    max_staleness: int = 4
+
+    name = "buffered"
+
+    def discount(self, staleness: int) -> Optional[float]:
+        if staleness < 0 or staleness > self.max_staleness:
+            return None
+        return float((1.0 + staleness) ** (-self.alpha))
+
+    def ready(self, buffered: int, expected: int) -> bool:
+        return buffered >= min(self.buffer_k, max(expected, 1))
+
+    def staleness_weights(self, staleness: Sequence[int]) -> np.ndarray:
+        """Normalized buffer weights for uploads at the given staleness
+        values (what the accumulator's finalize-normalization produces)."""
+        weights = []
+        for tau in staleness:
+            w = self.discount(int(tau))
+            if w is None:
+                raise ValueError(f"staleness {tau} outside "
+                                 f"[0, {self.max_staleness}]")
+            weights.append(w)
+        d = np.asarray(weights, dtype=np.float64)
+        return (d / d.sum()).astype(np.float32)
+
+
+_SCHEDULERS = {"sync": SyncScheduler, "buffered": BufferedScheduler}
+
+
+def resolve_scheduler(spec: Union[str, RoundScheduler, None]) -> RoundScheduler:
+    if spec is None:
+        return SyncScheduler()
+    if isinstance(spec, RoundScheduler):
+        return spec
+    try:
+        return _SCHEDULERS[spec]()
+    except KeyError:
+        raise KeyError(f"unknown scheduler {spec!r}; known: {sorted(_SCHEDULERS)}")
+
+
+# ---------------------------------------------------------------------------
+# Deterministic dropout replay (shared by job process and site workers)
+# ---------------------------------------------------------------------------
+
+
+def availability_masks(num_sites: int, max_dropout: int, seed: int,
+                       rounds: int) -> np.ndarray:
+    """[rounds, num_sites] bool active masks from the Algorithm-2 chain.
+
+    Every participant that replays this with the same arguments gets the
+    same schedule — distributed site processes agree on who is active
+    each round without talking to the coordinator.
+    """
+    from repro.core.dropout import SiteAvailability
+    chain = SiteAvailability(num_sites, max_dropout, seed=seed)
+    return np.stack([chain.step() for _ in range(rounds)])
+
+
+# ---------------------------------------------------------------------------
+# Round history / checkpoint bookkeeping (transport-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JobResult:
+    """What ``FederatedJob.run`` hands back, whatever the backend."""
+
+    history: List[Dict[str, Any]]
+    global_params: Any                      # the aggregated global model
+    wall_s: float
+    transport: str
+    scheduler: str
+    state: Optional[Dict[str, Any]] = None  # stacked fl_state (stacked only)
+
+    @property
+    def losses(self) -> List[float]:
+        return [h["loss"] for h in self.history]
+
+    @property
+    def final_loss(self) -> float:
+        return self.history[-1]["loss"]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"history": self.history, "final_loss": self.final_loss,
+                "wall_s": self.wall_s, "transport": self.transport,
+                "scheduler": self.scheduler}
+
+
+class RoundRecorder:
+    """Per-round history, progress printing and checkpointing — the
+    bookkeeping every transport shares instead of reimplementing."""
+
+    def __init__(self, rounds: int, *, verbose: bool = False,
+                 log_every: Optional[int] = None,
+                 checkpoint_dir: Optional[Union[str, Path]] = None,
+                 ckpt_every: int = 10, num_sites: int = 1):
+        self.rounds = rounds
+        self.verbose = verbose
+        self.log_every = log_every or max(rounds // 10, 1)
+        self.ckpt_every = ckpt_every
+        self.num_sites = num_sites
+        self.history: List[Dict[str, Any]] = []
+        self.store = None
+        if checkpoint_dir:
+            from repro.checkpoint import CheckpointStore
+            self.store = CheckpointStore(Path(checkpoint_dir))
+        self._t0 = time.time()
+        self._t_last = self._t0
+
+    @property
+    def elapsed(self) -> float:
+        """Seconds since the recorder (and hence the run) started."""
+        return time.time() - self._t0
+
+    def record(self, round_index: int, per_site_loss, active,
+               global_fn=None, extra: Optional[Dict[str, Any]] = None):
+        now = time.time()
+        per_site = np.asarray(per_site_loss, dtype=np.float64).reshape(-1)
+        loss = float(np.nanmean(per_site))
+        n_active = int(np.sum(active))
+        rec = {"round": round_index, "loss": loss, "active": n_active,
+               "per_site_loss": per_site.tolist(),
+               "wall_s": now - self._t_last, **(extra or {})}
+        self.history.append(rec)
+        self._t_last = now
+        if self.verbose and (round_index % self.log_every == 0
+                             or round_index == self.rounds - 1):
+            print(f"round {round_index:4d} loss {loss:.4f} "
+                  f"active {n_active}/{self.num_sites}")
+        if (self.store and global_fn is not None
+                and round_index % self.ckpt_every == 0):
+            self.store.save("global", round_index, global_fn())
+
+    def result(self, global_params, *, transport: str, scheduler: str,
+               state=None) -> JobResult:
+        return JobResult(history=self.history, global_params=global_params,
+                         wall_s=time.time() - self._t0, transport=transport,
+                         scheduler=scheduler, state=state)

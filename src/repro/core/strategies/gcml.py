@@ -18,6 +18,40 @@ from repro.core.stacking import gather_sites, where_site
 from repro.core.strategies.base import Strategy, register
 
 
+def make_site_dcml(ctx):
+    """Per-site regional DCML step (Eq. 3): mutual-distillation SGD on
+    (receiver, incoming sender) models, merged by validation loss.
+
+    Returned fn maps unstacked ``(p_r, p_s, batch, val_batch)`` →
+    ``(merged_params, (l_r, l_s, v_r, v_s))``.  The stacked simulator
+    vmaps it over the site axis; the socket transports jit it directly
+    on the receiving site.
+    """
+    lam = ctx.fed.gcml_lambda
+    beta = ctx.fed.gcml_contrast_beta
+    eta = ctx.dcml_lr
+
+    def site_dcml(p_r, p_s, b, vb):
+        def joint(pr, ps):
+            l_r, l_s = dcml_losses(ctx.logits_fn, pr, ps, b,
+                                   ctx.scalar_loss_fn, lam, beta)
+            return l_r + l_s, (l_r, l_s)
+        grads, (l_r, l_s) = jax.grad(joint, argnums=(0, 1), has_aux=True)(p_r, p_s)
+        g_r, g_s = grads
+        w_r = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
+                          ).astype(p.dtype), p_r, g_r)
+        w_s = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
+                          ).astype(p.dtype), p_s, g_s)
+        v_r = ctx.scalar_loss_fn(w_r, vb)
+        v_s = ctx.scalar_loss_fn(w_s, vb)
+        merged = merge_by_validation(w_r, w_s, v_r, v_s)
+        return merged, (l_r, l_s, v_r, v_s)
+
+    return site_dcml
+
+
 @register
 class GCML(Strategy):
     name = "gcml"
@@ -33,29 +67,8 @@ class GCML(Strategy):
         val_batch = round_inputs["val_batch"]      # [S, ...]
         incoming = gather_sites(params, partner)
 
-        lam = ctx.fed.gcml_lambda
-        beta = ctx.fed.gcml_contrast_beta
-        eta = ctx.dcml_lr
-
-        def site_dcml(p_r, p_s, b, vb):
-            def joint(pr, ps):
-                l_r, l_s = dcml_losses(ctx.logits_fn, pr, ps, b,
-                                       ctx.scalar_loss_fn, lam, beta)
-                return l_r + l_s, (l_r, l_s)
-            grads, (l_r, l_s) = jax.grad(joint, argnums=(0, 1), has_aux=True)(p_r, p_s)
-            g_r, g_s = grads
-            w_r = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
-                              ).astype(p.dtype), p_r, g_r)
-            w_s = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
-                              ).astype(p.dtype), p_s, g_s)
-            v_r = ctx.scalar_loss_fn(w_r, vb)
-            v_s = ctx.scalar_loss_fn(w_s, vb)
-            merged = merge_by_validation(w_r, w_s, v_r, v_s)
-            return merged, (l_r, l_s, v_r, v_s)
-
-        merged, dcml_metrics = jax.vmap(site_dcml)(params, incoming, batch, val_batch)
+        merged, dcml_metrics = jax.vmap(make_site_dcml(ctx))(
+            params, incoming, batch, val_batch)
         take = is_recv & active
         new_params = where_site(take, merged, params)
         metrics = {**fl_state.get("metrics", {}),

@@ -1,145 +1,57 @@
 """Federated training driver (CPU-runnable end-to-end).
 
-Runs real federated rounds — local training, strategy exchange, site
-dropout (Algorithm 2) — on synthetic data with controllable non-IID
-heterogeneity.  Works for every assigned architecture (``--arch``, full
-or ``--reduced``) and for SA-Net tasks via ``--task dose|seg``.
+A thin CLI over :class:`repro.api.FederatedJob` — task construction,
+strategy, dropout, checkpointing and the round loop all live in the job;
+this module only maps arguments onto it.  ``--transport`` switches the
+same run between the vmapped single-process simulator and the real TCP
+stack (threaded or one-process-per-site), and ``--scheduler buffered``
+turns on FedBuff-style buffered-async rounds.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
       --strategy fedavg --sites 8 --rounds 30
   PYTHONPATH=src python -m repro.launch.train --task dose --strategy gcml \
       --sites 5 --rounds 20 --max-dropout 2
+  PYTHONPATH=src python -m repro.launch.train --sites 4 --rounds 8 \
+      --transport tcp                      # real multi-process FedAvg
+  PYTHONPATH=src python -m repro.launch.train --sites 8 --rounds 20 \
+      --scheduler buffered --buffer-k 4    # async: aggregate after 4 of 8
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointStore
-from repro.configs.base import FederationConfig, MeshConfig
-from repro.configs.registry import get_arch
-from repro.core import federation as F
-from repro.core.dropout import SiteAvailability
-from repro.data.synthetic import (DoseTaskGenerator, SegTaskGenerator,
-                                  TokenTaskGenerator)
-from repro.models import sanet as sanet_mod
-from repro.models import transformer as T
-from repro.optim import adamw
-
-
-def build_token_task(args, cfg):
-    gen = TokenTaskGenerator(vocab_size=cfg.vocab_size, num_sites=args.sites,
-                             heterogeneity=args.het,
-                             num_codebooks=cfg.num_codebooks, seed=args.seed)
-
-    def loss_fn(params, batch):
-        return T.next_token_loss(params, batch, cfg)
-
-    def logits_fn(params, batch):
-        logits, _ = T.forward(params, batch["tokens"], cfg)
-        labels = batch["tokens"][:, 1:]
-        return logits[:, :-1], labels
-
-    def init_fn(key):
-        return T.init(key, cfg)
-
-    def batches(rnd):
-        return jax.tree.map(jnp.asarray, gen.stacked_batches(
-            rnd, args.local_steps, args.batch, args.seq))
-
-    return loss_fn, logits_fn, init_fn, batches
-
-
-def build_volume_task(args, kind: str):
-    scfg = (sanet_mod.SANetConfig(in_channels=4, out_channels=1, base_filters=8,
-                                  num_levels=2, task="dose") if kind == "dose"
-            else sanet_mod.SANetConfig(in_channels=2, out_channels=3, base_filters=8,
-                                       num_levels=2, task="segmentation"))
-    vol = (16, 16, 16)
-    if kind == "dose":
-        gen = DoseTaskGenerator(volume=vol, num_oars=2, num_sites=args.sites,
-                                heterogeneity=args.het, seed=args.seed)
-        loss = lambda p, b: sanet_mod.dose_loss(p, b, scfg)
-        logits_fn = None
-    else:
-        gen = SegTaskGenerator(volume=vol, in_channels=2, num_classes=3,
-                               num_sites=args.sites, heterogeneity=args.het,
-                               seed=args.seed)
-        loss = lambda p, b: sanet_mod.segmentation_loss(p, b, scfg)
-
-        def logits_fn(params, batch):
-            pred, _ = sanet_mod.sanet_apply(params, batch["volume"], scfg)
-            return pred, batch["labels"]
-
-    def init_fn(key):
-        return sanet_mod.sanet_init(key, scfg)
-
-    def batches(rnd):
-        return jax.tree.map(jnp.asarray, gen.stacked_batches(
-            rnd, args.local_steps, args.batch))
-
-    return loss, logits_fn, init_fn, batches, scfg
+from repro.api import FederatedJob, TaskConfig
+from repro.core.session import BufferedScheduler
 
 
 def run(args) -> dict:
-    if args.task == "tokens":
-        arch = get_arch(args.arch)
-        cfg = arch.reduced() if args.reduced else arch.CONFIG
-        loss_fn, logits_fn, init_fn, batches = build_token_task(args, cfg)
-    else:
-        loss_fn, logits_fn, init_fn, batches, _ = build_volume_task(args, args.task)
-
-    fed = FederationConfig(
-        num_sites=args.sites, strategy=args.strategy,
-        local_steps=args.local_steps, rounds=args.rounds,
-        prox_mu=args.prox_mu, max_dropout_sites=args.max_dropout,
-        dropout_scenario=args.dropout_scenario)
-    mesh_cfg = MeshConfig(sites_per_pod=args.sites, fsdp=16 // args.sites
-                          if 16 % args.sites == 0 else 1,
-                          data_axis_size=args.sites * (16 // args.sites
-                          if 16 % args.sites == 0 else 1))
-    ctx = F.FLContext(
-        fed=fed, mesh=mesh_cfg, case_weights=jnp.asarray(fed.case_weights()),
-        loss_fn=loss_fn, logits_fn=logits_fn,
-        optimizer=adamw(args.lr, weight_decay=0.01),
-        grad_clip=1.0, dcml_lr=args.lr, hierarchical=False)
-
-    state = F.init_fl_state(ctx, init_fn, jax.random.PRNGKey(args.seed))
-    fl_round = jax.jit(F.build_fl_round(ctx))
-    avail = SiteAvailability(args.sites, args.max_dropout, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-
-    store = CheckpointStore(Path(args.out) / "ckpt") if args.checkpoint else None
-    history = []
-    t0 = time.time()
-    for rnd in range(args.rounds):
-        b = batches(rnd)
-        ri = F.make_round_inputs(ctx, avail, rng, rnd)
-        if ctx.fed.strategy == "gcml":
-            ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
-            ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
-        state, metrics = fl_round(state, b, ri)
-        mean_loss = float(jnp.mean(metrics["loss"]))
-        history.append({"round": rnd, "loss": mean_loss,
-                        "active": int(np.sum(ri["active"])),
-                        "per_site_loss": np.asarray(metrics["loss"]).tolist()})
-        if args.verbose and (rnd % max(args.rounds // 10, 1) == 0 or rnd == args.rounds - 1):
-            print(f"round {rnd:4d} loss {mean_loss:.4f} active {int(np.sum(ri['active']))}/{args.sites}")
-        if store and rnd % args.ckpt_every == 0:
-            store.save("global", rnd, F.global_model(state, ctx))
-    result = {"history": history, "wall_s": time.time() - t0,
-              "final_loss": history[-1]["loss"], "strategy": args.strategy}
+    task = TaskConfig(
+        kind=args.task, arch=args.arch, reduced=args.reduced,
+        sites=args.sites, batch=args.batch, seq=args.seq,
+        heterogeneity=args.het, seed=args.seed)
+    # tests may force-quiet a parsed namespace by setting args.verbose
+    verbose = getattr(args, "verbose", None)
+    if verbose is None:
+        verbose = not args.quiet
+    scheduler = (BufferedScheduler(buffer_k=args.buffer_k)
+                 if args.scheduler == "buffered" else args.scheduler)
+    job = FederatedJob(
+        task=task, strategy=args.strategy, rounds=args.rounds,
+        local_steps=args.local_steps, lr=args.lr, prox_mu=args.prox_mu,
+        max_dropout=args.max_dropout, dropout_scenario=args.dropout_scenario,
+        transport=args.transport, scheduler=scheduler, seed=args.seed,
+        checkpoint_dir=str(Path(args.out) / "ckpt") if args.checkpoint else None,
+        ckpt_every=args.ckpt_every, verbose=verbose)
+    res = job.run()
+    result = {**res.to_dict(), "strategy": args.strategy}
     if args.out:
         out = Path(args.out)
         out.mkdir(parents=True, exist_ok=True)
-        (out / f"train_{args.strategy}.json").write_text(json.dumps(result, indent=2))
+        (out / f"train_{args.strategy}.json").write_text(
+            json.dumps(result, indent=2))
     return result
 
 
@@ -161,11 +73,17 @@ def make_parser():
     ap.add_argument("--max-dropout", type=int, default=0, dest="max_dropout")
     ap.add_argument("--dropout-scenario", default="disconnect",
                     choices=["disconnect", "shutdown"], dest="dropout_scenario")
+    ap.add_argument("--transport", default="stacked",
+                    choices=["stacked", "thread", "tcp"])
+    ap.add_argument("--scheduler", default="sync", choices=["sync", "buffered"])
+    ap.add_argument("--buffer-k", type=int, default=2, dest="buffer_k",
+                    help="buffered scheduler: aggregate after K uploads")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     ap.add_argument("--checkpoint", action="store_true")
     ap.add_argument("--ckpt-every", type=int, default=10, dest="ckpt_every")
-    ap.add_argument("--verbose", action="store_true", default=True)
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-round progress output")
     return ap
 
 

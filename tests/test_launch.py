@@ -18,7 +18,13 @@ def _fake_mesh(s=2, f=2, m=2):
     abstract mesh via mesh_utils-like reshape of the one device — instead
     use jax.sharding.AbstractMesh for spec-only tests."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((s, f, m), ("site", "fsdp", "model"))
+    names = ("site", "fsdp", "model")
+    try:
+        # newer jax: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, (s, f, m))))
+    except TypeError:
+        # older jax: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh((s, f, m), names)
 
 
 def test_pick_respects_divisibility_and_uniqueness():
