@@ -1,11 +1,19 @@
-"""Table 1 analogue — measured wire bytes per FL round per strategy and
-topology, using the actual codec (what crosses the paper's gRPC channel)
-and the SA-Net backbone's real parameter count.
+"""Bytes-on-the-wire per FL round, measured on the real job path.
 
-Centralized (FedAvg/FedProx): every active site uploads weights and
-downloads the global model → 2·S·N bytes through the server (the single
-point of failure the paper criticizes).  Decentralized (GCML): ⌊S/2⌋
-direct P2P transfers, no server, bytes scale with *pairs*.
+The seed's version of this table priced raw codec payloads in isolation
+— numbers that couldn't drift *with* the stack because they never went
+through it.  This version runs :class:`repro.api.FederatedJob` on the
+actual transports and reads ``result.comm``: on the socket transports
+those are the framed bytes the ``AggregationServer`` counted crossing
+real TCP sockets (`WireStats`); on the stacked simulator they are the
+equivalent encoded payload bytes.  Compression therefore shows up for
+free, and the table doubles as the paper's communication-efficiency
+claim made measurable:
+
+  * upload bytes per round per codec (none / int8 / fp8 / topk-sparse)
+  * compression ratio vs the uncompressed run, per transport
+  * accuracy-vs-compression: final synthetic-dose loss per codec
+  * server-resident memory: the O(N) streaming accumulator vs O(S·N)
 """
 from __future__ import annotations
 
@@ -15,43 +23,59 @@ import jax
 import numpy as np
 
 from benchmarks.common import ARTIFACTS
-from repro.comms.codec import encode_message
-from repro.models.sanet import SANetConfig, sanet_init
+from repro.api import FederatedJob, TaskConfig
+
+CODECS = ["none", "int8", "fp8", "topk-sparse"]
 
 
 def run(quick: bool = False):
-    scfg = SANetConfig(in_channels=11, out_channels=1, base_filters=24,
-                       num_levels=4)
-    params = sanet_init(jax.random.PRNGKey(0), scfg)
-    host_tree = jax.tree.map(np.asarray, params)
-    wire = len(encode_message("model", {"site": 0, "round": 1}, host_tree))
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    raw = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+    rounds = 2 if quick else 5
+    sites = 3
+    # base_filters=16 ≈ 172k params — small enough for CI, big enough
+    # that per-leaf header overhead stops masking the codec ratio (the
+    # paper's SA-Net is in the millions)
+    task = TaskConfig(kind="dose", sites=sites, batch=2, volume=(16, 16, 16),
+                      base_filters=16, heterogeneity=0.3, seed=0)
+    base = FederatedJob(task=task, strategy="fedavg", rounds=rounds,
+                        lr=2e-3, seed=0)
+    transports = ["stacked", "thread"]
+    rows = {}
+    for codec in CODECS:
+        for transport in transports:
+            res = base.replace(compression=codec, transport=transport).run()
+            comm = res.comm
+            uploads = max(comm["upload_count"], 1)
+            rows[f"{codec}/{transport}"] = {
+                "final_loss": round(res.final_loss, 6),
+                "upload_bytes": comm["upload_bytes"],
+                "bytes_per_upload": comm["upload_bytes"] // uploads,
+                "download_bytes": comm["download_bytes"],
+                "measured_on_wire": not comm["simulated"],
+            }
+    for codec in CODECS:
+        for transport in transports:
+            none_row = rows[f"none/{transport}"]
+            row = rows[f"{codec}/{transport}"]
+            row["upload_ratio_vs_none"] = round(
+                none_row["upload_bytes"] / max(row["upload_bytes"], 1), 3)
     # server-resident mid-round state: the seed held every decoded upload
     # (O(S·N)); the streaming accumulator holds one fp32 model (O(N))
     from repro.core.agg_engine import StreamingAccumulator
+    from repro.models.sanet import sanet_init
+    params = sanet_init(jax.random.PRNGKey(0), task.model_config())
+    raw = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
     acc = StreamingAccumulator()
-    acc.fold(jax.tree.map(np.copy, host_tree), 1.0)
-    acc_bytes = acc.nbytes
-    rows = {}
-    for s in [5, 8, 16, 32]:
-        rows[s] = {
-            "fedavg_server_bytes": 2 * s * wire,
-            "fedprox_server_bytes": 2 * s * wire,
-            "gcml_p2p_bytes": (s // 2) * wire,
-            "gcml_vs_fedavg_ratio": (s // 2) / (2 * s),
-            "server_resident_bytes_before": s * raw,
-            "server_resident_bytes_after": acc_bytes,
-        }
-    out = {"table": "Table 1 / comm model",
-           "sanet_params": int(n_params),
-           "wire_bytes_per_model": wire,
-           "overhead_vs_raw": wire / (n_params * 4),
-           "streaming_accumulator_bytes": acc_bytes,
-           "per_site_count": rows}
+    acc.fold(jax.tree.map(lambda x: np.asarray(x, np.float32), params), 1.0)
+    out = {"table": "Table 1 / comm volume (measured on FederatedJob)",
+           "task": "dose", "sites": sites, "rounds": rounds,
+           "rows": rows,
+           "server_resident_bytes_streaming": acc.nbytes,
+           "server_resident_bytes_per_site_naive": raw}
     (ARTIFACTS / "comm_bytes.json").write_text(json.dumps(out, indent=2))
-    derived = f"wire_bytes={wire};overhead={out['overhead_vs_raw']:.4f};" \
-              f"gcml_ratio_8sites={rows[8]['gcml_vs_fedavg_ratio']:.3f}"
+    int8 = rows["int8/thread"]
+    derived = (f"int8_wire_ratio={int8['upload_ratio_vs_none']:.2f};"
+               f"int8_loss={int8['final_loss']:.4f};"
+               f"none_loss={rows['none/thread']['final_loss']:.4f}")
     return derived, out
 
 

@@ -15,20 +15,36 @@ checkpointing and metrics, and executes rounds through a pluggable
   * :class:`TcpTransport`     — same wire protocol, but each site is its
     own OS process (the paper's deployment shape).
 
-On top of the transport seam sits the scheduler seam
-(:mod:`repro.core.session`): ``SyncScheduler`` keeps barrier rounds,
-``BufferedScheduler`` gives FedBuff-style buffered-async aggregation —
-on the stacked simulator *and* on the TCP server, since both fold
-uploads through the same ``StreamingAccumulator``.
+Two more seams sit on top of the transport seam:
+
+  * the **scheduler seam** (:mod:`repro.core.session`): ``SyncScheduler``
+    keeps barrier rounds, ``BufferedScheduler`` gives FedBuff-style
+    buffered-async aggregation — on the stacked simulator *and* on the
+    TCP server, since both fold uploads through the same
+    ``StreamingAccumulator``;
+  * the **compression seam** (:mod:`repro.comms.compression`):
+    ``compression="int8" | "fp8" | "topk-sparse"`` quantizes each site's
+    upload as a per-chunk-scaled delta against the global it last
+    pulled, with a client-side error-feedback residual carried across
+    rounds; payloads decode in ``AggregationServer._handle("upload")``
+    (and at gossip receivers) before the accumulator fold, so one codec
+    implementation serves all three transports at once.
 
     job = FederatedJob(task=TaskConfig(kind="tokens", arch="qwen3-8b",
                                        sites=4, heterogeneity=0.5),
                        strategy="fedavg", rounds=12)
     result = job.run()                        # local, one process
     result = job.replace(transport="tcp").run()   # real multi-process TCP
+    result = job.replace(compression="int8").run()  # ~4x smaller uploads
 
 ``job.run(rounds)`` is the only round loop in the codebase — examples,
-the train CLI and the benchmarks all drive it.
+the train CLI and the benchmarks all drive it; ``result.comm`` reports
+the run's upload/download byte volume (real wire bytes on the socket
+transports, simulated payload bytes on the stacked simulator).
+
+The per-round lifecycle (pull → local steps → upload → fold →
+broadcast), the stale-upload rejection and staleness-discount rules,
+and how the seams compose are documented in ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -43,6 +59,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comms.compression import (KEEP_GLOBALS_DEFAULT, Codec,
+                                     UploadCompressor, decode_upload,
+                                     resolve_codec, tree_payload_nbytes)
 from repro.configs.base import FederationConfig, MeshConfig
 from repro.core import federation as F
 from repro.core import stacking
@@ -234,6 +253,8 @@ class FederatedJob:
     # execution
     transport: Union[str, "Transport"] = "stacked"
     scheduler: Union[str, RoundScheduler] = "sync"
+    compression: Union[str, Codec] = "none"   # upload codec (comms seam)
+    error_feedback: bool = True         # carry quantization residual
     seed: int = 0                       # init + dropout + pairing seed
     io_timeout: float = 120.0           # socket-transport exchange bound
     # bookkeeping
@@ -315,9 +336,14 @@ class StackedTransport(Transport):
 
     def execute(self, job: FederatedJob, rounds: int) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
+        codec = resolve_codec(job.compression)
         bundle = job.task.build()
         if isinstance(scheduler, BufferedScheduler):
-            return self._execute_buffered(job, bundle, scheduler, rounds)
+            return self._execute_buffered(job, bundle, scheduler, rounds,
+                                          codec)
+        if codec.name != "none":
+            return self._execute_compressed(job, bundle, scheduler, rounds,
+                                            codec)
         return self._execute_sync(job, bundle, scheduler, rounds)
 
     def _execute_sync(self, job, bundle, scheduler, rounds) -> JobResult:
@@ -348,18 +374,94 @@ class StackedTransport(Transport):
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: F.global_model(state, ctx),
                             extra=extra)
+        comm = None
+        if job.strategy in ("fedavg", "fedprox"):
+            # no wire in-process: report what the equivalent socket run
+            # would upload/download (one fp32 model per active site per
+            # round, each direction)
+            uploads = int(masks.sum())
+            nbytes = _per_site_nbytes(state["params"])
+            comm = {"upload_bytes": uploads * nbytes,
+                    "download_bytes": uploads * nbytes,
+                    "upload_count": uploads, "compression": "none",
+                    "simulated": True}
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
-                               state=state)
+                               state=state, comm=comm)
 
-    def _execute_buffered(self, job, bundle, scheduler, rounds) -> JobResult:
+    def _execute_compressed(self, job, bundle, scheduler, rounds,
+                            codec) -> JobResult:
+        """Sync rounds with the upload path routed through the codec:
+        every active site's post-training weights are delta-encoded
+        against the last broadcast global (error-feedback residual
+        carried across rounds), immediately decoded, and folded into the
+        :class:`StreamingAccumulator` at the site's case weight — the
+        exact client/server path the socket transports drive against the
+        ``AggregationServer``, simulated in process.  The first round
+        uploads full (quantized) weights; deltas start once a global
+        exists, mirroring a server that never saw the initialization."""
+        if job.strategy != "fedavg":
+            raise ValueError(
+                "compression on the stacked transport currently supports "
+                f"fedavg only, not {job.strategy!r}; run fedprox/gcml "
+                "compression on the thread/tcp transports")
+        ctx = job.context(bundle, strategy="individual")  # local-only rounds
+        num_sites = ctx.fed.num_sites
+        state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+        local_round = jax.jit(F.build_fl_round(ctx))
+        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        case_w = np.asarray(job.federation().case_weights())
+        comps = [UploadCompressor(codec, job.error_feedback)
+                 for _ in range(num_sites)]
+        reference = None                     # last broadcast global (fp32)
+        global_params = jax.tree.map(np.asarray, F.global_model(state, ctx))
+        recorder = job.recorder(rounds, num_sites)
+        for r in range(rounds):
+            b = bundle.round_batches(r, job.local_steps)
+            ri = F.make_round_inputs(ctx, active=masks[r])
+            t_step = time.time()
+            state, metrics = local_round(state, b, ri)
+            jax.block_until_ready(state)
+            step_s = time.time() - t_step
+            active_idx = [int(i) for i in np.flatnonzero(masks[r])]
+            acc = StreamingAccumulator()
+            round_bytes = 0
+            for site in active_idx:
+                params_site = jax.tree.map(
+                    lambda x: np.asarray(x[site], np.float32), state["params"])
+                enc, cmeta = comps[site].encode(params_site, reference)
+                round_bytes += tree_payload_nbytes(enc)
+                acc.fold(decode_upload(enc, cmeta, reference),
+                         float(case_w[site]))
+            if acc.count:
+                global_params = acc.finalize()
+                reference = global_params
+                state = _set_param_sites(state, active_idx, global_params)
+            recorder.record(r, np.asarray(metrics["loss"]), masks[r],
+                            global_fn=lambda: global_params,
+                            extra={"step_s": step_s,
+                                   "upload_bytes": round_bytes})
+        comm = _compressor_comm(comps, codec,
+                                _per_site_nbytes(state["params"]))
+        return recorder.result(global_params, transport=self.name,
+                               scheduler=scheduler.name, state=state,
+                               comm=comm)
+
+    def _execute_buffered(self, job, bundle, scheduler, rounds,
+                          codec) -> JobResult:
         """FedBuff-style buffered async, simulated: every round all active
         sites train locally, then 'arrive' in random order; each arrival
         folds into the :class:`StreamingAccumulator` at a staleness-
         discounted weight, and the buffer finalizes into a new global
         whenever ``scheduler.ready`` fires (K of S).  After uploading,
         sites pull the latest global — exactly the site loop the socket
-        transports run against the buffered ``AggregationServer``."""
+        transports run against the buffered ``AggregationServer``.
+
+        With a compression codec, each arrival is delta-encoded against
+        the global *version* that site last pulled (a bounded history of
+        recent globals provides the decode references, mirroring the
+        server's ``keep_globals`` window) and decoded before the fold.
+        """
         if job.strategy != "fedavg":
             raise ValueError("buffered-async scheduling currently supports "
                              f"fedavg only, not {job.strategy!r}")
@@ -374,6 +476,12 @@ class StackedTransport(Transport):
         version = 0
         base_version = np.zeros(num_sites, np.int64)
         global_params = jax.tree.map(np.asarray, F.global_model(state, ctx))
+        compress = codec.name != "none"
+        comps = [UploadCompressor(codec, job.error_feedback)
+                 for _ in range(num_sites)]
+        # version → global, the decode references for delta uploads; the
+        # init model is version 0 (every site starts from it)
+        globals_by_version = {0: global_params}
         recorder = job.recorder(rounds, num_sites)
         for r in range(rounds):
             b = bundle.round_batches(r, job.local_steps)
@@ -388,21 +496,53 @@ class StackedTransport(Transport):
                     state = _set_param_sites(state, [site], global_params)
                     base_version[site] = version
                     continue
-                acc.fold(jax.tree.map(lambda x: np.asarray(x[site], np.float32),
-                                      state["params"]),
-                         float(case_w[site]) * discount)
+                upload = jax.tree.map(
+                    lambda x: np.asarray(x[site], np.float32), state["params"])
+                if compress:
+                    ref = globals_by_version.get(int(base_version[site]))
+                    enc, cmeta = comps[site].encode(upload, ref)
+                    upload = decode_upload(enc, cmeta, ref)
+                acc.fold(upload, float(case_w[site]) * discount)
                 uploaded.append(site)
                 if scheduler.ready(acc.count, len(active_idx)):
                     global_params = acc.finalize()
                     version += 1
+                    if compress:
+                        globals_by_version[version] = global_params
+                        for old in [v for v in globals_by_version
+                                    if v <= version - KEEP_GLOBALS_DEFAULT]:
+                            del globals_by_version[old]
             if uploaded:                             # pull latest global
                 state = _set_param_sites(state, uploaded, global_params)
                 base_version[np.asarray(uploaded)] = version
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: global_params,
                             extra={"version": version})
+        comm = (_compressor_comm(comps, codec,
+                                 _per_site_nbytes(state["params"]))
+                if compress else None)
         return recorder.result(global_params, transport=self.name,
-                               scheduler=scheduler.name, state=state)
+                               scheduler=scheduler.name, state=state,
+                               comm=comm)
+
+
+def _per_site_nbytes(params_stacked) -> int:
+    """Wire bytes of one site's uncompressed model (per-leaf dtypes)."""
+    return sum(int(np.prod(x.shape[1:], dtype=np.int64)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params_stacked))
+
+
+def _compressor_comm(comps: List[UploadCompressor], codec: Codec,
+                     download_nbytes: int) -> Dict[str, Any]:
+    """Aggregate client-side compressor counters into the JobResult comm
+    dict (stacked simulator: payload bytes, no framing/header overhead;
+    downloads stay uncompressed fp32)."""
+    uploads = sum(c.encodes for c in comps)
+    return {"upload_bytes": sum(c.encoded_bytes for c in comps),
+            "upload_raw_bytes": sum(c.raw_bytes for c in comps),
+            "download_bytes": uploads * download_nbytes,
+            "upload_count": uploads, "compression": codec.name,
+            "simulated": True}
 
 
 def _set_param_sites(fl_state, sites: List[int], global_tree):
@@ -445,6 +585,14 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
     losses: List[float] = []
     base_round = 0          # server round of the global this site trained on
     stale_uploads = 0
+    # upload compression: one compressor per outgoing stream, so the
+    # error-feedback residuals compensate the right channel
+    codec = resolve_codec(job.compression)
+    comp = (UploadCompressor(codec, job.error_feedback)
+            if codec.name != "none" else None)
+    peer_comp = (UploadCompressor(codec, job.error_feedback)
+                 if codec.name != "none" and strategy.needs_pairing else None)
+    reference = None        # last pulled global (fp32) — the delta anchor
     try:
         if strategy.needs_pairing:
             from repro.core.strategies.gcml import make_site_dcml
@@ -461,10 +609,15 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                            if asg["is_receiver"][j]}
                 if asg["is_sender"][site_id]:
                     target = recv_of[site_id]
+                    wire_tree = _site_host_tree(state["params"])
+                    smeta = None
+                    if peer_comp is not None:   # quantize the P2P push too
+                        wire_tree, smeta = peer_comp.encode(wire_tree)
                     peer.send_model(tuple(asg["addresses"][str(target)]),
-                                    _site_host_tree(state["params"]), r + 1)
+                                    wire_tree, r + 1, meta_extra=smeta)
                 if asg["is_receiver"][site_id]:
-                    _, incoming = peer.recv_model(timeout=job.io_timeout)
+                    imeta, incoming = peer.recv_model(timeout=job.io_timeout)
+                    incoming = decode_upload(incoming, imeta)
                     merged, _ = dcml_step(
                         stacking.site_slice(state["params"], 0),
                         jax.tree.map(jnp.asarray, incoming),
@@ -485,9 +638,24 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 # loop round, so the upload carries the round of the global
                 # this site last pulled — the FedBuff staleness anchor
                 upload_round = base_round + 1 if buffered else r + 1
-                ack = peer.upload(agg_addr, _site_host_tree(state["params"]),
-                                  upload_round,
-                                  active_sites=int(masks[r].sum()))
+                payload = _site_host_tree(state["params"])
+                cmeta = None
+                if comp is not None:
+                    # a site that sat out long enough for its reference
+                    # global to leave the server's keep_globals window
+                    # must re-send dense: under the sync barrier a
+                    # stale-acked (unfoldable) delta would leave the
+                    # round one upload short of `expected` forever
+                    if (reference is not None
+                            and upload_round - base_round
+                            >= KEEP_GLOBALS_DEFAULT):
+                        reference = None
+                    payload, cmeta = comp.encode(payload, reference)
+                    cmeta["base_round"] = base_round if reference is not None \
+                        else 0
+                ack = peer.upload(agg_addr, payload, upload_round,
+                                  active_sites=int(masks[r].sum()),
+                                  meta_extra=cmeta)
                 if ack.get("stale"):
                     # rejected as too stale: the resync below restores a
                     # small staleness for the next upload
@@ -500,6 +668,9 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 g, dmeta = peer.download(agg_addr, want, with_meta=True)
                 if g is not None:        # None only if no buffer finalized yet
                     base_round = int(dmeta["round"])
+                    if comp is not None:     # next delta anchors to this pull
+                        reference = jax.tree.map(
+                            lambda x: np.asarray(x, np.float32), g)
                     new_params = jax.tree.map(
                         lambda x, gg: jnp.broadcast_to(
                             jnp.asarray(gg).astype(x.dtype)[None], x.shape),
@@ -509,8 +680,12 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                         state = {**state, "strategy": {
                             "global": jax.tree.map(
                                 lambda gg: jnp.asarray(gg, jnp.float32), g)}}
+        streams = [c for c in (comp, peer_comp) if c is not None]
         return {"losses": losses, "stale_uploads": stale_uploads,
-                "params": _site_host_tree(state["params"])}
+                "params": _site_host_tree(state["params"]),
+                "upload_payload_bytes": sum(c.encoded_bytes for c in streams),
+                "upload_raw_bytes": sum(c.raw_bytes for c in streams),
+                "upload_count": sum(c.encodes for c in streams)}
     finally:
         peer.close()
 
@@ -551,6 +726,7 @@ class _SocketTransport(Transport):
         from repro.comms.coordinator import (AggregationServer,
                                              CoordinationServer)
         servers = []
+        agg = None
         agg_addr = coord_addr = None
         try:
             if not strategy.needs_pairing and job.strategy != "individual":
@@ -575,6 +751,29 @@ class _SocketTransport(Transport):
         dead = {i: p["error"] for i, p in per_site.items() if "error" in p}
         if dead:
             raise RuntimeError(f"site workers failed: {dead}")
+        # bytes-on-the-wire accounting: server-side counters are the real
+        # framed bytes; site counters are the encoded payload (covers the
+        # serverless gossip P2P pushes too)
+        codec = resolve_codec(job.compression)
+        site_payload = sum(p.get("upload_payload_bytes", 0)
+                           for p in per_site.values())
+        site_raw = sum(p.get("upload_raw_bytes", 0) for p in per_site.values())
+        site_count = sum(p.get("upload_count", 0) for p in per_site.values())
+        comm = None
+        if agg is not None:
+            snap = agg.stats.snapshot()
+            comm = {"upload_bytes": snap.get("upload", {}).get("in_bytes", 0),
+                    "download_bytes":
+                        snap.get("download", {}).get("out_bytes", 0),
+                    "upload_count": snap.get("upload", {}).get("count", 0),
+                    "site_payload_bytes": site_payload,
+                    "upload_raw_bytes": site_raw,
+                    "compression": codec.name, "simulated": False}
+        elif site_count:                     # gossip P2P, compressed
+            comm = {"upload_bytes": site_payload,
+                    "upload_raw_bytes": site_raw, "download_bytes": 0,
+                    "upload_count": site_count,
+                    "compression": codec.name, "simulated": False}
         losses = np.stack([per_site[i]["losses"] for i in range(num_sites)])
         masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
         stale = [per_site[i].get("stale_uploads", 0) for i in range(num_sites)]
@@ -594,7 +793,7 @@ class _SocketTransport(Transport):
         if recorder.store is not None:       # --checkpoint: final global
             recorder.store.save("global", rounds - 1, global_params)
         return recorder.result(global_params, transport=self.name,
-                               scheduler=scheduler.name)
+                               scheduler=scheduler.name, comm=comm)
 
     def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
         raise NotImplementedError

@@ -11,9 +11,19 @@ Model-weight messages serialize a flattened pytree: the treedef is
 encoded as a JSON skeleton, leaves as (dtype, shape, offset) records
 into one contiguous payload (single syscall per send; zero-copy numpy
 views on receive) — same design point as gRPC's binary frames.
+
+Quantized-tensor wire type: a pytree leaf may be a
+:class:`QuantizedTensor` — a codec name, the logical (dequantized)
+shape, and a dict of component arrays (e.g. ``int8`` values plus
+per-chunk ``fp32`` scales).  It is serialized as a ``__quant__``
+skeleton node whose component arrays ride in the same contiguous
+payload as ordinary leaves, and decodes back to a ``QuantizedTensor``
+— the transport layer never needs to know how to dequantize (that is
+:mod:`repro.comms.compression`'s job).
 """
 from __future__ import annotations
 
+import dataclasses
 import io
 import json
 import struct
@@ -25,7 +35,36 @@ MAGIC = b"FKBP"
 _HDR = struct.Struct("<4sI")
 
 
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A compressed pytree leaf on the wire.
+
+    ``codec`` names the compression scheme (see
+    ``repro.comms.compression.resolve_codec``), ``shape`` is the logical
+    shape the tensor dequantizes back to, and ``data`` holds the codec's
+    component arrays (quantized values, scales, indices, …).  ``meta``
+    carries small codec-specific scalars (chunk size, k, …).
+    """
+
+    codec: str
+    shape: Tuple[int, ...]
+    data: Dict[str, np.ndarray]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        """Payload bytes this leaf contributes to the wire."""
+        return sum(np.asarray(a).nbytes for a in self.data.values())
+
+
 def _flatten(obj: Any, prefix: str, leaves: List[Tuple[str, np.ndarray]], skeleton: Any):
+    if isinstance(obj, QuantizedTensor):
+        data_sk = {k: _flatten(obj.data[k], f"{prefix}/{k}", leaves, skeleton)
+                   for k in sorted(obj.data)}
+        node = {"codec": obj.codec, "shape": list(obj.shape), "data": data_sk}
+        if obj.meta:
+            node["meta"] = obj.meta
+        return {"__quant__": node}
     if isinstance(obj, dict):
         sk = {}
         for k in sorted(obj):
@@ -41,10 +80,26 @@ def _flatten(obj: Any, prefix: str, leaves: List[Tuple[str, np.ndarray]], skelet
     return {"__leaf__": len(leaves) - 1}
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """``np.dtype(name)``, falling back to the ml_dtypes extension types
+    (``float8_e4m3fn`` etc.) that numpy only resolves once registered."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _unflatten(sk: Any, leaves: List[np.ndarray]) -> Any:
     if isinstance(sk, dict):
         if "__leaf__" in sk:
             return leaves[sk["__leaf__"]]
+        if "__quant__" in sk:
+            q = sk["__quant__"]
+            return QuantizedTensor(
+                codec=q["codec"], shape=tuple(q["shape"]),
+                data={k: _unflatten(v, leaves) for k, v in q["data"].items()},
+                meta=q.get("meta", {}))
         if "__list__" in sk:
             return [_unflatten(v, leaves) for v in sk["__list__"]]
         if "__tuple__" in sk:
@@ -60,11 +115,13 @@ def encode_message(kind: str, meta: Dict[str, Any], tree: Any = None) -> bytes:
     records = []
     payload = io.BytesIO()
     offset = 0
-    for name, arr in leaves:
+    for _name, arr in leaves:
         buf = np.ascontiguousarray(arr)   # NB: promotes 0-d to 1-d; keep arr.shape
-        records.append({"name": name, "dtype": str(buf.dtype),
-                        "shape": list(arr.shape), "offset": offset,
-                        "nbytes": buf.nbytes})
+        # records are positional and minimal — leaf names and derivable
+        # byte counts stay off the wire (at small model scales per-leaf
+        # header strings rival the quantized payload itself)
+        records.append({"dtype": str(buf.dtype),
+                        "shape": list(arr.shape), "offset": offset})
         payload.write(buf.tobytes())
         offset += buf.nbytes
     header = json.dumps({"kind": kind, "meta": meta, "skeleton": skeleton,
@@ -93,7 +150,7 @@ def decode_message(data: bytes, *, writable: bool = False
         count = 1
         for d in rec["shape"]:
             count *= d
-        arr = np.frombuffer(data, dtype=np.dtype(rec["dtype"]),
+        arr = np.frombuffer(data, dtype=_np_dtype(rec["dtype"]),
                             count=count, offset=start).reshape(tuple(rec["shape"]))
         if writable:
             arr = arr.copy()

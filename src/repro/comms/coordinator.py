@@ -17,8 +17,9 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.comms import compression
 from repro.comms.codec import encode_message
-from repro.comms.transport import Server
+from repro.comms.transport import Server, WireStats
 from repro.core.agg_engine import StreamingAccumulator
 from repro.core.gossip import pair_sites
 from repro.core.session import RoundScheduler, SyncScheduler
@@ -35,6 +36,13 @@ class AggregationServer:
     outwaits ``download_timeout`` gets an ``error`` reply (surfaced to
     the client as a ``RuntimeError``) instead of a ``None`` global model.
 
+    Quantized uploads (see :mod:`repro.comms.compression`) decode here,
+    *before* the accumulator fold: a payload tagged ``compression`` is
+    dequantized, and a ``delta`` payload is rebuilt against the global
+    the site last pulled (``base_round``, served from a bounded history
+    of recent globals) — so all transports compress through the same
+    server seam, and the fp32 fold itself never changes.
+
     The *when to aggregate / at what weight* decision is delegated to a
     :class:`~repro.core.session.RoundScheduler`.  The default
     :class:`SyncScheduler` keeps barrier semantics and rejects uploads
@@ -48,30 +56,59 @@ class AggregationServer:
     def __init__(self, host: str, port: int, num_sites: int,
                  case_weights: Optional[List[float]] = None,
                  download_timeout: float = 60.0,
-                 scheduler: Optional[RoundScheduler] = None):
+                 scheduler: Optional[RoundScheduler] = None,
+                 keep_globals: int = compression.KEEP_GLOBALS_DEFAULT):
         self.num_sites = num_sites
         self.weights = {i: (case_weights[i] if case_weights else 1.0)
                         for i in range(num_sites)}
         self.download_timeout = download_timeout
         self.scheduler = scheduler or SyncScheduler()
+        self.keep_globals = keep_globals
+        self.stats = WireStats()
         self._lock = threading.Condition()
         self._acc = StreamingAccumulator()
         self._folded: Set[int] = set()
         self._round = 0
         self._global: Any = None
+        # recent globals by round — the decode references for quantized
+        # *delta* uploads (a site's delta is anchored to the global it
+        # last pulled; under a buffered scheduler that can lag several
+        # rounds, so a bounded history is kept, not just the latest)
+        self._globals: Dict[int, Any] = {}
         # writable decode lets the accumulator scale fp32 uploads in place
         self.server = Server(host, port, self._handle,
-                             decode_writable=True).start()
+                             decode_writable=True, stats=self.stats).start()
         self.addr = self.server.addr
+
+    def _discount(self, upload_round: int) -> Optional[float]:
+        """Lock held.  The round currently being collected is
+        ``self._round + 1``; staleness 0 = an upload for exactly that."""
+        return self.scheduler.discount(self._round + 1 - upload_round)
 
     def _handle(self, kind, meta, tree):
         if kind == "upload":
+            site = int(meta["site"])
+            if compression.is_compressed(meta) or meta.get("delta"):
+                # dequantize OUTSIDE the lock — a full-model numpy decode
+                # per upload would otherwise serialize all concurrent
+                # sites.  Only the staleness pre-check and the reference
+                # snapshot need the lock; staleness is re-checked before
+                # the fold in case the round advanced during the decode.
+                with self._lock:
+                    upload_round = int(meta.get("round", self._round + 1))
+                    if self._discount(upload_round) is None:
+                        return encode_message(
+                            "ack", {"round": self._round, "stale": True}, None)
+                    reference = self._globals.get(int(meta.get("base_round", 0)))
+                if meta.get("delta") and reference is None:
+                    # reference global already evicted: the site resyncs
+                    # and re-uploads against a fresh one (or dense)
+                    return encode_message(
+                        "ack", {"round": self._round, "stale": True}, None)
+                tree = compression.decode_upload(tree, meta, reference)
             with self._lock:
-                site = int(meta["site"])
-                # the round currently being collected is self._round + 1;
-                # staleness 0 = an upload for exactly that round
                 upload_round = int(meta.get("round", self._round + 1))
-                discount = self.scheduler.discount(self._round + 1 - upload_round)
+                discount = self._discount(upload_round)
                 if discount is None:
                     return encode_message(
                         "ack", {"round": self._round, "stale": True}, None)
@@ -83,6 +120,10 @@ class AggregationServer:
                     self._global = self._acc.finalize()
                     self._folded = set()
                     self._round += 1
+                    self._globals[self._round] = self._global
+                    for old in [k for k in self._globals
+                                if k <= self._round - self.keep_globals]:
+                        del self._globals[old]
                     self._lock.notify_all()
             return encode_message("ack", {"round": self._round,
                                           "stale": False}, None)

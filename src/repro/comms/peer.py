@@ -44,17 +44,27 @@ class Peer:
             self._channels[addr] = Channel(addr)
         return self._channels[addr]
 
-    def send_model(self, addr: Address, weights: Any, round_index: int):
-        """Sender role: push local weights directly to the receiver site."""
+    def send_model(self, addr: Address, weights: Any, round_index: int,
+                   meta_extra: Optional[Dict] = None):
+        """Sender role: push local weights directly to the receiver site.
+        ``meta_extra`` rides along (e.g. the compression codec tags the
+        receiver needs to dequantize — see ``repro.comms.compression``)."""
         self._channel(addr).request(
-            "model", {"site": self.site_id, "round": round_index}, weights)
+            "model",
+            {"site": self.site_id, "round": round_index, **(meta_extra or {})},
+            weights)
 
     # centralized-FL verbs
     def upload(self, server_addr: Address, weights: Any, round_index: int,
-               active_sites: Optional[int] = None) -> Dict:
+               active_sites: Optional[int] = None,
+               meta_extra: Optional[Dict] = None) -> Dict:
         """Upload local weights; returns the server ack metadata (callers
-        can check ``ack["stale"]`` — a rejected straggler upload)."""
-        meta = {"site": self.site_id, "round": round_index}
+        can check ``ack["stale"]`` — a rejected straggler upload).
+        ``meta_extra`` carries the compression tags
+        (``compression``/``delta``/``base_round``) the server's
+        :func:`~repro.comms.compression.decode_upload` reads."""
+        meta = {"site": self.site_id, "round": round_index,
+                **(meta_extra or {})}
         if active_sites is not None:
             meta["active_sites"] = active_sites
         _, ack, _ = self._channel(server_addr).request("upload", meta, weights)

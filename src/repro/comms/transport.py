@@ -19,6 +19,33 @@ Address = Tuple[str, int]
 Handler = Callable[[str, Dict[str, Any], Any], Optional[bytes]]
 
 
+class WireStats:
+    """Thread-safe per-message-kind byte counters for a :class:`Server`.
+
+    Counts the framed request/reply bytes that actually cross the wire
+    (payload + header; the 8-byte frame prefix excluded), keyed by rpc
+    kind — so an ``AggregationServer`` can report exactly how many
+    upload bytes it received and download bytes it served, with or
+    without compression (see ``benchmarks/comm_bytes.py``).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._by_kind: Dict[str, list] = {}
+
+    def add(self, kind: str, bytes_in: int, bytes_out: int) -> None:
+        with self._lock:
+            row = self._by_kind.setdefault(kind, [0, 0, 0])
+            row[0] += int(bytes_in)
+            row[1] += int(bytes_out)
+            row[2] += 1
+
+    def snapshot(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {k: {"in_bytes": v[0], "out_bytes": v[1], "count": v[2]}
+                    for k, v in self._by_kind.items()}
+
+
 class Server:
     """Threaded request/response TCP server.
 
@@ -32,10 +59,12 @@ class Server:
     """
 
     def __init__(self, host: str, port: int, handler: Handler,
-                 decode_writable: bool = False):
+                 decode_writable: bool = False,
+                 stats: Optional[WireStats] = None):
         self.addr: Address = (host, port)
         self.handler = handler
         self.decode_writable = decode_writable
+        self.stats = stats
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind(self.addr)
@@ -67,6 +96,7 @@ class Server:
                     data = read_frame(conn)
                 except (ConnectionError, OSError):
                     return
+                kind = "?"
                 try:
                     kind, meta, tree = decode_message(
                         data, writable=self.decode_writable)
@@ -75,6 +105,8 @@ class Server:
                         reply = encode_message("ok", {}, None)
                 except Exception as e:  # noqa: BLE001 — wire errors to caller
                     reply = encode_message("error", {"message": repr(e)}, None)
+                if self.stats is not None:
+                    self.stats.add(kind, len(data), len(reply))
                 try:
                     conn.sendall(frame(reply))
                 except OSError:

@@ -22,10 +22,19 @@ Both fold straight into the PR-1 :class:`~repro.core.agg_engine.StreamingAccumul
 effective per-upload weights always sum to 1.
 
 :class:`RoundRecorder` / :class:`JobResult` are the transport-agnostic
-history + checkpoint bookkeeping every backend shares, and
-:func:`availability_masks` replays the Algorithm-2 dropout chain
+history + checkpoint bookkeeping every backend shares (``JobResult.comm``
+carries the run's upload/download byte accounting — real wire bytes on
+socket transports, simulated payload bytes on the stacked simulator),
+and :func:`availability_masks` replays the Algorithm-2 dropout chain
 deterministically so distributed site processes agree on the schedule
 without extra coordination traffic.
+
+Staleness interacts with the compression seam: a quantized *delta*
+upload is anchored to the global version its ``discount`` staleness is
+measured against, so the aggregation point keeps a bounded history of
+recent globals to decode against (``AggregationServer.keep_globals``).
+The full pull → local steps → upload → fold → broadcast lifecycle for
+both schedulers is documented in ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -158,6 +167,11 @@ class JobResult:
     transport: str
     scheduler: str
     state: Optional[Dict[str, Any]] = None  # stacked fl_state (stacked only)
+    # communication accounting: upload/download bytes for the run (real
+    # wire bytes on socket transports, simulated payload bytes on the
+    # stacked simulator — see benchmarks/comm_bytes.py); None when the
+    # strategy has no measured exchange
+    comm: Optional[Dict[str, Any]] = None
 
     @property
     def losses(self) -> List[float]:
@@ -170,7 +184,7 @@ class JobResult:
     def to_dict(self) -> Dict[str, Any]:
         return {"history": self.history, "final_loss": self.final_loss,
                 "wall_s": self.wall_s, "transport": self.transport,
-                "scheduler": self.scheduler}
+                "scheduler": self.scheduler, "comm": self.comm}
 
 
 class RoundRecorder:
@@ -219,7 +233,7 @@ class RoundRecorder:
             self.store.save("global", round_index, global_fn())
 
     def result(self, global_params, *, transport: str, scheduler: str,
-               state=None) -> JobResult:
+               state=None, comm=None) -> JobResult:
         return JobResult(history=self.history, global_params=global_params,
                          wall_s=time.time() - self._t0, transport=transport,
-                         scheduler=scheduler, state=state)
+                         scheduler=scheduler, state=state, comm=comm)

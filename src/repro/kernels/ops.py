@@ -60,6 +60,23 @@ def fedagg_pytree(stacked_tree, weights, *, interpret: Optional[bool] = None):
     return eng.global_mean(stacked_tree, weights)
 
 
+def quantize_int8(x2d, *, block_c: int = 256, interpret: Optional[bool] = None):
+    """Per-chunk int8 quantization: [C, chunk] fp32 → (int8 [C, chunk],
+    fp32 scales [C]).  The upload-compression hot path (see
+    ``repro.comms.compression``)."""
+    from repro.kernels.quantize import quantize_int8 as _quant
+    interp = _default_interpret() if interpret is None else interpret
+    return _quant(x2d, block_c=block_c, interpret=interp)
+
+
+def dequantize_int8(values, scales, *, block_c: int = 256,
+                    interpret: Optional[bool] = None):
+    """Inverse of :func:`quantize_int8`: int8 values × per-chunk scales."""
+    from repro.kernels.quantize import dequantize_int8 as _dequant
+    interp = _default_interpret() if interpret is None else interpret
+    return _dequant(values, scales, block_c=block_c, interpret=interp)
+
+
 def mamba_scan(dt, b_mat, c_mat, x, log_a, *, chunk: int = 128,
                block_di: int = 512, interpret: Optional[bool] = None):
     """Mamba selective scan with VMEM-resident state (see mamba_scan.py)."""

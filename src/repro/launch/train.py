@@ -4,8 +4,12 @@ A thin CLI over :class:`repro.api.FederatedJob` — task construction,
 strategy, dropout, checkpointing and the round loop all live in the job;
 this module only maps arguments onto it.  ``--transport`` switches the
 same run between the vmapped single-process simulator and the real TCP
-stack (threaded or one-process-per-site), and ``--scheduler buffered``
-turns on FedBuff-style buffered-async rounds.
+stack (threaded or one-process-per-site), ``--scheduler buffered`` turns
+on FedBuff-style buffered-async rounds, and ``--compression int8`` (or
+``fp8``/``topk-sparse``) quantizes every upload as an error-feedback
+delta (~4× fewer bytes on the wire).  ``--dry-run`` resolves the full
+job and prints it without training — the hook the docs check uses to
+keep README snippets honest.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
@@ -16,6 +20,8 @@ Examples:
       --transport tcp                      # real multi-process FedAvg
   PYTHONPATH=src python -m repro.launch.train --sites 8 --rounds 20 \
       --scheduler buffered --buffer-k 4    # async: aggregate after 4 of 8
+  PYTHONPATH=src python -m repro.launch.train --sites 4 --rounds 10 \
+      --transport tcp --compression int8   # quantized delta uploads
 """
 from __future__ import annotations
 
@@ -42,9 +48,28 @@ def run(args) -> dict:
         task=task, strategy=args.strategy, rounds=args.rounds,
         local_steps=args.local_steps, lr=args.lr, prox_mu=args.prox_mu,
         max_dropout=args.max_dropout, dropout_scenario=args.dropout_scenario,
-        transport=args.transport, scheduler=scheduler, seed=args.seed,
+        transport=args.transport, scheduler=scheduler,
+        compression=args.compression,
+        error_feedback=not args.no_error_feedback, seed=args.seed,
         checkpoint_dir=str(Path(args.out) / "ckpt") if args.checkpoint else None,
         ckpt_every=args.ckpt_every, verbose=verbose)
+    if getattr(args, "dry_run", False):
+        # resolve everything that could drift (transport/scheduler/codec
+        # names, task construction) but skip the training itself
+        from repro.api import resolve_transport
+        from repro.comms.compression import resolve_codec
+        from repro.core.session import resolve_scheduler
+        resolved = {
+            "dry_run": True, "strategy": job.strategy,
+            "task": job.task.kind, "sites": job.task.sites,
+            "rounds": job.rounds,
+            "transport": resolve_transport(job.transport).name,
+            "scheduler": resolve_scheduler(job.scheduler).name,
+            "compression": resolve_codec(job.compression).name,
+            "error_feedback": job.error_feedback,
+        }
+        print(json.dumps(resolved))
+        return resolved
     res = job.run()
     result = {**res.to_dict(), "strategy": args.strategy}
     if args.out:
@@ -78,6 +103,14 @@ def make_parser():
     ap.add_argument("--scheduler", default="sync", choices=["sync", "buffered"])
     ap.add_argument("--buffer-k", type=int, default=2, dest="buffer_k",
                     help="buffered scheduler: aggregate after K uploads")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8", "fp8", "topk", "topk-sparse"],
+                    help="quantize uploads (error-feedback deltas)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    dest="no_error_feedback",
+                    help="disable the client-side quantization residual")
+    ap.add_argument("--dry-run", action="store_true", dest="dry_run",
+                    help="resolve and print the job, skip training")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     ap.add_argument("--checkpoint", action="store_true")
