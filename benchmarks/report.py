@@ -46,6 +46,38 @@ def roofline_table() -> str:
     return "\n".join(out)
 
 
+def round_engine_table() -> str:
+    fn = ARTIFACTS / "BENCH_round_engine.json"
+    if not fn.exists():
+        return "_run benchmarks.round_engine first_"
+    rec = json.loads(fn.read_text())
+    out = [f"_{rec['rounds']}-round stacked FedAvg, {rec['sites']} sites "
+           "(CPU, small config); exec = wall − compile, one fresh process "
+           "per variant_\n",
+           "| path | rounds/s | exec (s) | compile (s) |",
+           "|---|---|---|---|"]
+    for name, key in [("per-round loop (retired)", "loop"),
+                      ("scan engine (host batches)", "scan"),
+                      ("scan engine (device data)", "scan_device_data"),
+                      ("per-round loop, int8", "loop_int8"),
+                      ("scan engine, int8 on-device", "scan_int8"),
+                      ("per-round loop, buffered", "loop_buffered"),
+                      ("scan engine, buffered traced", "scan_buffered")]:
+        r = rec.get(key)
+        if r is None:
+            continue
+        out.append(f"| {name} | {r['rounds_per_s']:.1f} | {r['exec_s']:.2f} "
+                   f"| {r['compile_s']:.1f} |")
+    sp = rec["speedup"]
+    out.append(f"\nSpeedup (wall − compile): int8 **{sp['int8_exec']:.1f}×**"
+               f", buffered **{sp.get('buffered_exec', 0):.1f}×**, sync "
+               f"**{sp['sync_exec']:.1f}×** (compute-floor-bound on this "
+               "container — see the JSON note).  Chunk sweep (rounds/s): "
+               + ", ".join(f"K={k}: {v:.1f}"
+                           for k, v in rec["chunk_sweep_rounds_per_s"].items()))
+    return "\n".join(out)
+
+
 def checks_table() -> str:
     out = ["| benchmark | check | pass |", "|---|---|---|"]
     for fn in sorted(ARTIFACTS.glob("*.json")):
@@ -100,6 +132,8 @@ if __name__ == "__main__":
     print(dryrun_table())
     print("\n## §Roofline\n")
     print(roofline_table())
+    print("\n## §Compiled round engine\n")
+    print(round_engine_table())
     print("\n## §Perf hillclimb\n")
     print(hillclimb_table())
     print("\n## Paper-claim checks\n")

@@ -1,0 +1,167 @@
+"""Compiled round engine vs the retired per-round loop (ISSUE 4).
+
+The tentpole perf claim: fusing K federated rounds into one donated
+``lax.scan`` (with on-device compression on the int8 path) removes the
+per-round host surface — Python dispatch, host RNG + batch conversion,
+the per-site device→host copy + numpy quantize/fold of the compressed
+loop — that gated the stacked simulator.
+
+Protocol: every timed variant is ONE fresh ``repro.launch.train``
+process (the way a user actually runs a 20-round job), so each engine
+pays its own real host-side cost profile; timing comes from the job's
+own artifact (``wall_s`` spans the round loop only, ``compile_s`` is
+the one-time jit compile measured separately since the ISSUE-4 timing
+fix).  Speedups compare ``wall_s − compile_s``:
+
+  * ``loop``        — the retired per-round driver (``--round-engine loop``)
+  * ``scan``        — the compiled engine, host batches (one H2D per chunk)
+  * ``scan+device`` — batches/masks from the threaded on-device PRNG
+  * ``loop/scan int8`` — the compressed stacked path before/after
+
+  * ``loop/scan buffered`` — the FedBuff arrival loop, host vs traced
+
+plus an in-process chunk-size sweep.  Writes ``BENCH_round_engine.json``
+with rounds/s, per-round host↔device byte estimates, and the speedup
+checks.  On this 2-core CPU container the sync-barrier path is bounded
+by the XLA compute floor (both engines execute the identical per-round
+program, so the scan's win there is only the removed host surface ≈
+no-regression); the wall-clock multiples show on the paths with a real
+per-round host surface: int8 (per-site D2H copy + numpy codec + fold,
+≥3×) and buffered (per-arrival host loop).  On an accelerator the
+dispatch/PCIe-bound regime the ISSUE targets applies to every path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+SITES, BATCH, SEQ = 8, 1, 8      # small config: overhead-dominated rounds
+
+
+def _run_cli(tmp: Path, name: str, rounds: int, extra) -> dict:
+    """One fresh training process; returns the job's own result JSON."""
+    out = tmp / name
+    argv = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "smollm-135m", "--reduced", "--sites", str(SITES),
+            "--batch", str(BATCH), "--seq", str(SEQ), "--het", "0.3",
+            "--rounds", str(rounds), "--quiet", "--out", str(out)] + extra
+    env = {**os.environ,
+           "PYTHONPATH": str(SRC) + os.pathsep + os.environ.get(
+               "PYTHONPATH", "")}
+    subprocess.run(argv, check=True, env=env)
+    rec = json.loads((out / "train_fedavg.json").read_text())
+    exec_s = max(rec["wall_s"] - rec["compile_s"], 1e-9)
+    return {"wall_s": rec["wall_s"], "compile_s": rec["compile_s"],
+            "exec_s": exec_s,
+            "step_s_sum": float(sum(h.get("step_s", 0.0)
+                                    for h in rec["history"])),
+            "rounds_per_s": len(rec["history"]) / exec_s,
+            "final_loss": float(rec["final_loss"]),
+            "upload_bytes": (rec.get("comm") or {}).get("upload_bytes")}
+
+
+def _chunk_sweep(rounds: int) -> dict:
+    """In-process chunk-size sweep (informational: chunking is an
+    execution knob; parity across K is tier-1 tested)."""
+    from repro.api import FederatedJob, TaskConfig
+    task = TaskConfig(kind="tokens", arch="smollm-135m", reduced=True,
+                      sites=SITES, batch=BATCH, seq=SEQ, heterogeneity=0.3,
+                      seed=0)
+    base = FederatedJob(task=task, strategy="fedavg", rounds=rounds,
+                        lr=1e-3, seed=0)
+    base.run()                                   # warm the process once
+    sweep = {}
+    for ck in sorted({1, 2, 5, rounds // 2, rounds}):
+        if 0 < ck <= rounds:
+            t0 = time.perf_counter()
+            res = base.replace(chunk_rounds=ck).run()
+            exec_s = max(time.perf_counter() - t0 - res.compile_s, 1e-9)
+            sweep[str(ck)] = rounds / exec_s
+    return sweep
+
+
+def run(quick: bool = False):
+    import tempfile
+    rounds = 6 if quick else 20
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+        loop = _run_cli(tmp, "loop", rounds, ["--round-engine", "loop"])
+        scan = _run_cli(tmp, "scan", rounds, ["--round-engine", "scan"])
+        scan_dev = _run_cli(tmp, "scan_dev", rounds,
+                            ["--round-engine", "scan", "--device-data"])
+        loop8 = _run_cli(tmp, "loop8", rounds,
+                         ["--round-engine", "loop", "--compression", "int8"])
+        scan8 = _run_cli(tmp, "scan8", rounds,
+                         ["--round-engine", "scan", "--compression", "int8"])
+        loop_buf = _run_cli(tmp, "loop_buf", rounds,
+                            ["--round-engine", "loop", "--scheduler",
+                             "buffered", "--buffer-k", "2"])
+        scan_buf = _run_cli(tmp, "scan_buf", rounds,
+                            ["--round-engine", "scan", "--scheduler",
+                             "buffered", "--buffer-k", "2"])
+    sweep = _chunk_sweep(rounds)
+
+    speedup_sync = loop["exec_s"] / min(scan["exec_s"], scan_dev["exec_s"])
+    speedup_int8 = loop8["exec_s"] / scan8["exec_s"]
+    speedup_buf = loop_buf["exec_s"] / scan_buf["exec_s"]
+    loss_ok = bool(abs(scan["final_loss"] - loop["final_loss"])
+                   <= 0.02 * abs(loop["final_loss"]))
+
+    batch_h2d = SITES * BATCH * SEQ * 4           # int32 tokens, S·B·L
+    out = {
+        "bench": f"round_engine scan-vs-loop ({rounds}-round stacked "
+                 "fedavg, fresh process per variant)",
+        "rounds": rounds, "sites": SITES,
+        "note": "Speedups are wall−compile, each variant a fresh process. "
+                "The sync-barrier path is bounded by this container's "
+                "2-core XLA compute floor (the loop and the scan run the "
+                "identical per-round program, so fusing rounds mostly "
+                "removes the per-round HOST surface); the paths with a "
+                "real host surface — int8's per-site device→host copy + "
+                "numpy codec + accumulator fold, buffered's per-arrival "
+                "host loop — show the engine's wall-clock win.",
+        "loop": loop, "scan": scan, "scan_device_data": scan_dev,
+        "loop_int8": loop8, "scan_int8": scan8,
+        "loop_buffered": loop_buf, "scan_buffered": scan_buf,
+        "chunk_sweep_rounds_per_s": sweep,
+        "host_device_bytes_per_round": {
+            "loop_batches_h2d": batch_h2d,
+            "scan_batches_h2d": batch_h2d,       # chunk-batched, same volume
+            "scan_device_data_h2d": 0,           # PRNG-threaded on device
+            # the legacy int8 loop pulls every site's fp32 model off the
+            # device each round to quantize on the host; the scan pulls 0
+            # (int8 payload ≈ N bytes, so ×4 ≈ the fp32 volume copied)
+            "loop_int8_model_d2h": (loop8["upload_bytes"] or 0) * 4
+                // max(rounds, 1),
+            "scan_int8_model_d2h": 0,
+        },
+        "speedup": {"sync_exec": speedup_sync, "int8_exec": speedup_int8,
+                    "buffered_exec": speedup_buf,
+                    "sync_wall": loop["wall_s"] / min(scan["wall_s"],
+                                                      scan_dev["wall_s"]),
+                    "int8_wall": loop8["wall_s"] / scan8["wall_s"]},
+        "checks": {"scan_int8_speedup_ge_3": bool(speedup_int8 >= 3.0),
+                   "scan_buffered_faster": bool(speedup_buf >= 1.2),
+                   "scan_sync_no_regression": bool(speedup_sync >= 0.85),
+                   "same_final_loss": loss_ok},
+    }
+    (ARTIFACTS / "BENCH_round_engine.json").write_text(
+        json.dumps(out, indent=2))
+    derived = (f"int8_speedup={speedup_int8:.1f}x;"
+               f"buffered_speedup={speedup_buf:.1f}x;"
+               f"sync_speedup={speedup_sync:.1f}x;"
+               f"scan_rounds_per_s={scan['rounds_per_s']:.1f}")
+    return derived, out
+
+
+if __name__ == "__main__":
+    print(run(quick="--quick" in sys.argv)[0])

@@ -24,13 +24,14 @@ def main() -> None:
 
     from benchmarks import (agg_engine, comm_bytes, dose_prediction,
                             gossip_robustness, parallel_scaling, roofline,
-                            strategy_compare)
+                            round_engine, strategy_compare)
     benches = [
         ("dose_prediction_fig7_8_9", dose_prediction.run),
         ("strategy_compare_fig11_12", strategy_compare.run),
         ("gossip_robustness_fig15", gossip_robustness.run),
         ("comm_bytes_table1", comm_bytes.run),
         ("agg_engine_eq1", agg_engine.run),
+        ("round_engine_scan", round_engine.run),
         ("parallel_scaling_sec3a4", parallel_scaling.run),
         ("roofline_dryrun", roofline.run),
     ]

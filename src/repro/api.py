@@ -65,7 +65,7 @@ from repro.comms.compression import (KEEP_GLOBALS_DEFAULT, Codec,
 from repro.configs.base import FederationConfig, MeshConfig
 from repro.core import federation as F
 from repro.core import stacking
-from repro.core.agg_engine import StreamingAccumulator
+from repro.core.agg_engine import StreamingAccumulator, per_site_nbytes
 from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
                                 RoundScheduler, availability_masks,
                                 resolve_scheduler)
@@ -138,17 +138,28 @@ class TaskBundle:
     model_cfg: Any
     sample: Callable[[int, int], Dict[str, np.ndarray]]   # (site, step) -> [B,…]
     stacked: Callable[[int, int], Dict[str, np.ndarray]]  # (round, K) -> [S,K,B,…]
+    # traced (key, K, B, L) -> [S,K,B,…] batch sampler for the compiled
+    # round engine's on-device data path; None when the task has no
+    # traced generator (volume tasks generate on the host)
+    traced_stacked: Optional[Callable] = None
+
+    @staticmethod
+    def pooled_view(b: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Concatenate the site axis into one site's batch
+        ([S, K, B, …] → [1, K, S·B, …]) — the paper's Pooled upper
+        baseline.  The ONE definition of the pooled layout, shared by
+        the per-round loop and the scan engine's chunk builder."""
+        return {k: np.reshape(np.swapaxes(x, 0, 1),
+                              (1, x.shape[1], -1) + x.shape[3:])
+                for k, x in b.items()}
 
     def round_batches(self, round_index: int, local_steps: int,
                       pooled: bool = False):
-        """[S, K, B, …] batches for one round (K = local steps).  With
-        ``pooled`` the site axis is concatenated into one site's batch
-        ([1, K, S·B, …]) — the paper's Pooled upper baseline."""
+        """[S, K, B, …] batches for one round (K = local steps); with
+        ``pooled``, the :meth:`pooled_view` of them."""
         b = self.stacked(round_index, local_steps)
         if pooled:
-            b = {k: np.reshape(np.swapaxes(x, 0, 1),
-                               (1, x.shape[1], -1) + x.shape[3:])
-                 for k, x in b.items()}
+            b = self.pooled_view(b)
         return jax.tree.map(jnp.asarray, b)
 
     def site_batches(self, site: int, round_index: int, local_steps: int):
@@ -184,7 +195,8 @@ def _build_token_task(task: TaskConfig) -> TaskBundle:
         sample=lambda site, step: {
             "tokens": gen.sample(site, step, task.batch, task.seq)},
         stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch,
-                                                   task.seq))
+                                                   task.seq),
+        traced_stacked=gen.traced_stacked_batches)
 
 
 def _build_volume_task(task: TaskConfig) -> TaskBundle:
@@ -257,6 +269,14 @@ class FederatedJob:
     error_feedback: bool = True         # carry quantization residual
     seed: int = 0                       # init + dropout + pairing seed
     io_timeout: float = 120.0           # socket-transport exchange bound
+    # stacked-transport round engine (repro.core.round_engine): "auto"
+    # compiles chunks of rounds into one donated lax.scan and falls back
+    # to the per-round loop where the scan can't replicate semantics;
+    # "scan" insists (raises on unsupported combos); "loop" forces the
+    # retired per-round driver (the parity oracle)
+    round_engine: str = "auto"
+    chunk_rounds: Optional[int] = None  # rounds per compiled chunk (None=auto)
+    device_data: bool = False           # generate batches on-device (tokens)
     # bookkeeping
     checkpoint_dir: Optional[str] = None
     ckpt_every: int = 10
@@ -330,15 +350,48 @@ class Transport:
 
 
 class StackedTransport(Transport):
-    """Single-process vmapped simulator (all strategies, all schedulers)."""
+    """Single-process vmapped simulator (all strategies, all schedulers).
+
+    Rounds run on the compiled scan engine
+    (:mod:`repro.core.round_engine`) by default — chunks of rounds fused
+    into one donated ``lax.scan`` — with the retired per-round loops
+    below kept as the parity oracle (``round_engine="loop"``) and as the
+    fallback for the combinations the scan cannot replicate
+    (``topk-sparse`` uploads, buffered staleness past the decode ring).
+    """
 
     name = "stacked"
 
     def execute(self, job: FederatedJob, rounds: int) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
+        buffered = isinstance(scheduler, BufferedScheduler)
+        if buffered and job.strategy != "fedavg":
+            raise ValueError("buffered-async scheduling currently supports "
+                             f"fedavg only, not {job.strategy!r}")
+        if not buffered and codec.name != "none" and job.strategy != "fedavg":
+            raise ValueError(
+                "compression on the stacked transport currently supports "
+                f"fedavg only, not {job.strategy!r}; run fedprox/gcml "
+                "compression on the thread/tcp transports")
         bundle = job.task.build()
-        if isinstance(scheduler, BufferedScheduler):
+        if job.round_engine not in ("auto", "scan", "loop"):
+            raise ValueError(f"unknown round_engine {job.round_engine!r}; "
+                             "known: auto, scan, loop")
+        if job.round_engine != "loop":
+            from repro.core import round_engine
+            res = round_engine.execute_stacked(job, bundle, scheduler, codec,
+                                               rounds)
+            if res is not None:
+                return res
+            if job.round_engine == "scan":
+                raise ValueError(
+                    f"round_engine='scan' cannot run this job (codec "
+                    f"{codec.name!r} / scheduler {scheduler.name!r} take "
+                    "the host path); use round_engine='auto' or 'loop'")
+        if job.device_data:
+            raise ValueError("device_data=True requires the scan engine")
+        if buffered:
             return self._execute_buffered(job, bundle, scheduler, rounds,
                                           codec)
         if codec.name != "none":
@@ -350,7 +403,9 @@ class StackedTransport(Transport):
         ctx = job.context(bundle)
         strategy = strat_base.get_strategy(job.strategy)
         state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
-        fl_round = jax.jit(F.build_fl_round(ctx))
+        fl_round = F.build_fl_round(ctx)
+        fl_step = None                  # AOT-compiled once, timed separately
+        compile_s = 0.0
         masks = availability_masks(ctx.fed.num_sites, job.max_dropout,
                                    job.seed, rounds)
         pair_rng = np.random.default_rng(job.seed)
@@ -367,8 +422,12 @@ class StackedTransport(Transport):
             if strategy.needs_pairing:
                 extra = {"partner": ri["partner"].tolist(),
                          "is_receiver": ri["is_receiver"].tolist()}
+            if fl_step is None:         # warm up: keep compile out of step_s
+                t_c = time.perf_counter()
+                fl_step = jax.jit(fl_round).lower(state, b, ri).compile()
+                compile_s = time.perf_counter() - t_c
             t_step = time.time()
-            state, metrics = fl_round(state, b, ri)
+            state, metrics = fl_step(state, b, ri)
             jax.block_until_ready(state)
             extra["step_s"] = time.time() - t_step   # compute-only round time
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
@@ -380,14 +439,14 @@ class StackedTransport(Transport):
             # would upload/download (one fp32 model per active site per
             # round, each direction)
             uploads = int(masks.sum())
-            nbytes = _per_site_nbytes(state["params"])
+            nbytes = per_site_nbytes(state["params"])
             comm = {"upload_bytes": uploads * nbytes,
                     "download_bytes": uploads * nbytes,
                     "upload_count": uploads, "compression": "none",
                     "simulated": True}
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
-                               state=state, comm=comm)
+                               state=state, comm=comm, compile_s=compile_s)
 
     def _execute_compressed(self, job, bundle, scheduler, rounds,
                             codec) -> JobResult:
@@ -400,15 +459,12 @@ class StackedTransport(Transport):
         ``AggregationServer``, simulated in process.  The first round
         uploads full (quantized) weights; deltas start once a global
         exists, mirroring a server that never saw the initialization."""
-        if job.strategy != "fedavg":
-            raise ValueError(
-                "compression on the stacked transport currently supports "
-                f"fedavg only, not {job.strategy!r}; run fedprox/gcml "
-                "compression on the thread/tcp transports")
         ctx = job.context(bundle, strategy="individual")  # local-only rounds
         num_sites = ctx.fed.num_sites
         state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
-        local_round = jax.jit(F.build_fl_round(ctx))
+        fl_round = F.build_fl_round(ctx)
+        local_round = None
+        compile_s = 0.0
         masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
         case_w = np.asarray(job.federation().case_weights())
         comps = [UploadCompressor(codec, job.error_feedback)
@@ -419,10 +475,13 @@ class StackedTransport(Transport):
         for r in range(rounds):
             b = bundle.round_batches(r, job.local_steps)
             ri = F.make_round_inputs(ctx, active=masks[r])
+            if local_round is None:          # warm up once (compile_s)
+                t_c = time.perf_counter()
+                local_round = jax.jit(fl_round).lower(state, b, ri).compile()
+                compile_s = time.perf_counter() - t_c
             t_step = time.time()
             state, metrics = local_round(state, b, ri)
             jax.block_until_ready(state)
-            step_s = time.time() - t_step
             active_idx = [int(i) for i in np.flatnonzero(masks[r])]
             acc = StreamingAccumulator()
             round_bytes = 0
@@ -439,13 +498,13 @@ class StackedTransport(Transport):
                 state = _set_param_sites(state, active_idx, global_params)
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: global_params,
-                            extra={"step_s": step_s,
+                            extra={"step_s": time.time() - t_step,
                                    "upload_bytes": round_bytes})
         comm = _compressor_comm(comps, codec,
-                                _per_site_nbytes(state["params"]))
+                                per_site_nbytes(state["params"]))
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
-                               comm=comm)
+                               comm=comm, compile_s=compile_s)
 
     def _execute_buffered(self, job, bundle, scheduler, rounds,
                           codec) -> JobResult:
@@ -458,17 +517,17 @@ class StackedTransport(Transport):
         transports run against the buffered ``AggregationServer``.
 
         With a compression codec, each arrival is delta-encoded against
-        the global *version* that site last pulled (a bounded history of
+        the global *version* that site last pulled (a bounded ring of
         recent globals provides the decode references, mirroring the
         server's ``keep_globals`` window) and decoded before the fold.
         """
-        if job.strategy != "fedavg":
-            raise ValueError("buffered-async scheduling currently supports "
-                             f"fedavg only, not {job.strategy!r}")
+        from collections import OrderedDict
         ctx = job.context(bundle, strategy="individual")   # local-only rounds
         num_sites = ctx.fed.num_sites
         state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
-        local_round = jax.jit(F.build_fl_round(ctx))
+        fl_round = F.build_fl_round(ctx)
+        local_round = None
+        compile_s = 0.0
         masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
         case_w = np.asarray(job.federation().case_weights())
         acc = StreamingAccumulator()
@@ -479,14 +538,23 @@ class StackedTransport(Transport):
         compress = codec.name != "none"
         comps = [UploadCompressor(codec, job.error_feedback)
                  for _ in range(num_sites)]
-        # version → global, the decode references for delta uploads; the
-        # init model is version 0 (every site starts from it)
-        globals_by_version = {0: global_params}
+        # version → global, the delta decode references, as an O(1) ring:
+        # finalize appends, eviction pops the oldest entry — no rebuild
+        # scan over the history per arrival.  The init model is version 0
+        # (every site starts from it).
+        globals_by_version: "OrderedDict[int, Any]" = OrderedDict(
+            {0: global_params})
         recorder = job.recorder(rounds, num_sites)
         for r in range(rounds):
             b = bundle.round_batches(r, job.local_steps)
             ri = F.make_round_inputs(ctx, active=masks[r])
+            if local_round is None:          # warm up once (compile_s)
+                t_c = time.perf_counter()
+                local_round = jax.jit(fl_round).lower(state, b, ri).compile()
+                compile_s = time.perf_counter() - t_c
+            t_step = time.time()
             state, metrics = local_round(state, b, ri)
+            jax.block_until_ready(state)
             active_idx = np.flatnonzero(masks[r])
             uploaded: List[int] = []
             for site in order_rng.permutation(active_idx):
@@ -509,27 +577,23 @@ class StackedTransport(Transport):
                     version += 1
                     if compress:
                         globals_by_version[version] = global_params
-                        for old in [v for v in globals_by_version
-                                    if v <= version - KEEP_GLOBALS_DEFAULT]:
-                            del globals_by_version[old]
+                        while len(globals_by_version) > KEEP_GLOBALS_DEFAULT:
+                            globals_by_version.popitem(last=False)
             if uploaded:                             # pull latest global
                 state = _set_param_sites(state, uploaded, global_params)
                 base_version[np.asarray(uploaded)] = version
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: global_params,
-                            extra={"version": version})
+                            extra={"version": version,
+                                   "step_s": time.time() - t_step})
         comm = (_compressor_comm(comps, codec,
-                                 _per_site_nbytes(state["params"]))
+                                 per_site_nbytes(state["params"]))
                 if compress else None)
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
-                               comm=comm)
+                               comm=comm, compile_s=compile_s)
 
 
-def _per_site_nbytes(params_stacked) -> int:
-    """Wire bytes of one site's uncompressed model (per-leaf dtypes)."""
-    return sum(int(np.prod(x.shape[1:], dtype=np.int64)) * x.dtype.itemsize
-               for x in jax.tree.leaves(params_stacked))
 
 
 def _compressor_comm(comps: List[UploadCompressor], codec: Codec,

@@ -87,17 +87,23 @@ def tree_payload_nbytes(tree: Any) -> int:
             tree, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
 
 
-def _as_chunks(flat: np.ndarray, chunk: int, align: int = 1) -> np.ndarray:
-    """1-D fp32 → zero-padded [C, chunk] matrix (C = ceil(size/chunk)).
+def chunk_geom(n: int, chunk: int, align: int = 1) -> Tuple[int, int]:
+    """(rows, width) of the quantization chunk matrix for an n-element
+    leaf.  For leaves smaller than ``chunk`` the row width shrinks to
+    the (``align``-rounded) leaf size, so small leaves (biases, norms)
+    don't pay a full chunk of zero padding on the wire.  THE chunk-
+    geometry rule: the wire codec here, the Pallas kernels (align=128,
+    the TPU lane width) and the round engine's on-device codec all
+    derive their layouts from it, so scales and byte accounting agree
+    across backends by construction."""
+    c = min(chunk, max(-(-n // align) * align, align))
+    return (-(-n // c) if n else 0), c
 
-    For leaves smaller than ``chunk`` the row width shrinks to the
-    (``align``-rounded) leaf size, so small leaves (biases, norms) don't
-    pay a full chunk of zero padding on the wire.  The Pallas path
-    passes ``align=128`` to keep compiled blocks on the TPU lane width;
-    the numpy path pads nothing beyond the last row."""
+
+def _as_chunks(flat: np.ndarray, chunk: int, align: int = 1) -> np.ndarray:
+    """1-D fp32 → zero-padded [C, chunk] matrix via :func:`chunk_geom`."""
     size = flat.size
-    chunk = min(chunk, max(-(-size // align) * align, align))
-    rows = -(-size // chunk) if size else 0
+    rows, chunk = chunk_geom(size, chunk, align)
     if rows * chunk != size:
         flat = np.pad(flat, (0, rows * chunk - size))
     return flat.reshape(rows, chunk)

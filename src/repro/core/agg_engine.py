@@ -43,6 +43,13 @@ def normalized_weights(case_weights: jnp.ndarray, active: jnp.ndarray) -> jnp.nd
     return w / (jnp.sum(w) + _EPS)
 
 
+def per_site_nbytes(params_stacked) -> int:
+    """Wire bytes of one site's uncompressed model (per-leaf dtypes) —
+    the byte-accounting unit shared by the loop and scan engines."""
+    return sum(int(np.prod(x.shape[1:], dtype=np.int64)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params_stacked))
+
+
 @dataclasses.dataclass(frozen=True)
 class RavelLayout:
     """How a site-stacked pytree maps into one contiguous [S, N] buffer."""
@@ -119,6 +126,18 @@ class AggregationEngine:
         for shape, dtype, ofs in zip(layout.shapes, layout.dtypes, layout.offsets):
             size = int(np.prod(shape, dtype=np.int64))
             leaves.append(flat_global[ofs: ofs + size].reshape(shape).astype(dtype))
+        return jax.tree.unflatten(layout.treedef, leaves)
+
+    def unflatten_stacked(self, flat: jnp.ndarray, layout: RavelLayout):
+        """[S, N] buffer → site-stacked pytree (inverse of :meth:`flatten`).
+        The round engine's buffered path round-trips params through the
+        flat buffer every round, so the arrival fold can stay [S, N]."""
+        s = flat.shape[0]
+        leaves = []
+        for shape, dtype, ofs in zip(layout.shapes, layout.dtypes, layout.offsets):
+            size = int(np.prod(shape, dtype=np.int64))
+            leaves.append(flat[:, ofs: ofs + size]
+                          .reshape((s,) + shape).astype(dtype))
         return jax.tree.unflatten(layout.treedef, leaves)
 
     # -- Eq. 1 entry points -------------------------------------------------

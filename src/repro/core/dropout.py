@@ -69,6 +69,37 @@ class SiteAvailability:
             yield self.step()
 
 
+def availability_step_traced(key, active, max_dropout: int):
+    """One Algorithm-2 transition as a pure jax function (same birth–death
+    law as :class:`SiteAvailability`; the random *streams* differ — numpy
+    PCG64 is not reproducible under the jax PRNG).
+
+    Used by the compiled round engine's on-device input path, where the
+    whole multi-round scan runs without host re-entry.  ``active`` is the
+    previous round's [S] bool mask; returns this round's mask.
+    """
+    import jax
+    import jax.numpy as jnp
+    if max_dropout == 0:
+        return active
+    k_u, k_drop, k_join = jax.random.split(key, 3)
+    d = jnp.sum(~active)
+    u = jax.random.uniform(k_u)
+    p_drop = jnp.where(d == 0, 0.5, jnp.where(d >= max_dropout, 0.0, 1 / 3))
+    p_join = jnp.where(d == 0, 0.0, jnp.where(d >= max_dropout, 0.5, 1 / 3))
+    do_drop = u < p_drop
+    do_join = (u >= p_drop) & (u < p_drop + p_join)
+    # uniform choice among eligible sites = argmax of iid noise on the mask
+    drop_idx = jnp.argmax(jnp.where(active,
+                                    jax.random.uniform(k_drop, active.shape),
+                                    -1.0))
+    join_idx = jnp.argmax(jnp.where(~active,
+                                    jax.random.uniform(k_join, active.shape),
+                                    -1.0))
+    new = active.at[drop_idx].set(jnp.where(do_drop, False, active[drop_idx]))
+    return new.at[join_idx].set(jnp.where(do_join, True, new[join_idx]))
+
+
 def stationary_fraction(num_sites: int, max_dropout: int, rounds: int = 10000,
                         seed: int = 0) -> float:
     """Empirical long-run fraction of active sites (used in tests/benchmarks)."""

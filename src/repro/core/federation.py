@@ -90,6 +90,28 @@ def make_round_inputs(ctx: FLContext, availability=None, rng=None,
     return {"active": active, "partner": partner, "is_receiver": is_recv}
 
 
+def make_round_inputs_traced(ctx: FLContext, key, active):
+    """Traced path of :func:`make_round_inputs` — the coordinator outputs
+    (gossip pairing) produced on-device from a jax PRNG key, so the
+    compiled round engine (``repro.core.round_engine``) can run many
+    rounds in one ``lax.scan`` without host re-entry.
+
+    ``active`` is this round's [S] bool mask (thread it through
+    :func:`repro.core.dropout.availability_step_traced` for on-device
+    Algorithm-2 churn).  The pairing *law* matches the host path; the
+    random streams differ (numpy PCG64 vs jax threefry), so use the host
+    path when bit-parity with a replayed schedule matters.
+    """
+    s = ctx.fed.num_sites
+    active = jnp.asarray(active, bool)
+    partner = jnp.arange(s)
+    is_recv = jnp.zeros(s, bool)
+    if strat_base.get_strategy(ctx.fed.strategy).needs_pairing:
+        from repro.core.gossip import pair_sites_traced
+        partner, is_recv, _ = pair_sites_traced(key, active)
+    return {"active": active, "partner": partner, "is_receiver": is_recv}
+
+
 def build_fl_round(ctx: FLContext, remat_local: bool = False):
     """Returns ``fl_round(fl_state, batches, round_inputs) -> (fl_state, metrics)``.
 

@@ -41,6 +41,33 @@ def pair_sites(active: np.ndarray, rng: np.random.Generator
     return partner, is_recv, is_send
 
 
+def pair_sites_traced(key, active):
+    """Traced counterpart of :func:`pair_sites` (same pairing law, jax
+    PRNG stream): shuffle the active sites, pair them off consecutively,
+    odd one out sits the exchange out.  Runs inside the compiled round
+    engine's scan, so gossip rounds need no host coordinator re-entry.
+    Returns ``(partner, is_receiver, is_sender)`` as jnp arrays.
+    """
+    import jax
+    import jax.numpy as jnp
+    n = active.shape[0]
+    # actives first in random order: inactive sites get +2 on U(0,1) keys
+    noise = jax.random.uniform(key, (n,))
+    order = jnp.argsort(jnp.where(active, noise, noise + 2.0))
+    n_act = jnp.sum(active)
+    pairs = n // 2                   # an odd site out joins neither role
+    senders = order[0:2 * pairs:2]
+    receivers = order[1::2]
+    # pair j = (order[2j] → order[2j+1]) is real iff both land in actives
+    valid = (2 * jnp.arange(pairs) + 1) < n_act
+    safe_recv = jnp.where(valid, receivers, n)        # n = OOB → dropped
+    safe_send = jnp.where(valid, senders, n)
+    partner = jnp.arange(n).at[safe_recv].set(senders, mode="drop")
+    is_recv = jnp.zeros(n, bool).at[safe_recv].set(True, mode="drop")
+    is_send = jnp.zeros(n, bool).at[safe_send].set(True, mode="drop")
+    return partner, is_recv, is_send
+
+
 def ring_pairs(active: np.ndarray, round_index: int
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Deterministic ring gossip (every active site both sends and

@@ -1,0 +1,696 @@
+"""Compiled round engine — K federated rounds in ONE jitted ``lax.scan``.
+
+The paper's headline efficiency claim is wall-clock: parallel federated
+rounds cut 86.2 h of sequential training to 13.4 h.  Our scale workhorse
+for that claim is the stacked (vmapped) simulator, but its per-round
+loop re-entered Python every round: a jit dispatch + ``block_until_ready``
+per round, host-generated batches/masks, and — on the compressed and
+buffered paths — a per-site device→host copy folded through a numpy
+accumulator.  At simulator scale the machine was gated by dispatch and
+PCIe, not FLOPs.
+
+This module compiles the loop away.  ``execute_stacked`` runs the job as
+a sequence of *chunks*; each chunk is one jitted ``lax.scan`` over
+``chunk_rounds`` federated rounds with the carry (fl_state + engine
+buffers) **donated**, per-round losses/metrics accumulated into a
+``[K, S]`` device buffer and fetched once per chunk:
+
+  * **sync** rounds (every strategy incl. GCML gossip and the pooled
+    baseline) scan the existing jitted ``fl_round`` body; host inputs
+    (Algorithm-2 masks, gossip pairings, synthetic batches) are
+    precomputed per chunk and transferred once — or, with
+    ``device_data=True`` on token tasks, produced *on device* from a
+    threaded jax PRNG (``make_round_inputs_traced`` +
+    ``TokenTaskGenerator.traced_stacked_batches``) so a chunk runs with
+    zero host↔device traffic beyond the loss buffer;
+  * **compressed** rounds (int8/fp8 fedavg) keep simulated compression
+    entirely on device: error-feedback residuals ride the scan as
+    ``[S, …]`` state, quantize→dequantize runs through the
+    ``kernels/quantize.py`` math (Pallas kernel on TPU/GPU — including
+    the fused dequantize+weighted-fold ``fedagg_dequant`` so dense
+    per-site models never hit HBM — pure-jnp twin on CPU, bit-identical
+    to the numpy wire codec), and the fold goes through
+    ``AggregationEngine``'s padded ``[S, N]`` buffer instead of the
+    host ``StreamingAccumulator``;
+  * **buffered** (FedBuff) rounds trace the arrival loop itself: the
+    per-round upload order is precomputed host-side (same RNG stream as
+    the retired loop), and staleness discounts, K-of-S finalization,
+    version counters and the bounded ``keep_globals`` ring of decode
+    references are all device state inside the scan.
+
+Chunk boundaries align with checkpoint rounds (the only places a global
+model must materialize); compile time is measured once per chunk shape
+via AOT lowering and reported as ``JobResult.compile_s``, separate from
+the per-round ``step_s``.
+
+The host path is still taken for: the ``topk-sparse`` codec (data-
+dependent index payloads), buffered runs whose ``max_staleness`` reaches
+past the ``keep_globals`` ring, and ``round_engine="loop"`` — the
+retired per-round driver kept in ``repro.api`` as the parity oracle for
+tests and benchmarks.  Socket transports are untouched.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.compression import KEEP_GLOBALS_DEFAULT
+from repro.core import federation as F
+from repro.core import stacking
+from repro.core.agg_engine import (get_engine, normalized_weights,
+                                   per_site_nbytes)
+from repro.core.session import (BufferedScheduler, JobResult,
+                                availability_masks)
+from repro.core.strategies import base as strat_base
+
+AUTO_CHUNK_ROUNDS = 32      # scan compiles its body once, so chunks are cheap
+
+
+# ---------------------------------------------------------------------------
+# Chunking + compile/timing machinery
+# ---------------------------------------------------------------------------
+
+
+def chunk_plan(rounds: int, chunk_rounds: Optional[int] = None,
+               ckpt_every: Optional[int] = None) -> List[int]:
+    """Split ``rounds`` into scan-chunk lengths.
+
+    With checkpointing, a chunk boundary lands right after every
+    checkpoint round (``r % ckpt_every == 0``) so the recorder can
+    materialize the global model there — mid-chunk states never exist
+    on the host.
+    """
+    chunk = max(1, chunk_rounds or min(rounds, AUTO_CHUNK_ROUNDS))
+    plan, r = [], 0
+    while r < rounds:
+        kc = min(chunk, rounds - r)
+        if ckpt_every:
+            next_ckpt = r + (-r) % ckpt_every      # first ckpt round ≥ r
+            if next_ckpt < rounds:
+                kc = min(kc, next_ckpt + 1 - r)
+        plan.append(kc)
+        r += kc
+    return plan
+
+
+class _ChunkRunner:
+    """Compile-once-per-chunk-shape executor with donated carry buffers.
+
+    ``fn(carry, xs) -> (carry, ys)`` is AOT-lowered and compiled the
+    first time each chunk length appears — compile time is measured
+    exactly once per program shape and reported separately
+    (``JobResult.compile_s``) instead of polluting round 0's ``step_s``.
+    The carry (fl_state + engine buffers) is donated, so K rounds run
+    without an extra resident copy of the federation's parameters; the
+    caller must never touch a carry it has already passed in.
+    """
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.compile_s = 0.0
+        self._cache: Dict[int, Any] = {}
+
+    def run(self, kc: int, carry, xs):
+        """Execute one chunk; returns ``(carry', ys, exec_seconds)``."""
+        compiled = self._cache.get(kc)
+        if compiled is None:
+            t0 = time.perf_counter()
+            compiled = (jax.jit(self.fn, donate_argnums=0)
+                        .lower(carry, xs).compile())
+            self._cache[kc] = compiled
+            self.compile_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        carry, ys = compiled(carry, xs)
+        jax.block_until_ready((carry, ys))
+        return carry, ys, time.perf_counter() - t0
+
+
+def _pairings(masks: np.ndarray, seed: int):
+    """Host gossip pairings for every round, consuming the pairing RNG in
+    the exact order the retired per-round loop did (parity)."""
+    from repro.core.gossip import pair_sites
+    rng = np.random.default_rng(seed)
+    ps, rs = [], []
+    for r in range(masks.shape[0]):
+        p, rv, _ = pair_sites(masks[r], rng)
+        ps.append(p)
+        rs.append(rv)
+    return np.stack(ps), np.stack(rs)
+
+
+def _arrival_orders(masks: np.ndarray, seed: int):
+    """Buffered arrival permutations, one per round, padded with zeros
+    past the active count — same RNG stream as the retired loop."""
+    rng = np.random.default_rng(seed + 13)
+    rounds, num_sites = masks.shape
+    order = np.zeros((rounds, num_sites), np.int32)
+    n_act = np.zeros((rounds,), np.int32)
+    for r in range(rounds):
+        perm = rng.permutation(np.flatnonzero(masks[r])).astype(np.int32)
+        order[r, :len(perm)] = perm
+        n_act[r] = len(perm)
+    return order, n_act
+
+
+def _chunk_batches(bundle, r0: int, kc: int, local_steps: int, pooled: bool):
+    """[Kc, S, K, …] device batches for one chunk: numpy generation per
+    round, stacked, ONE host→device transfer per chunk."""
+    rows = []
+    for r in range(r0, r0 + kc):
+        b = bundle.stacked(r, local_steps)
+        if pooled:
+            b = bundle.pooled_view(b)
+        rows.append(b)
+    return {k: jnp.asarray(np.stack([row[k] for row in rows]))
+            for k in rows[0]}
+
+
+# ---------------------------------------------------------------------------
+# On-device compression (per-leaf chunk geometry mirrors comms.compression)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_geom(n: int, chunkw: int, align: int):
+    """(rows, width) of the quantization chunk matrix for an n-element
+    leaf — the wire codec's one chunk-geometry rule, so device and wire
+    codecs agree on scales and payload bytes by construction."""
+    from repro.comms.compression import chunk_geom
+    return chunk_geom(n, chunkw, align)
+
+
+def _to_chunks(x, chunkw: int, align: int):
+    """[S, …] leaf → ([S, rows, c] fp32 chunk matrix, flat size n)."""
+    s = x.shape[0]
+    n = int(np.prod(x.shape[1:], dtype=np.int64))
+    rows, c = _chunk_geom(n, chunkw, align)
+    flat = x.reshape(s, n).astype(jnp.float32)
+    if rows * c != n:
+        flat = jnp.pad(flat, ((0, 0), (0, rows * c - n)))
+    return flat.reshape(s, rows, c), n
+
+
+def _from_chunks(mat, shape, n: int):
+    """[…, rows, c] → […, *shape] (drop the zero padding)."""
+    lead = mat.shape[:-2]
+    return mat.reshape(lead + (-1,))[..., :n].reshape(lead + tuple(shape))
+
+
+def _qdq_tree(u, chunkw: int, align: int, codec_name: str):
+    """Traced quantize→dequantize of a stacked [S, …] pytree with the
+    wire codec's per-leaf chunk geometry (pure jnp — bit-identical to
+    the numpy codec on CPU).
+
+    Leaves sharing a chunk width are batched into ONE [S, ΣR, c] call:
+    chunks never cross leaf boundaries (every leaf is padded to whole
+    rows first), so the grouped math is element-identical to per-leaf
+    encoding while cutting the op count from O(leaves) to O(widths).
+    """
+    from repro.kernels.quantize import (quantize_dequantize_fp8_ref,
+                                        quantize_dequantize_ref)
+    qdq = (quantize_dequantize_ref if codec_name == "int8"
+           else quantize_dequantize_fp8_ref)
+    leaves, treedef = jax.tree.flatten(u)
+    groups: Dict[int, List[int]] = {}
+    chunked = []
+    for i, x in enumerate(leaves):
+        mat, n = _to_chunks(x, chunkw, align)
+        chunked.append((mat, n))
+        groups.setdefault(mat.shape[-1], []).append(i)
+    out: List[Any] = [None] * len(leaves)
+    for c, idxs in groups.items():
+        mats = [chunked[i][0] for i in idxs]
+        deq = qdq(jnp.concatenate(mats, axis=1))
+        r0 = 0
+        for i, mat in zip(idxs, mats):
+            rows = mat.shape[1]
+            out[i] = _from_chunks(deq[:, r0:r0 + rows], leaves[i].shape[1:],
+                                  chunked[i][1])
+            r0 += rows
+    return jax.tree.unflatten(treedef, out)
+
+
+def _compressed_fold(u, w, codec_name: str, chunkw: int, align: int,
+                     accel: bool, engine):
+    """One round's simulated server step, fully on device: quantize→
+    dequantize every site's upload ``u`` and fold Eq. 1 at weights ``w``.
+    Returns ``(global_delta_tree, residual_tree)`` with
+    ``residual = u − deQ(Q(u))``.
+
+    On TPU/GPU the int8 path runs the Pallas quantize kernel and the
+    fused ``fedagg_dequant`` dequantize+fold, so the dense fp32 per-site
+    models never materialize off-chip; on CPU (and for fp8) the jnp twin
+    folds through the ``AggregationEngine``'s padded [S, N] buffer.
+    """
+    if accel and codec_name == "int8":
+        from repro.kernels import ops
+        leaves, treedef = jax.tree.flatten(u)
+        g_leaves, r_leaves = [], []
+        for x in leaves:
+            mat, n = _to_chunks(x, chunkw, align)
+            s, rows, c = mat.shape
+            q, sc = ops.quantize_int8(mat.reshape(s * rows, c))
+            g, res = ops.fedagg_dequant(q.reshape(s, rows, c),
+                                        sc.reshape(s, rows), mat, w)
+            g_leaves.append(_from_chunks(g[None], x.shape[1:], n)[0])
+            r_leaves.append(_from_chunks(res, x.shape[1:], n))
+        return (jax.tree.unflatten(treedef, g_leaves),
+                jax.tree.unflatten(treedef, r_leaves))
+    deq = _qdq_tree(u, chunkw, align, codec_name)
+    flat, layout = engine.flatten(deq)
+    gdelta = engine.unflatten(engine.reduce_flat(flat, w), layout)
+    return gdelta, jax.tree.map(jnp.subtract, u, deq)
+
+
+def _encoded_nbytes(params_stacked, chunkw: int, align: int) -> int:
+    """Wire payload bytes of ONE quantized upload under the per-leaf
+    chunk layout (1-byte values + fp32 per-chunk scales) — matches
+    ``tree_payload_nbytes`` over the host codec's ``QuantizedTensor``s."""
+    total = 0
+    for x in jax.tree.leaves(params_stacked):
+        n = int(np.prod(x.shape[1:], dtype=np.int64))
+        rows, c = _chunk_geom(n, chunkw, align)
+        total += rows * c + rows * 4
+    return total
+
+
+def _accel() -> bool:
+    from repro.kernels.ops import _default_interpret
+    return not _default_interpret()
+
+
+# ---------------------------------------------------------------------------
+# Sync rounds (every strategy) — one scan per chunk
+# ---------------------------------------------------------------------------
+
+
+def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
+    ctx = job.context(bundle)
+    strategy = strat_base.get_strategy(job.strategy)
+    num_sites = ctx.fed.num_sites
+    state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+    fl_round = F.build_fl_round(ctx)
+    needs_val = strategy.needs_val_batch
+    needs_pair = strategy.needs_pairing
+    pooled = job.strategy == "pooled"
+    device_data = bool(job.device_data)
+
+    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    if needs_pair and not device_data:
+        partner, is_recv = _pairings(masks, job.seed)
+    else:
+        partner = np.broadcast_to(np.arange(num_sites), masks.shape).copy()
+        is_recv = np.zeros(masks.shape, bool)
+
+    def add_val_batches(ri, b):
+        if needs_val:
+            ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
+            ri["val_batch"] = jax.tree.map(lambda x: x[:, -1], b)
+        return ri
+
+    if device_data:
+        from repro.core.dropout import availability_step_traced
+        data_key = jax.random.fold_in(jax.random.PRNGKey(job.seed), 7)
+
+        def chunk_fn(carry, xs):
+            def body(c, r):
+                st, active = c
+                k_av, k_pair, k_data = jax.random.split(
+                    jax.random.fold_in(data_key, r), 3)
+                if job.max_dropout:
+                    active = availability_step_traced(k_av, active,
+                                                      job.max_dropout)
+                ri = F.make_round_inputs_traced(ctx, k_pair, active)
+                b = bundle.traced_stacked(k_data, job.local_steps,
+                                          job.task.batch, job.task.seq)
+                st, metrics = fl_round(st, b, add_val_batches(ri, b))
+                ys = {"loss": metrics["loss"], "active": active,
+                      "partner": ri["partner"],
+                      "is_receiver": ri["is_receiver"]}
+                return (st, active), ys
+            return jax.lax.scan(body, carry, xs)
+
+        carry = (state, jnp.ones((num_sites,), bool))
+    else:
+        def chunk_fn(carry, xs):
+            def body(st, x):
+                b = x["batches"]
+                ri = {"active": x["active"], "partner": x["partner"],
+                      "is_receiver": x["is_receiver"]}
+                st, metrics = fl_round(st, b, add_val_batches(ri, b))
+                return st, {"loss": metrics["loss"]}
+            return jax.lax.scan(body, carry, xs)
+
+        carry = state
+
+    runner = _ChunkRunner(chunk_fn)
+    recorder = job.recorder(rounds, num_sites)
+    masks_seen: List[np.ndarray] = []
+    r0 = 0
+    plan = chunk_plan(rounds, job.chunk_rounds,
+                      job.ckpt_every if recorder.store else None)
+    for kc in plan:
+        if device_data:
+            xs = jnp.arange(r0, r0 + kc)
+        else:
+            xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
+                                            pooled),
+                  "active": jnp.asarray(masks[r0:r0 + kc]),
+                  "partner": jnp.asarray(partner[r0:r0 + kc]),
+                  "is_receiver": jnp.asarray(is_recv[r0:r0 + kc])}
+        carry, ys, exec_s = runner.run(kc, carry, xs)
+        state = carry[0] if device_data else carry
+        losses = np.asarray(ys["loss"])
+        if device_data:
+            rows = np.asarray(ys["active"])
+            p_rows, r_rows = np.asarray(ys["partner"]), np.asarray(
+                ys["is_receiver"])
+            masks_seen.append(rows)
+        else:
+            rows = masks[r0:r0 + kc]
+            p_rows, r_rows = partner[r0:r0 + kc], is_recv[r0:r0 + kc]
+        step_s = exec_s / kc
+        for i in range(kc):
+            extra = {"step_s": step_s, "wall_s": step_s}
+            if needs_pair:
+                extra["partner"] = [int(v) for v in p_rows[i]]
+                extra["is_receiver"] = [bool(v) for v in r_rows[i]]
+            recorder.record(
+                r0 + i, losses[i], rows[i],
+                global_fn=(lambda st=state: F.global_model(st, ctx))
+                if i == kc - 1 else None,
+                extra=extra)
+        r0 += kc
+    all_masks = np.concatenate(masks_seen) if masks_seen else masks
+    comm = None
+    if job.strategy in ("fedavg", "fedprox"):
+        uploads = int(all_masks.sum())
+        nbytes = per_site_nbytes(state["params"])
+        comm = {"upload_bytes": uploads * nbytes,
+                "download_bytes": uploads * nbytes,
+                "upload_count": uploads, "compression": "none",
+                "simulated": True}
+    return recorder.result(F.global_model(state, ctx), transport="stacked",
+                           scheduler=scheduler.name, state=state, comm=comm,
+                           compile_s=runner.compile_s)
+
+
+# ---------------------------------------------------------------------------
+# Compressed sync rounds (int8/fp8 fedavg) — on-device codec + fold
+# ---------------------------------------------------------------------------
+
+
+def _run_compressed_scan(job, bundle, scheduler, rounds: int,
+                         codec) -> JobResult:
+    ctx = job.context(bundle, strategy="individual")   # local-only rounds
+    num_sites = ctx.fed.num_sites
+    state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+    fl_round = F.build_fl_round(ctx)
+    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    case_w = jnp.asarray(np.asarray(job.federation().case_weights()),
+                         jnp.float32)
+    engine = get_engine()
+    accel = _accel()
+    chunkw = int(getattr(codec, "chunk", 1024))
+    align = 128 if (accel and codec.name == "int8") else 1
+    error_feedback = bool(job.error_feedback)
+    identity = np.arange(num_sites)
+    no_recv = np.zeros(num_sites, bool)
+
+    # the init model is "reference zero": round 0's delta against zeros IS
+    # the dense (quantized) bootstrap upload the wire codec would send
+    reference = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], jnp.float32),
+                             state["params"])
+    residual = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                            state["params"])
+
+    def chunk_fn(carry, xs):
+        def body(c, x):
+            st, ref, res = c
+            active = x["active"]
+            st, metrics = fl_round(st, x["batches"],
+                                   {"active": active, "partner": identity,
+                                    "is_receiver": no_recv})
+            # delta vs last broadcast global, plus the carried EF residual
+            u = jax.tree.map(
+                lambda p, g, e: p.astype(jnp.float32) - g[None] + e,
+                st["params"], ref, res)
+            w = normalized_weights(case_w, active)
+            gdelta, new_res = _compressed_fold(u, w, codec.name, chunkw,
+                                               align, accel, engine)
+            if error_feedback:
+                res = stacking.where_site(active, new_res, res)
+            ref = jax.tree.map(jnp.add, ref, gdelta)
+            bcast = jax.tree.map(
+                lambda g, p: jnp.broadcast_to(g[None], p.shape).astype(p.dtype),
+                ref, st["params"])
+            st = {**st, "params": stacking.where_site(active, bcast,
+                                                      st["params"])}
+            return (st, ref, res), {"loss": metrics["loss"]}
+        return jax.lax.scan(body, carry, xs)
+
+    runner = _ChunkRunner(chunk_fn)
+    recorder = job.recorder(rounds, num_sites)
+    enc_nbytes = _encoded_nbytes(state["params"], chunkw, align)
+    carry = (state, reference, residual)
+    r0 = 0
+    for kc in chunk_plan(rounds, job.chunk_rounds,
+                         job.ckpt_every if recorder.store else None):
+        xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
+                                        False),
+              "active": jnp.asarray(masks[r0:r0 + kc])}
+        carry, ys, exec_s = runner.run(kc, carry, xs)
+        losses = np.asarray(ys["loss"])
+        step_s = exec_s / kc
+        for i in range(kc):
+            recorder.record(
+                r0 + i, losses[i], masks[r0 + i],
+                global_fn=(lambda c=carry: c[1]) if i == kc - 1 else None,
+                extra={"step_s": step_s, "wall_s": step_s,
+                       "upload_bytes": int(masks[r0 + i].sum()) * enc_nbytes})
+        r0 += kc
+    state, reference, _ = carry
+    uploads = int(masks.sum())
+    comm = {"upload_bytes": uploads * enc_nbytes,
+            "upload_raw_bytes": uploads * per_site_nbytes(state["params"]),
+            "download_bytes": uploads * per_site_nbytes(state["params"]),
+            "upload_count": uploads, "compression": codec.name,
+            "simulated": True}
+    return recorder.result(reference, transport="stacked",
+                           scheduler=scheduler.name, state=state, comm=comm,
+                           compile_s=runner.compile_s)
+
+
+# ---------------------------------------------------------------------------
+# Buffered (FedBuff) rounds — the arrival loop as device state
+# ---------------------------------------------------------------------------
+
+
+def _run_buffered_scan(job, bundle, scheduler, rounds: int,
+                       codec) -> JobResult:
+    compress = codec.name != "none"
+    ctx = job.context(bundle, strategy="individual")
+    num_sites = ctx.fed.num_sites
+    state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+    fl_round = F.build_fl_round(ctx)
+    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    order, n_act = _arrival_orders(masks, job.seed)
+    case_w = jnp.asarray(np.asarray(job.federation().case_weights()),
+                         jnp.float32)
+    engine = get_engine()
+    flat0, layout = engine.flatten(state["params"])
+    n = layout.n
+    g0 = engine.reduce_flat(flat0, case_w / jnp.sum(case_w))
+    identity = np.arange(num_sites)
+    no_recv = np.zeros(num_sites, bool)
+    buffer_k = int(scheduler.buffer_k)
+    alpha = float(scheduler.alpha)
+    max_st = int(scheduler.max_staleness)
+    keep = KEEP_GLOBALS_DEFAULT
+    error_feedback = bool(job.error_feedback)
+    chunkw = int(getattr(codec, "chunk", 1024))
+    rows_f, c_f = _chunk_geom(n, chunkw, 1)
+    if compress:
+        from repro.kernels.quantize import (quantize_dequantize_fp8_ref,
+                                            quantize_dequantize_ref)
+        qdq = (quantize_dequantize_ref if codec.name == "int8"
+               else quantize_dequantize_fp8_ref)
+
+        def qdq_flat(u):
+            mat = jnp.pad(u, (0, rows_f * c_f - n)).reshape(rows_f, c_f)
+            return qdq(mat).reshape(-1)[:n]
+
+    carry = {"state": state, "acc": jnp.zeros((n,), jnp.float32),
+             "accw": jnp.zeros((), jnp.float32),
+             "count": jnp.zeros((), jnp.int32),
+             "version": jnp.zeros((), jnp.int32),
+             "base": jnp.zeros((num_sites,), jnp.int32), "gflat": g0}
+    if compress:
+        # version → decode reference, as a bounded on-device ring (the
+        # AggregationServer's keep_globals window); slot 0 = init model
+        carry["ring"] = jnp.zeros((keep, n), jnp.float32).at[0].set(g0)
+        carry["residual"] = jnp.zeros((num_sites, n), jnp.float32)
+
+    def chunk_fn(carry, xs):
+        def body(c, x):
+            st, metrics = fl_round(c["state"], x["batches"],
+                                   {"active": x["active"],
+                                    "partner": identity,
+                                    "is_receiver": no_recv})
+            pflat = engine.flatten(st["params"])[0]
+            ord_r, na = x["order"], x["n_act"]
+            kmin = jnp.minimum(buffer_k, jnp.maximum(na, 1))
+
+            def arrival(j, a):
+                (pflat, acc, accw, count, version, base, gflat, ring,
+                 residual, uploaded, folds) = a
+                site = ord_r[j]
+                valid = j < na
+                tau = version - base[site]
+                ok = (tau >= 0) & (tau <= max_st)
+                admit = valid & ok
+                reject = valid & ~ok
+                disc = (1.0 + jnp.clip(tau, 0, max_st).astype(jnp.float32)
+                        ) ** (-alpha)
+                upload = pflat[site]
+                if compress:
+                    ref = ring[base[site] % keep]
+                    u = upload - ref + residual[site]
+                    deq = qdq_flat(u)
+                    if error_feedback:
+                        residual = residual.at[site].set(
+                            jnp.where(admit, u - deq, residual[site]))
+                    decoded = deq + ref
+                else:
+                    decoded = upload
+                w = case_w[site] * disc * admit
+                acc = acc + w * decoded
+                accw = accw + w
+                count = count + admit
+                folds = folds + admit
+                uploaded = uploaded.at[site].set(uploaded[site] | admit)
+                # too stale: resync to the current global, no contribution
+                pflat = pflat.at[site].set(jnp.where(reject, gflat,
+                                                     pflat[site]))
+                base = base.at[site].set(jnp.where(reject, version,
+                                                   base[site]))
+                fire = admit & (count >= kmin)
+                newg = acc / jnp.maximum(accw, jnp.float32(1e-12))
+                gflat = jnp.where(fire, newg, gflat)
+                version = version + fire
+                if compress:
+                    slot = version % keep
+                    ring = ring.at[slot].set(jnp.where(fire, newg,
+                                                       ring[slot]))
+                acc = jnp.where(fire, jnp.zeros_like(acc), acc)
+                accw = jnp.where(fire, jnp.zeros_like(accw), accw)
+                count = jnp.where(fire, jnp.zeros_like(count), count)
+                return (pflat, acc, accw, count, version, base, gflat, ring,
+                        residual, uploaded, folds)
+
+            a0 = (pflat, c["acc"], c["accw"], c["count"], c["version"],
+                  c["base"], c["gflat"],
+                  c.get("ring", jnp.zeros((), jnp.float32)),
+                  c.get("residual", jnp.zeros((), jnp.float32)),
+                  jnp.zeros((num_sites,), bool), jnp.zeros((), jnp.int32))
+            (pflat, acc, accw, count, version, base, gflat, ring, residual,
+             uploaded, folds) = jax.lax.fori_loop(0, num_sites, arrival, a0)
+            # uploaders pull the latest global and re-anchor
+            pflat = jnp.where(uploaded[:, None], gflat[None, :], pflat)
+            base = jnp.where(uploaded, version, base)
+            st = {**st, "params": engine.unflatten_stacked(pflat, layout)}
+            nc = {"state": st, "acc": acc, "accw": accw, "count": count,
+                  "version": version, "base": base, "gflat": gflat}
+            if compress:
+                nc["ring"], nc["residual"] = ring, residual
+            return nc, {"loss": metrics["loss"], "version": version,
+                        "folds": folds}
+        return jax.lax.scan(body, carry, xs)
+
+    runner = _ChunkRunner(chunk_fn)
+    recorder = job.recorder(rounds, num_sites)
+    total_folds = 0
+    r0 = 0
+    for kc in chunk_plan(rounds, job.chunk_rounds,
+                         job.ckpt_every if recorder.store else None):
+        xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
+                                        False),
+              "active": jnp.asarray(masks[r0:r0 + kc]),
+              "order": jnp.asarray(order[r0:r0 + kc]),
+              "n_act": jnp.asarray(n_act[r0:r0 + kc])}
+        carry, ys, exec_s = runner.run(kc, carry, xs)
+        losses = np.asarray(ys["loss"])
+        versions = np.asarray(ys["version"])
+        total_folds += int(np.asarray(ys["folds"]).sum())
+        step_s = exec_s / kc
+        for i in range(kc):
+            recorder.record(
+                r0 + i, losses[i], masks[r0 + i],
+                global_fn=(lambda c=carry: engine.unflatten(c["gflat"],
+                                                            layout))
+                if i == kc - 1 else None,
+                extra={"version": int(versions[i]), "step_s": step_s,
+                       "wall_s": step_s})
+        r0 += kc
+    state = carry["state"]
+    global_params = engine.unflatten(carry["gflat"], layout)
+    comm = None
+    if compress:
+        enc = rows_f * c_f + rows_f * 4          # flat-layout payload bytes
+        comm = {"upload_bytes": total_folds * enc,
+                "upload_raw_bytes": total_folds * n * 4,
+                "download_bytes":
+                    total_folds * per_site_nbytes(state["params"]),
+                "upload_count": total_folds, "compression": codec.name,
+                "simulated": True}
+    return recorder.result(global_params, transport="stacked",
+                           scheduler=scheduler.name, state=state, comm=comm,
+                           compile_s=runner.compile_s)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def execute_stacked(job, bundle, scheduler, codec,
+                    rounds: int) -> Optional[JobResult]:
+    """Run ``job`` on the compiled scan engine, or return ``None`` when
+    the engine cannot replicate the job's semantics (the caller falls
+    back to the retired per-round loop):
+
+      * ``topk-sparse`` uploads (data-dependent index payloads),
+      * buffered runs whose ``max_staleness`` reaches past the
+        ``keep_globals`` decode-reference ring.
+
+    ``device_data=True`` is an explicit request for on-device batch
+    generation and raises when the combination doesn't support it.
+    """
+    buffered = isinstance(scheduler, BufferedScheduler)
+    if job.device_data:
+        if (buffered or codec.name != "none" or job.strategy == "pooled"
+                or getattr(bundle, "traced_stacked", None) is None):
+            raise ValueError(
+                "device_data=True (on-device batch generation) currently "
+                "supports sync uncompressed token-task jobs on the scan "
+                "engine; use host batches for volume tasks, buffered "
+                "scheduling or compressed uploads")
+    if codec.name not in ("none", "int8", "fp8"):
+        return None
+    if buffered:
+        if compress_past_ring(scheduler, codec):
+            return None
+        return _run_buffered_scan(job, bundle, scheduler, rounds, codec)
+    if codec.name != "none":
+        return _run_compressed_scan(job, bundle, scheduler, rounds, codec)
+    return _run_sync_scan(job, bundle, scheduler, rounds)
+
+
+def compress_past_ring(scheduler: BufferedScheduler, codec) -> bool:
+    """True when compressed-buffered staleness could outlive the decode
+    ring — the one buffered configuration the host loop still owns."""
+    return (codec.name != "none"
+            and scheduler.max_staleness >= KEEP_GLOBALS_DEFAULT)

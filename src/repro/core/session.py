@@ -172,6 +172,9 @@ class JobResult:
     # stacked simulator — see benchmarks/comm_bytes.py); None when the
     # strategy has no measured exchange
     comm: Optional[Dict[str, Any]] = None
+    # jit compile time, measured once per program shape and kept OUT of
+    # the per-round ``step_s`` history (round 0 used to absorb it)
+    compile_s: float = 0.0
 
     @property
     def losses(self) -> List[float]:
@@ -183,7 +186,8 @@ class JobResult:
 
     def to_dict(self) -> Dict[str, Any]:
         return {"history": self.history, "final_loss": self.final_loss,
-                "wall_s": self.wall_s, "transport": self.transport,
+                "wall_s": self.wall_s, "compile_s": self.compile_s,
+                "transport": self.transport,
                 "scheduler": self.scheduler, "comm": self.comm}
 
 
@@ -233,7 +237,8 @@ class RoundRecorder:
             self.store.save("global", round_index, global_fn())
 
     def result(self, global_params, *, transport: str, scheduler: str,
-               state=None, comm=None) -> JobResult:
+               state=None, comm=None, compile_s: float = 0.0) -> JobResult:
         return JobResult(history=self.history, global_params=global_params,
                          wall_s=time.time() - self._t0, transport=transport,
-                         scheduler=scheduler, state=state, comm=comm)
+                         scheduler=scheduler, state=state, comm=comm,
+                         compile_s=compile_s)

@@ -81,6 +81,37 @@ class TokenTaskGenerator:
             for s in range(self.num_sites)])
         return {"tokens": out}
 
+    def traced_stacked_batches(self, key, local_steps: int,
+                               per_site_batch: int, seq_len: int):
+        """Traced [S, K, B, L(, C)] batches from a jax PRNG key — the
+        compiled round engine's on-device data path: the same markov
+        transition family and per-site heterogeneity bias as
+        :meth:`sample`, but produced inside the jitted scan so batch
+        generation never touches the host.  Streams differ from the
+        numpy generators (cross-path parity needs the host generators).
+        """
+        import jax
+        import jax.numpy as jnp
+        v = self.vocab_size
+        width = max(v // 8, 8)
+        shape = (self.num_sites, local_steps, per_site_batch)
+        if self.num_codebooks > 1:
+            shape = shape + (self.num_codebooks,)
+        bias = (self.site_offsets * self.heterogeneity).astype(np.int32)
+        bias = jnp.asarray(bias).reshape((-1,) + (1,) * (len(shape) - 1))
+        k_base, k_steps = jax.random.split(key)
+        cur = jax.random.randint(k_base, shape, 0, v, dtype=jnp.int32)
+
+        def step(cur, k):
+            drift = (cur * 31 + 17) % v
+            noise = jax.random.randint(k, cur.shape, 0, width, dtype=jnp.int32)
+            cur = (drift + noise + bias) % v
+            return cur, cur
+
+        _, toks = jax.lax.scan(step, cur, jax.random.split(k_steps, seq_len))
+        # [L, S, K, B(, C)] → [S, K, B, L(, C)]
+        return {"tokens": jnp.moveaxis(toks, 0, 3)}
+
 
 # ---------------------------------------------------------------------------
 # Volumetric tasks (SA-Net)

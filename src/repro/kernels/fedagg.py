@@ -38,6 +38,67 @@ def _fedagg_kernel(x_ref, w_ref, o_ref):
     o_ref[...] = (w @ x).astype(o_ref.dtype)
 
 
+def _fedagg_dequant_kernel(q_ref, s_ref, u_ref, w_ref, g_ref, r_ref):
+    q = q_ref[...].astype(jnp.float32)            # [S, block_c, chunk]
+    deq = q * s_ref[...][..., None]               # scales [S, block_c]
+    r_ref[...] = u_ref[...] - deq                 # error-feedback residual
+    w = w_ref[...].astype(jnp.float32)            # [S]
+    g_ref[...] = jnp.sum(deq * w[:, None, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def fedagg_dequant(q, scales, u, weights, *, block_c: int = 32,
+                   interpret: Optional[bool] = None):
+    """Fused dequantize + weighted fold for quantized site uploads.
+
+    The compressed round engine's server step: each site's int8 delta
+    (``q`` [S, C, chunk] with per-chunk fp32 ``scales`` [S, C]) is
+    dequantized and folded into the Eq. 1 weighted sum in ONE pass —
+    the dense fp32 per-site models never exist in HBM.  Because error
+    feedback needs exactly ``u − deQ(Q(u))``, the kernel also emits the
+    next residual from the same VMEM-resident dequantized block:
+
+      returns ``(global [C, chunk] = Σ_s weights_s · deq_s,``
+      ``residual [S, C, chunk] = u − deq)``.
+
+    ``u`` is the pre-quantization input (delta + carried residual).  One
+    [S, block_c, chunk] slab per grid cell; int8 loads keep the HBM
+    traffic at ~1/4 of an fp32 fold.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    s, c, chunk = q.shape
+    if c == 0:
+        return (jnp.zeros((0, chunk), jnp.float32),
+                jnp.zeros((s, 0, chunk), jnp.float32))
+    block_c = min(block_c, c)
+    padded = _round_up(c, block_c)
+    if padded != c:
+        q = jnp.pad(q, ((0, 0), (0, padded - c), (0, 0)))
+        scales = jnp.pad(scales, ((0, 0), (0, padded - c)))
+        u = jnp.pad(u, ((0, 0), (0, padded - c), (0, 0)))
+    g, r = pl.pallas_call(
+        _fedagg_dequant_kernel,
+        grid=(padded // block_c,),
+        in_specs=[
+            pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, block_c), lambda i: (0, i)),
+            pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, chunk), jnp.float32),
+            jax.ShapeDtypeStruct((s, padded, chunk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, scales, u, weights)
+    return (g[:c], r[:, :c]) if padded != c else (g, r)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def fedagg(stacked, weights, *, block_n: int = 65536,
            interpret: Optional[bool] = None):

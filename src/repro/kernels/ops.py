@@ -60,6 +60,17 @@ def fedagg_pytree(stacked_tree, weights, *, interpret: Optional[bool] = None):
     return eng.global_mean(stacked_tree, weights)
 
 
+def fedagg_dequant(q, scales, u, weights, *, block_c: int = 32,
+                   interpret: Optional[bool] = None):
+    """Fused dequantize + Eq. 1 weighted fold over int8 site deltas
+    ([S, C, chunk] values + [S, C] scales), also emitting the next
+    error-feedback residual ``u − deq`` — the compressed round engine's
+    one-pass server step (see ``repro.core.round_engine``)."""
+    from repro.kernels.fedagg import fedagg_dequant as _fused
+    interp = _default_interpret() if interpret is None else interpret
+    return _fused(q, scales, u, weights, block_c=block_c, interpret=interp)
+
+
 def quantize_int8(x2d, *, block_c: int = 256, interpret: Optional[bool] = None):
     """Per-chunk int8 quantization: [C, chunk] fp32 → (int8 [C, chunk],
     fp32 scales [C]).  The upload-compression hot path (see

@@ -38,6 +38,27 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def quantize_dequantize_ref(mat):
+    """Pure-jnp int8 quantize→dequantize round trip over [..., C, chunk]
+    fp32 — the traced CPU counterpart of the kernel pair, used by the
+    compiled round engine where the quantized values never leave the
+    device.  Same math as the kernel and the numpy encoder (absmax/127
+    scales with the shared ``MIN_SCALE`` floor, half-to-even rounding),
+    so all three backends agree bit-exactly.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(mat), axis=-1) / _QMAX, MIN_SCALE)
+    q = jnp.clip(jnp.round(mat / scale[..., None]), -_QMAX, _QMAX)
+    return q * scale[..., None]
+
+
+def quantize_dequantize_fp8_ref(mat):
+    """Traced float8_e4m3 quantize→dequantize round trip (absmax→448
+    per-chunk scaling, RTNE cast) — mirrors ``Fp8Codec`` on device."""
+    scale = jnp.maximum(jnp.max(jnp.abs(mat), axis=-1) / 448.0, MIN_SCALE)
+    q = (mat / scale[..., None]).astype(jnp.float8_e4m3fn)
+    return q.astype(jnp.float32) * scale[..., None]
+
+
 def _quantize_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                    # [block_c, chunk]
     scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / _QMAX, MIN_SCALE)

@@ -22,6 +22,9 @@ Examples:
       --scheduler buffered --buffer-k 4    # async: aggregate after 4 of 8
   PYTHONPATH=src python -m repro.launch.train --sites 4 --rounds 10 \
       --transport tcp --compression int8   # quantized delta uploads
+  PYTHONPATH=src python -m repro.launch.train --sites 8 --rounds 40 \
+      --chunk-rounds 20 --device-data      # compiled scan chunks with
+                                           # on-device batch generation
 """
 from __future__ import annotations
 
@@ -51,6 +54,8 @@ def run(args) -> dict:
         transport=args.transport, scheduler=scheduler,
         compression=args.compression,
         error_feedback=not args.no_error_feedback, seed=args.seed,
+        round_engine=args.round_engine, chunk_rounds=args.chunk_rounds,
+        device_data=args.device_data,
         checkpoint_dir=str(Path(args.out) / "ckpt") if args.checkpoint else None,
         ckpt_every=args.ckpt_every, verbose=verbose)
     if getattr(args, "dry_run", False):
@@ -67,6 +72,9 @@ def run(args) -> dict:
             "scheduler": resolve_scheduler(job.scheduler).name,
             "compression": resolve_codec(job.compression).name,
             "error_feedback": job.error_feedback,
+            "round_engine": job.round_engine,
+            "chunk_rounds": job.chunk_rounds,
+            "device_data": job.device_data,
         }
         print(json.dumps(resolved))
         return resolved
@@ -109,6 +117,17 @@ def make_parser():
     ap.add_argument("--no-error-feedback", action="store_true",
                     dest="no_error_feedback",
                     help="disable the client-side quantization residual")
+    ap.add_argument("--round-engine", default="auto", dest="round_engine",
+                    choices=["auto", "scan", "loop"],
+                    help="stacked transport: compiled multi-round lax.scan "
+                         "(auto/scan) vs the retired per-round loop")
+    ap.add_argument("--chunk-rounds", type=int, default=None,
+                    dest="chunk_rounds", metavar="N",
+                    help="rounds fused per compiled scan chunk "
+                         "(default: auto)")
+    ap.add_argument("--device-data", action="store_true", dest="device_data",
+                    help="generate synthetic batches on-device inside the "
+                         "compiled scan (token tasks)")
     ap.add_argument("--dry-run", action="store_true", dest="dry_run",
                     help="resolve and print the job, skip training")
     ap.add_argument("--seed", type=int, default=0)

@@ -89,6 +89,43 @@ def test_fedagg_sweep(s, n, block, dtype):
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("s,c,chunk,block_c", [(3, 7, 256, 4), (4, 16, 128, 16),
+                                               (2, 1, 128, 32)])
+def test_fedagg_dequant_fuses_decode_and_fold(s, c, chunk, block_c):
+    """The compressed round engine's one-pass server step: dequantize +
+    Eq. 1 fold + error-feedback residual, vs the separate numpy codec."""
+    from repro.comms.compression import MIN_SCALE
+    rng = np.random.default_rng(7)
+    u = (rng.normal(size=(s, c, chunk)) * 0.1).astype(np.float32)
+    w = rng.dirichlet(np.ones(s)).astype(np.float32)
+    scale = np.maximum(np.max(np.abs(u), axis=-1) / 127.0,
+                       MIN_SCALE).astype(np.float32)
+    q = np.clip(np.rint(u / scale[..., None]), -127, 127).astype(np.int8)
+    deq = q.astype(np.float32) * scale[..., None]
+    g, r = ops.fedagg_dequant(jnp.asarray(q), jnp.asarray(scale),
+                              jnp.asarray(u), jnp.asarray(w),
+                              block_c=block_c)
+    np.testing.assert_allclose(np.asarray(g), np.einsum("s,sct->ct", w, deq),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(r), u - deq, rtol=1e-5, atol=1e-7)
+
+
+def test_fedagg_dequant_matches_jnp_quantize_path():
+    """Kernel quantize → fused fold agrees with the traced jnp twin the
+    CPU engine path uses (quantize_dequantize_ref + einsum fold)."""
+    from repro.kernels.quantize import quantize_dequantize_ref
+    rng = np.random.default_rng(8)
+    u = jnp.asarray((rng.normal(size=(4, 5, 128)) * 0.02).astype(np.float32))
+    w = jnp.asarray(rng.dirichlet(np.ones(4)).astype(np.float32))
+    q, sc = ops.quantize_int8(u.reshape(20, 128))
+    g, _ = ops.fedagg_dequant(q.reshape(4, 5, 128), sc.reshape(4, 5), u, w)
+    deq = quantize_dequantize_ref(u)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.einsum("s,sct->ct", np.asarray(w),
+                                         np.asarray(deq)),
+                               rtol=1e-6, atol=1e-7)
+
+
 def test_fedagg_pytree_matches_eq1():
     """Kernel aggregation == Eq. 1 weighted mean on a realistic param tree."""
     from repro.core.stacking import weighted_mean
