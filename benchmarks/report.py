@@ -78,6 +78,33 @@ def round_engine_table() -> str:
     return "\n".join(out)
 
 
+def pod_scaling_table() -> str:
+    fn = ARTIFACTS / "BENCH_pod_scaling.json"
+    if not fn.exists():
+        return "_run benchmarks.pod_scaling first_"
+    rec = json.loads(fn.read_text())
+    out = [f"_{rec['rounds']}-round thread FedAvg, {rec['sites']} sites; "
+           "bytes are measured WireStats_\n",
+           "| topology | wall (s) | intra-pod up (B) | cross-pod up (B) | "
+           "cross-pod down (B) |",
+           "|---|---|---|---|---|"]
+    flat = rec["flat"]
+    out.append(f"| flat | {flat['wall_s']:.1f} | "
+               f"{flat['comm'].get('upload_bytes', 0)} | — | — |")
+    for p, r in sorted(rec["pods"].items(), key=lambda kv: int(kv[0])):
+        c = r["comm"]
+        out.append(f"| pods:{p} | {r['wall_s']:.1f} | "
+                   f"{c['intra_pod_upload_bytes']} | "
+                   f"{c['cross_pod_upload_bytes']} | "
+                   f"{c['cross_pod_download_bytes']} |")
+    sim = rec["stacked_pods2_simulated"]["comm"]
+    out.append(f"\nStacked-simulated pods:2 split predicts the measured "
+               f"one: cross-pod up {sim['cross_pod_upload_bytes']} B "
+               "(payload) vs measured framed bytes above.  The WAN term "
+               "scales with the pod count, not the site count.")
+    return "\n".join(out)
+
+
 def checks_table() -> str:
     out = ["| benchmark | check | pass |", "|---|---|---|"]
     for fn in sorted(ARTIFACTS.glob("*.json")):
@@ -134,6 +161,8 @@ if __name__ == "__main__":
     print(roofline_table())
     print("\n## §Compiled round engine\n")
     print(round_engine_table())
+    print("\n## §Pod scaling (two-tier topology)\n")
+    print(pod_scaling_table())
     print("\n## §Perf hillclimb\n")
     print(hillclimb_table())
     print("\n## Paper-claim checks\n")

@@ -23,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (agg_engine, comm_bytes, dose_prediction,
-                            gossip_robustness, parallel_scaling, roofline,
-                            round_engine, strategy_compare)
+                            gossip_robustness, parallel_scaling, pod_scaling,
+                            roofline, round_engine, strategy_compare)
     benches = [
         ("dose_prediction_fig7_8_9", dose_prediction.run),
         ("strategy_compare_fig11_12", strategy_compare.run),
@@ -32,6 +32,7 @@ def main() -> None:
         ("comm_bytes_table1", comm_bytes.run),
         ("agg_engine_eq1", agg_engine.run),
         ("round_engine_scan", round_engine.run),
+        ("pod_scaling_two_tier", pod_scaling.run),
         ("parallel_scaling_sec3a4", parallel_scaling.run),
         ("roofline_dryrun", roofline.run),
     ]

@@ -15,13 +15,24 @@ checkpointing and metrics, and executes rounds through a pluggable
   * :class:`TcpTransport`     — same wire protocol, but each site is its
     own OS process (the paper's deployment shape).
 
-Two more seams sit on top of the transport seam:
+Three more seams sit on top of the transport seam:
 
+  * the **topology seam** (:mod:`repro.core.topology`):
+    ``topology="pods:K"`` turns the flat star into a two-tier pod
+    federation — per-pod partial aggregation, then a cross-pod combine.
+    On the stacked simulator that is a segment-reduce by pod id inside
+    the compiled round (``AggregationEngine.aggregate_pods``); on the
+    socket transports it is a real server hierarchy
+    (:mod:`repro.comms.pods`): one ``AggregationServer`` per pod plus a
+    root combiner that pod-leader relays re-upload partials to, with
+    ``result.comm`` splitting intra-pod vs cross-pod wire bytes.
+    ``pod_dropout=N`` churns whole pods (Algorithm 2 at the pod tier);
   * the **scheduler seam** (:mod:`repro.core.session`): ``SyncScheduler``
     keeps barrier rounds, ``BufferedScheduler`` gives FedBuff-style
     buffered-async aggregation — on the stacked simulator *and* on the
     TCP server, since both fold uploads through the same
-    ``StreamingAccumulator``;
+    ``StreamingAccumulator``; under a pods topology the choice applies
+    *per tier* (``Topology(intra_scheduler=…, inter_scheduler=…)``);
   * the **compression seam** (:mod:`repro.comms.compression`):
     ``compression="int8" | "fp8" | "topk-sparse"`` quantizes each site's
     upload as a per-chunk-scaled delta against the global it last
@@ -70,6 +81,7 @@ from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
                                 RoundScheduler, availability_masks,
                                 resolve_scheduler)
 from repro.core.strategies import base as strat_base
+from repro.core.topology import FLAT, Topology, resolve_topology
 from repro.optim import adamw
 
 
@@ -138,9 +150,10 @@ class TaskBundle:
     model_cfg: Any
     sample: Callable[[int, int], Dict[str, np.ndarray]]   # (site, step) -> [B,…]
     stacked: Callable[[int, int], Dict[str, np.ndarray]]  # (round, K) -> [S,K,B,…]
-    # traced (key, K, B, L) -> [S,K,B,…] batch sampler for the compiled
-    # round engine's on-device data path; None when the task has no
-    # traced generator (volume tasks generate on the host)
+    # traced (key, K, B) -> [S,K,B,…] batch sampler for the compiled
+    # round engine's on-device data path (token AND dose/seg tasks);
+    # None when no traced generator applies (site_pools case recycling
+    # is host-only)
     traced_stacked: Optional[Callable] = None
 
     @staticmethod
@@ -196,7 +209,8 @@ def _build_token_task(task: TaskConfig) -> TaskBundle:
             "tokens": gen.sample(site, step, task.batch, task.seq)},
         stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch,
                                                    task.seq),
-        traced_stacked=gen.traced_stacked_batches)
+        traced_stacked=lambda key, k, b: gen.traced_stacked_batches(
+            key, k, b, task.seq))
 
 
 def _build_volume_task(task: TaskConfig) -> TaskBundle:
@@ -232,7 +246,11 @@ def _build_volume_task(task: TaskConfig) -> TaskBundle:
         task=task, loss_fn=loss_fn, logits_fn=logits_fn,
         init_fn=lambda k: sanet_mod.sanet_init(k, scfg), model_cfg=scfg,
         sample=lambda site, step: gen.sample(site, step, task.batch),
-        stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch))
+        stacked=lambda rnd, k: gen.stacked_batches(rnd, k, task.batch),
+        # jnp generator: device_data=True covers the SA-Net tasks too;
+        # site_pools recycling indexes by host step, so it stays host-side
+        traced_stacked=(gen.traced_stacked_batches
+                        if task.site_pools is None else None))
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +283,11 @@ class FederatedJob:
     # execution
     transport: Union[str, "Transport"] = "stacked"
     scheduler: Union[str, RoundScheduler] = "sync"
+    # federation topology: "flat" (one star) or "pods:K" / a Topology —
+    # two tiers of aggregation (per-pod partials → cross-pod combine)
+    # honored by every transport; see repro.core.topology
+    topology: Union[str, Topology] = "flat"
+    pod_dropout: int = 0                # Algorithm-2 churn at the pod tier
     compression: Union[str, Codec] = "none"   # upload codec (comms seam)
     error_feedback: bool = True         # carry quantization residual
     seed: int = 0                       # init + dropout + pairing seed
@@ -291,8 +314,35 @@ class FederatedJob:
         over the concatenated data)."""
         return 1 if self.strategy == "pooled" else self.task.sites
 
+    @property
+    def topo(self) -> Topology:
+        return resolve_topology(self.topology)
+
     def replace(self, **kw) -> "FederatedJob":
         return dataclasses.replace(self, **kw)
+
+    def masks(self, rounds: int) -> np.ndarray:
+        """The run's [rounds, S] Algorithm-2 availability schedule —
+        site-tier churn composed with pod-tier churn (``pod_dropout``).
+        THE mask source for every transport, so distributed workers and
+        the driver replay one schedule."""
+        if self.pod_dropout and not self.topo.is_pods:
+            raise ValueError("pod_dropout requires a pods topology "
+                             "(--topology pods:K)")
+        return availability_masks(self.task.sites, self.max_dropout,
+                                  self.seed, rounds, topology=self.topo,
+                                  pod_dropout=self.pod_dropout)
+
+    def tier_schedulers(self) -> Tuple[RoundScheduler, RoundScheduler]:
+        """(intra-pod, cross-pod) schedulers: the topology's per-tier
+        overrides, falling back to the job's scheduler at both tiers."""
+        topo = self.topo
+        return (resolve_scheduler(topo.intra_scheduler
+                                  if topo.intra_scheduler is not None
+                                  else self.scheduler),
+                resolve_scheduler(topo.inter_scheduler
+                                  if topo.inter_scheduler is not None
+                                  else self.scheduler))
 
     def federation(self, num_sites: Optional[int] = None,
                    strategy: Optional[str] = None) -> FederationConfig:
@@ -312,16 +362,21 @@ class FederatedJob:
     def context(self, bundle: Optional[TaskBundle] = None,
                 num_sites: Optional[int] = None,
                 strategy: Optional[str] = None) -> F.FLContext:
-        """The FLContext view of this job (stacked or per-site worker)."""
+        """The FLContext view of this job (stacked or per-site worker).
+        The topology rides along only on the full-federation view — a
+        worker's 1-site (or otherwise resized) context is flat, since
+        tiering happens at its aggregation point, not inside its rounds."""
         bundle = bundle or self.task.build()
         fed = self.federation(num_sites, strategy)
+        topo = self.topo if num_sites is None and self.strategy != "pooled" \
+            else FLAT
         return F.FLContext(
             fed=fed, mesh=MeshConfig.for_sites(fed.num_sites),
             case_weights=jnp.asarray(fed.case_weights()),
             loss_fn=bundle.loss_fn, logits_fn=bundle.logits_fn,
             optimizer=adamw(self.lr, weight_decay=self.weight_decay),
             grad_clip=self.grad_clip, dcml_lr=self.dcml_lr or self.lr,
-            hierarchical=False)
+            topology=topo)
 
     def recorder(self, rounds: int, num_sites: int) -> RoundRecorder:
         return RoundRecorder(rounds, verbose=self.verbose,
@@ -366,13 +421,28 @@ class StackedTransport(Transport):
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
         buffered = isinstance(scheduler, BufferedScheduler)
+        topo = job.topo
+        if topo.is_pods:
+            topo.validate(job.task.sites)
+            if job.strategy not in ("fedavg", "fedprox"):
+                raise ValueError(
+                    "a pods topology needs a centrally-aggregated strategy "
+                    f"(fedavg/fedprox), not {job.strategy!r}")
+            intra_s, inter_s = job.tier_schedulers()
+            if (buffered or isinstance(intra_s, BufferedScheduler)
+                    or isinstance(inter_s, BufferedScheduler)):
+                raise ValueError(
+                    "the stacked simulator runs pods synchronously at both "
+                    "tiers; buffered per-tier compositions run on the "
+                    "thread/tcp transports")
         if buffered and job.strategy != "fedavg":
             raise ValueError("buffered-async scheduling currently supports "
                              f"fedavg only, not {job.strategy!r}")
-        if not buffered and codec.name != "none" and job.strategy != "fedavg":
+        if (not buffered and codec.name != "none"
+                and job.strategy not in ("fedavg", "fedprox")):
             raise ValueError(
                 "compression on the stacked transport currently supports "
-                f"fedavg only, not {job.strategy!r}; run fedprox/gcml "
+                f"fedavg/fedprox only, not {job.strategy!r}; run gcml "
                 "compression on the thread/tcp transports")
         bundle = job.task.build()
         if job.round_engine not in ("auto", "scan", "loop"):
@@ -406,8 +476,7 @@ class StackedTransport(Transport):
         fl_round = F.build_fl_round(ctx)
         fl_step = None                  # AOT-compiled once, timed separately
         compile_s = 0.0
-        masks = availability_masks(ctx.fed.num_sites, job.max_dropout,
-                                   job.seed, rounds)
+        masks = job.masks(rounds)
         pair_rng = np.random.default_rng(job.seed)
         recorder = job.recorder(rounds, ctx.fed.num_sites)
         for r in range(rounds):
@@ -437,13 +506,18 @@ class StackedTransport(Transport):
         if job.strategy in ("fedavg", "fedprox"):
             # no wire in-process: report what the equivalent socket run
             # would upload/download (one fp32 model per active site per
-            # round, each direction)
-            uploads = int(masks.sum())
+            # round, each direction; with pods, plus one partial/global
+            # per active pod on the cross-pod link)
             nbytes = per_site_nbytes(state["params"])
-            comm = {"upload_bytes": uploads * nbytes,
-                    "download_bytes": uploads * nbytes,
-                    "upload_count": uploads, "compression": "none",
-                    "simulated": True}
+            if ctx.topology.is_pods:
+                from repro.core.topology import simulated_pods_comm
+                comm = simulated_pods_comm(ctx.topology, masks, nbytes)
+            else:
+                uploads = int(masks.sum())
+                comm = {"upload_bytes": uploads * nbytes,
+                        "download_bytes": uploads * nbytes,
+                        "upload_count": uploads, "compression": "none",
+                        "simulated": True}
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
                                state=state, comm=comm, compile_s=compile_s)
@@ -458,14 +532,24 @@ class StackedTransport(Transport):
         exact client/server path the socket transports drive against the
         ``AggregationServer``, simulated in process.  The first round
         uploads full (quantized) weights; deltas start once a global
-        exists, mirroring a server that never saw the initialization."""
-        ctx = job.context(bundle, strategy="individual")  # local-only rounds
+        exists, mirroring a server that never saw the initialization.
+
+        FedProx runs its local half (``fedprox-local``) with the
+        proximal anchor re-pinned to each broadcast global; a pods
+        topology folds through per-pod accumulators first and combines
+        the partials at the pod weights — the simulated twin of the
+        :class:`~repro.comms.pods.PodTransport` server stack."""
+        local_strategy = ("fedprox-local" if job.strategy == "fedprox"
+                          else "individual")
+        ctx = job.context(bundle, strategy=local_strategy)  # local-only
         num_sites = ctx.fed.num_sites
+        topo = job.topo
+        pod_of = topo.pod_of(num_sites)
         state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
         fl_round = F.build_fl_round(ctx)
         local_round = None
         compile_s = 0.0
-        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        masks = job.masks(rounds)
         case_w = np.asarray(job.federation().case_weights())
         comps = [UploadCompressor(codec, job.error_feedback)
                  for _ in range(num_sites)]
@@ -483,25 +567,44 @@ class StackedTransport(Transport):
             state, metrics = local_round(state, b, ri)
             jax.block_until_ready(state)
             active_idx = [int(i) for i in np.flatnonzero(masks[r])]
-            acc = StreamingAccumulator()
+            # two-tier fold: sites stream into their pod's accumulator,
+            # pod partials stream into the root at the pod's folded
+            # weight (flat topology = the one-accumulator special case)
+            pods = [StreamingAccumulator() for _ in range(topo.num_pods)]
+            root = StreamingAccumulator()
             round_bytes = 0
             for site in active_idx:
                 params_site = jax.tree.map(
                     lambda x: np.asarray(x[site], np.float32), state["params"])
                 enc, cmeta = comps[site].encode(params_site, reference)
                 round_bytes += tree_payload_nbytes(enc)
-                acc.fold(decode_upload(enc, cmeta, reference),
-                         float(case_w[site]))
-            if acc.count:
-                global_params = acc.finalize()
+                w = 1.0 if topo.intra == "uniform" else float(case_w[site])
+                pods[int(pod_of[site])].fold(
+                    decode_upload(enc, cmeta, reference), w)
+            for acc in pods:
+                if acc.count:
+                    pw = 1.0 if topo.inter == "uniform" else acc.weight_total
+                    root.fold(acc.finalize(), pw)
+            if root.count:
+                global_params = root.finalize()
                 reference = global_params
                 state = _set_param_sites(state, active_idx, global_params)
+                if local_strategy == "fedprox-local":   # Eq. 2 anchor
+                    state = {**state, "strategy": {"global": jax.tree.map(
+                        lambda g: jnp.asarray(g, jnp.float32),
+                        global_params)}}
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: global_params,
                             extra={"step_s": time.time() - t_step,
                                    "upload_bytes": round_bytes})
         comm = _compressor_comm(comps, codec,
                                 per_site_nbytes(state["params"]))
+        if topo.is_pods:
+            from repro.core.topology import simulated_pods_comm
+            comm.update(simulated_pods_comm(
+                topo, masks, per_site_nbytes(state["params"]),
+                intra_upload_bytes=comm["upload_bytes"],
+                compression=codec.name))
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
                                comm=comm, compile_s=compile_s)
@@ -528,7 +631,7 @@ class StackedTransport(Transport):
         fl_round = F.build_fl_round(ctx)
         local_round = None
         compile_s = 0.0
-        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        masks = job.masks(rounds)
         case_w = np.asarray(job.federation().case_weights())
         acc = StreamingAccumulator()
         order_rng = np.random.default_rng(job.seed + 13)
@@ -630,17 +733,27 @@ def _site_host_tree(params_stacked):
 def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
               rounds: int) -> Dict[str, Any]:
     """One site's FL script — identical whether driven by a thread or an
-    OS process (paper Algorithm 1, site side)."""
+    OS process (paper Algorithm 1, site side), and identical under a
+    pods topology: the site just talks to its pod's aggregation server
+    (``agg_addr`` arrives as a site→address map) and counts its barrier
+    against its pod's active members."""
     from repro.comms.peer import Peer
     bundle = job.task.build()
-    buffered = isinstance(resolve_scheduler(job.scheduler), BufferedScheduler)
-    local_strategy = "fedprox" if job.strategy == "fedprox" else "individual"
+    if isinstance(agg_addr, dict):          # pods: my pod server's address
+        agg_addr = tuple(agg_addr[site_id])
+    # the scheduler a site experiences is its aggregation point's — the
+    # intra-pod tier under a pods topology (= the job scheduler when flat)
+    buffered = isinstance(job.tier_schedulers()[0], BufferedScheduler)
+    local_strategy = ("fedprox-local" if job.strategy == "fedprox"
+                      else "individual")
     ctx = job.context(bundle, num_sites=1, strategy=local_strategy)
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
     local_round = jax.jit(F.build_fl_round(ctx))
-    # every site replays the same Algorithm-2 chain — no status traffic
-    # needed for the schedule itself
-    masks = availability_masks(job.task.sites, job.max_dropout, job.seed, rounds)
+    # every site replays the same Algorithm-2 chain (site + pod tiers) —
+    # no status traffic needed for the schedule itself
+    masks = job.masks(rounds)
+    pod_members = job.topo.pod_of(job.task.sites) == \
+        job.topo.pod_of(job.task.sites)[site_id]     # my barrier's peers
     strategy = strat_base.get_strategy(job.strategy)
     dcml_step = None
     peer = Peer(site_id)
@@ -718,7 +831,7 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                     cmeta["base_round"] = base_round if reference is not None \
                         else 0
                 ack = peer.upload(agg_addr, payload, upload_round,
-                                  active_sites=int(masks[r].sum()),
+                                  active_sites=int(masks[r][pod_members].sum()),
                                   meta_extra=cmeta)
                 if ack.get("stale"):
                     # rejected as too stale: the resync below restores a
@@ -740,7 +853,7 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                             jnp.asarray(gg).astype(x.dtype)[None], x.shape),
                         state["params"], g)
                     state = {**state, "params": new_params}
-                    if local_strategy == "fedprox":  # Eq. 2 proximal anchor
+                    if local_strategy == "fedprox-local":  # Eq. 2 anchor
                         state = {**state, "strategy": {
                             "global": jax.tree.map(
                                 lambda gg: jnp.asarray(gg, jnp.float32), g)}}
@@ -777,12 +890,17 @@ class _SocketTransport(Transport):
     def execute(self, job: FederatedJob, rounds: int) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
         strategy = strat_base.get_strategy(job.strategy)
+        topo = job.topo
         if job.strategy == "pooled":
             raise ValueError("pooled is a single-process baseline; "
                              "run it on the stacked transport")
         if strategy.needs_pairing and job.max_dropout:
             raise ValueError("gossip under dropout needs coordinated status "
                              "updates; run it on the stacked transport")
+        if topo.is_pods and job.strategy not in ("fedavg", "fedprox"):
+            raise ValueError(
+                "a pods topology needs a centrally-aggregated strategy "
+                f"(fedavg/fedprox), not {job.strategy!r}")
         fed = job.federation()
         num_sites = fed.num_sites
         # construct before the workers run so wall_s spans the actual run
@@ -791,9 +909,19 @@ class _SocketTransport(Transport):
                                              CoordinationServer)
         servers = []
         agg = None
+        pod_stack = None
         agg_addr = coord_addr = None
         try:
-            if not strategy.needs_pairing and job.strategy != "individual":
+            if topo.is_pods:
+                from repro.comms.pods import PodTransport
+                intra_s, inter_s = job.tier_schedulers()
+                pod_stack = PodTransport(
+                    topo, num_sites, list(fed.case_weights()),
+                    job.masks(rounds), intra_s, inter_s,
+                    io_timeout=job.io_timeout).start()
+                servers.append(pod_stack)
+                agg_addr = pod_stack.site_addrs()
+            elif not strategy.needs_pairing and job.strategy != "individual":
                 agg = AggregationServer(
                     "127.0.0.1", 0, num_sites=num_sites,
                     case_weights=list(fed.case_weights()),
@@ -813,6 +941,9 @@ class _SocketTransport(Transport):
                 s.stop()
         per_site = dict(results)
         dead = {i: p["error"] for i, p in per_site.items() if "error" in p}
+        if pod_stack is not None and pod_stack.leader_errors:
+            dead = {**dead, **{f"pod-leader-{p}": e
+                               for p, e in pod_stack.leader_errors.items()}}
         if dead:
             raise RuntimeError(f"site workers failed: {dead}")
         # bytes-on-the-wire accounting: server-side counters are the real
@@ -824,7 +955,11 @@ class _SocketTransport(Transport):
         site_raw = sum(p.get("upload_raw_bytes", 0) for p in per_site.values())
         site_count = sum(p.get("upload_count", 0) for p in per_site.values())
         comm = None
-        if agg is not None:
+        if pod_stack is not None:            # two-tier: per-tier byte split
+            comm = {**pod_stack.comm(codec.name),
+                    "site_payload_bytes": site_payload,
+                    "upload_raw_bytes": site_raw}
+        elif agg is not None:
             snap = agg.stats.snapshot()
             comm = {"upload_bytes": snap.get("upload", {}).get("in_bytes", 0),
                     "download_bytes":
@@ -839,7 +974,7 @@ class _SocketTransport(Transport):
                     "upload_count": site_count,
                     "compression": codec.name, "simulated": False}
         losses = np.stack([per_site[i]["losses"] for i in range(num_sites)])
-        masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+        masks = job.masks(rounds)
         stale = [per_site[i].get("stale_uploads", 0) for i in range(num_sites)]
         round_wall = recorder.elapsed / max(rounds, 1)
         for r in range(rounds):

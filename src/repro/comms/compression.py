@@ -267,8 +267,23 @@ def decode_tree(tree: Any) -> Any:
     return _tree_map(decode_array, tree)
 
 
+@dataclasses.dataclass
+class TopKFixedCodec(TopKCodec):
+    """Top-k with a *statically shaped* payload: ``k = ceil(fraction·n)``
+    per leaf is a function of the leaf shape alone, so every upload of a
+    run carries identical index/value array shapes (the bootstrap still
+    rides dense).  On the wire this encodes exactly like ``topk`` — the
+    point of the name is the contract: constant shapes let the stacked
+    round engine compile the sparsifier into its ``lax.scan`` instead of
+    falling back to the retired per-round loop (``jax.lax.top_k`` twin
+    in :mod:`repro.core.round_engine`)."""
+
+    name = "topk-fixed"
+
+
 _CODECS = {"none": NoneCodec, "int8": Int8Codec, "fp8": Fp8Codec,
-           "topk": TopKCodec, "topk-sparse": TopKCodec}
+           "topk": TopKCodec, "topk-sparse": TopKCodec,
+           "topk-fixed": TopKFixedCodec}
 
 
 def resolve_codec(spec: Union[str, Codec, None]) -> Codec:

@@ -85,6 +85,31 @@ class AggregationServer:
         ``self._round + 1``; staleness 0 = an upload for exactly that."""
         return self.scheduler.discount(self._round + 1 - upload_round)
 
+    def _wait_for_upload_round(self, upload_round: int) -> None:
+        """Lock held.  A site that sat out intermediate rounds (dropout)
+        races ahead of the aggregation point and uploads a FUTURE-tagged
+        payload; under barrier semantics it must wait for the point to
+        catch up — dropping it as 'stale' would leave its round one
+        upload short forever.  Bounded by ``download_timeout``; on
+        timeout the normal staleness check rejects the upload."""
+        self._lock.wait_for(lambda: upload_round <= self._round + 1,
+                            timeout=self.download_timeout)
+
+    def _on_ready(self):
+        """Lock held.  The buffer is complete: finalize into a new global
+        and advance the round.  The pod-tier subclass
+        (:class:`repro.comms.pods.PodAggregationServer`) overrides this to
+        finalize into a *partial* for its leader instead — the round only
+        advances when the leader installs the root global."""
+        self._global = self._acc.finalize()
+        self._folded = set()
+        self._round += 1
+        self._globals[self._round] = self._global
+        for old in [k for k in self._globals
+                    if k <= self._round - self.keep_globals]:
+            del self._globals[old]
+        self._lock.notify_all()
+
     def _handle(self, kind, meta, tree):
         if kind == "upload":
             site = int(meta["site"])
@@ -96,6 +121,7 @@ class AggregationServer:
                 # the fold in case the round advanced during the decode.
                 with self._lock:
                     upload_round = int(meta.get("round", self._round + 1))
+                    self._wait_for_upload_round(upload_round)
                     if self._discount(upload_round) is None:
                         return encode_message(
                             "ack", {"round": self._round, "stale": True}, None)
@@ -108,23 +134,21 @@ class AggregationServer:
                 tree = compression.decode_upload(tree, meta, reference)
             with self._lock:
                 upload_round = int(meta.get("round", self._round + 1))
+                self._wait_for_upload_round(upload_round)
                 discount = self._discount(upload_round)
                 if discount is None:
                     return encode_message(
                         "ack", {"round": self._round, "stale": True}, None)
                 if site not in self._folded:
-                    self._acc.fold(tree, self.weights[site] * discount)
+                    # a pod leader re-uploading a pod partial carries the
+                    # pod's folded (active-member) weight in the meta —
+                    # per-site weights stay the static case weights
+                    w = float(meta.get("weight", self.weights[site]))
+                    self._acc.fold(tree, w * discount)
                     self._folded.add(site)
                 expected = int(meta.get("active_sites", self.num_sites))
                 if self.scheduler.ready(len(self._folded), expected):
-                    self._global = self._acc.finalize()
-                    self._folded = set()
-                    self._round += 1
-                    self._globals[self._round] = self._global
-                    for old in [k for k in self._globals
-                                if k <= self._round - self.keep_globals]:
-                        del self._globals[old]
-                    self._lock.notify_all()
+                    self._on_ready()
             return encode_message("ack", {"round": self._round,
                                           "stale": False}, None)
         if kind == "download":

@@ -1,0 +1,272 @@
+"""Two-tier pod federation over the socket stack (the ``PodTransport``).
+
+A pods :class:`~repro.core.topology.Topology` on the ``thread``/``tcp``
+transports builds this server hierarchy instead of the flat star:
+
+    sites ──upload──►  PodAggregationServer (one per pod)
+                            │ pod_partial            ▲ install_global
+                            ▼                        │
+                       pod leader ──upload──►  root AggregationServer
+                                  ◄─download──       (cross-pod combine)
+
+Each pod runs its own :class:`~repro.comms.coordinator.AggregationServer`
+subclass that finalizes arrivals into a *pod partial* (the pod's
+case-weighted mean at the pod's folded weight) instead of advancing a
+global round.  A **pod leader** — one relay per pod, the paper's
+institutional-hub role — pulls the partial, re-uploads it to the root
+server over the ordinary ``Peer``/codec wire (the partial's weight rides
+the upload metadata), downloads the combined global, and installs it
+back into its pod server, which is when the pod's sites see the round
+advance.  Sites run the *unchanged* site script against their pod
+server's address: the two-tier structure is invisible below the seam.
+
+The scheduler seam applies per tier: the pod servers take the
+topology's ``intra_scheduler`` (sync barrier within the pod, or FedBuff
+K-of-members buffering) and the root takes ``inter_scheduler`` (barrier
+across pods, or buffered with staleness-discounted pod partials) — so
+sync-within-pod + buffered-across-pods and the reverse are both valid
+compositions.
+
+Byte accounting is split by tier: the pod servers' ``WireStats`` count
+the **intra-pod** traffic (site uploads in, global downloads out — the
+fast link), the root server's count the **cross-pod** traffic (partials
+in, globals out — the slow/WAN link that scales with the pod count, not
+the site count).  ``benchmarks/pod_scaling.py`` measures exactly that
+split.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.comms.codec import encode_message
+from repro.comms.coordinator import AggregationServer
+from repro.comms.transport import Channel
+from repro.core.session import BufferedScheduler, RoundScheduler
+from repro.core.topology import Topology
+
+
+class PodAggregationServer(AggregationServer):
+    """A pod's tier-1 aggregation point.
+
+    Uploads stream through the inherited :class:`StreamingAccumulator`
+    fold (same staleness/compression rules, same duplicate guard), but a
+    complete buffer finalizes into a **partial** for the pod leader —
+    ``self._round`` (what site downloads block on) only advances when
+    the leader installs the root's combined global.  Two extra rpcs:
+
+      ``pod_partial``     — leader: block until partial ``round`` exists,
+                            return it with its folded weight;
+      ``install_global``  — leader: set the round's global model (also
+                            registered as a delta decode reference) and
+                            wake blocked site downloads.
+    """
+
+    def __init__(self, *args, pod_id: int = 0, **kw):
+        self.pod_id = pod_id
+        self._partial: Any = None
+        self._partial_weight = 0.0
+        self._partial_round = 0
+        super().__init__(*args, **kw)
+
+    def _on_ready(self):                     # lock held
+        self._partial_weight = float(self._acc.weight_total)
+        self._partial = self._acc.finalize()
+        self._folded = set()
+        self._partial_round += 1
+        self._lock.notify_all()
+
+    def _handle(self, kind, meta, tree):
+        if kind == "pod_partial":
+            want = int(meta["round"])
+            with self._lock:
+                done = self._lock.wait_for(
+                    lambda: self._partial_round >= want,
+                    timeout=self.download_timeout)
+                if not done:
+                    return encode_message(
+                        "error",
+                        {"message": f"timeout: pod {self.pod_id} partial "
+                                    f"{want} not complete (at "
+                                    f"{self._partial_round}, "
+                                    f"{len(self._folded)} folded)"}, None)
+                return encode_message(
+                    "partial", {"round": self._partial_round,
+                                "weight": self._partial_weight},
+                    self._partial)
+        if kind == "install_global":
+            new_round = int(meta["round"])
+            with self._lock:
+                self._global = tree
+                self._round = max(self._round, new_round)
+                self._globals[new_round] = tree
+                for old in [k for k in self._globals
+                            if k <= self._round - self.keep_globals]:
+                    del self._globals[old]
+                self._lock.notify_all()
+            return encode_message("ack", {"round": self._round}, None)
+        return super()._handle(kind, meta, tree)
+
+
+class PodTransport:
+    """The two-tier server stack + leader relays for one pods run.
+
+    Owned by the socket transports (``thread``/``tcp``): construct,
+    :meth:`start`, point each site worker at :meth:`site_addr`, then
+    :meth:`stop` and read :meth:`comm` for the per-tier byte split.
+    Leaders run as driver-side threads (they are infrastructure, like
+    the servers — the paper's hub process, not a training site).
+    """
+
+    def __init__(self, topology: Topology, num_sites: int,
+                 case_weights: List[float], masks: np.ndarray,
+                 intra_scheduler: RoundScheduler,
+                 inter_scheduler: RoundScheduler,
+                 io_timeout: float = 120.0):
+        topology.validate(num_sites)
+        self.topology = topology
+        self.num_sites = num_sites
+        self.case_weights = list(case_weights)
+        self.masks = np.asarray(masks, bool)
+        self.rounds = self.masks.shape[0]
+        self.intra_scheduler = intra_scheduler
+        self.inter_scheduler = inter_scheduler
+        self.io_timeout = io_timeout
+        self.pod_of = topology.pod_of(num_sites)
+        self.root: Optional[AggregationServer] = None
+        self.pod_servers: List[PodAggregationServer] = []
+        self._leaders: List[threading.Thread] = []
+        self.leader_errors: Dict[int, str] = {}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "PodTransport":
+        p = self.topology.num_pods
+        # root combiner: "sites" are pod ids; fold weights arrive per
+        # upload (the pod's folded active-member weight), so the static
+        # per-pod weights are never used
+        self.root = AggregationServer(
+            "127.0.0.1", 0, num_sites=p,
+            download_timeout=self.io_timeout / 2,
+            scheduler=self.inter_scheduler)
+        # pod servers keep GLOBAL site ids (uploads carry them), so they
+        # take the full case-weight table; `expected` comes from each
+        # upload's pod-local active_sites count.  intra="uniform" folds
+        # every member at weight 1 (the engine's uniform branch).
+        intra_w = (None if self.topology.intra == "uniform"
+                   else self.case_weights)
+        self.pod_servers = [
+            PodAggregationServer("127.0.0.1", 0, num_sites=self.num_sites,
+                                 case_weights=intra_w,
+                                 download_timeout=self.io_timeout / 2,
+                                 scheduler=self.intra_scheduler, pod_id=i)
+            for i in range(p)]
+        self._leaders = [threading.Thread(target=self._leader, args=(i,),
+                                          daemon=True) for i in range(p)]
+        for t in self._leaders:
+            t.start()
+        return self
+
+    def stop(self):
+        """Tear down servers and relays.  Leader failures are collected
+        in ``leader_errors`` (not raised here — the driver reports them
+        together with any dead site workers)."""
+        for t in self._leaders:
+            t.join(timeout=5)
+        for s in self.pod_servers:
+            s.stop()
+        if self.root is not None:
+            self.root.stop()
+
+    def site_addr(self, site_id: int):
+        """The aggregation address a site worker should use — its pod
+        server (sites never talk across the pod boundary)."""
+        return self.pod_servers[int(self.pod_of[site_id])].addr
+
+    def site_addrs(self) -> Dict[int, Any]:
+        return {i: self.site_addr(i) for i in range(self.num_sites)}
+
+    # -- the leader relay (Algorithm 1, hub side) ---------------------------
+
+    def _active_pods(self, r: int) -> int:
+        """Pods with at least one active site in round ``r`` — the root
+        barrier's `expected` (pod-tier Algorithm-2 churn: a fully-offline
+        pod simply misses the round, like a dropped site).  Shares the
+        one definition with the simulated byte split."""
+        from repro.core.topology import active_pod_counts
+        return int(active_pod_counts(self.topology,
+                                     self.masks[r:r + 1])[0])
+
+    def _leader(self, pod_id: int):
+        from repro.comms.peer import Peer
+        peer = Peer(site_id=pod_id)
+        chan = Channel(self.pod_servers[pod_id].addr,
+                       timeout=self.io_timeout)
+        buffered = isinstance(self.inter_scheduler, BufferedScheduler)
+        mine = self.pod_of == pod_id
+        base_round = 0          # root round of the last pulled global
+        partials = 0            # partials the pod server has produced:
+        #                         one per round with ≥1 active member —
+        #                         NOT the loop round (a fully-off pod
+        #                         produces none that round)
+        try:
+            for r in range(self.rounds):
+                partial = None
+                if bool((self.masks[r] & mine).any()):
+                    partials += 1
+                    _, pmeta, partial = chan.request("pod_partial",
+                                                     {"round": partials})
+                    # buffered inter tier: staleness anchored to the last
+                    # pulled root global, exactly like a site client.
+                    # inter="uniform" combines active pods at weight 1
+                    # instead of their folded member weight.
+                    upload_round = base_round + 1 if buffered else r + 1
+                    pw = (1.0 if self.topology.inter == "uniform"
+                          else float(pmeta["weight"]))
+                    peer.upload(self.root.addr, partial, upload_round,
+                                active_sites=self._active_pods(r),
+                                meta_extra={"weight": pw})
+                want = 0 if buffered else r + 1
+                g, dmeta = peer.download(self.root.addr, want, with_meta=True)
+                if g is not None:
+                    base_round = int(dmeta["round"])
+                elif partial is not None:
+                    # buffered root with nothing finalized yet: the pod
+                    # continues from its OWN partial (FedBuff semantics —
+                    # proceed with what you have) rather than leaving its
+                    # sync-barrier sites blocked on an install that will
+                    # never come this round
+                    g = partial
+                if g is not None:
+                    chan.request("install_global", {"round": r + 1}, g)
+        except Exception as e:  # noqa: BLE001 — surface to the driver
+            self.leader_errors[pod_id] = f"{type(e).__name__}: {e}"
+        finally:
+            chan.close()
+            peer.close()
+
+    # -- byte accounting ----------------------------------------------------
+
+    def comm(self, compression: str = "none") -> Dict[str, Any]:
+        """Per-tier wire-byte split: intra = site↔pod-server traffic
+        summed over pods, cross = leader↔root traffic (the WAN link)."""
+        intra_up = intra_down = intra_count = 0
+        for s in self.pod_servers:
+            snap = s.stats.snapshot()
+            intra_up += snap.get("upload", {}).get("in_bytes", 0)
+            intra_down += snap.get("download", {}).get("out_bytes", 0)
+            intra_count += snap.get("upload", {}).get("count", 0)
+        rsnap = self.root.stats.snapshot() if self.root else {}
+        cross_up = rsnap.get("upload", {}).get("in_bytes", 0)
+        cross_down = rsnap.get("download", {}).get("out_bytes", 0)
+        return {"upload_bytes": intra_up + cross_up,
+                "download_bytes": intra_down + cross_down,
+                "intra_pod_upload_bytes": intra_up,
+                "intra_pod_download_bytes": intra_down,
+                "cross_pod_upload_bytes": cross_up,
+                "cross_pod_download_bytes": cross_down,
+                "upload_count": intra_count,
+                "pods": self.topology.num_pods,
+                "compression": compression, "simulated": False}

@@ -160,34 +160,88 @@ class AggregationEngine:
         broadcast = broadcast_to_sites(global_params, s)
         return where_site(active, broadcast, params_stacked), global_params
 
-    def aggregate_hierarchical(self, params_stacked, case_weights: jnp.ndarray,
-                               sites_per_pod: int,
-                               active: Optional[jnp.ndarray] = None):
-        """Two-level FedAvg on the same flat buffer: per-pod partial means
-        (ICI all-reduce), then cross-pod combine (DCN) through the kernel.
-        Mathematically equal to ``aggregate`` — weighted means compose."""
+    def reduce_pods_flat(self, flat: jnp.ndarray, case_weights: jnp.ndarray,
+                         active: jnp.ndarray, pod_ids, num_pods: int,
+                         intra: str = "fedavg",
+                         inter: str = "fedavg") -> jnp.ndarray:
+        """Two-tier Eq. 1 on the flat buffer: segment-reduce the [S, N]
+        rows by pod id into per-pod partial means (a dense one-hot [P, S]
+        contraction, so the padded buffer and the kernel path stay
+        shape-static for arbitrary assignments), then cross-pod combine
+        through :meth:`reduce_flat`.
+
+        ``intra``/``inter`` pick each tier's combine rule: ``fedavg`` =
+        case-weighted, ``uniform`` = unweighted mean over the tier's
+        (active) members.  With ``fedavg`` at both tiers the result
+        equals the flat reduction exactly — weighted means compose.
+        """
+        act = active.astype(jnp.float32)
+        w = case_weights.astype(jnp.float32) * act
+        if intra == "uniform":
+            w = act
+        pod_ids = jnp.asarray(pod_ids)
+        onehot = (pod_ids[None, :] == jnp.arange(num_pods)[:, None]
+                  ).astype(jnp.float32)                       # [P, S]
+        wp = onehot * w[None, :]                              # [P, S]
+        pod_tot = jnp.sum(wp, axis=1)                         # [P]
+        pod_mean = jnp.einsum("ps,sn->pn", wp / (pod_tot[:, None] + _EPS),
+                              flat.astype(jnp.float32))       # [P, N]
+        if inter == "uniform":
+            pod_w = (pod_tot > 0).astype(jnp.float32)         # active pods
+        else:
+            pod_w = pod_tot
+        return self.reduce_flat(pod_mean, pod_w / (jnp.sum(pod_w) + _EPS))
+
+    def aggregate_pods(self, params_stacked, case_weights: jnp.ndarray,
+                       pod_ids, num_pods: int,
+                       active: Optional[jnp.ndarray] = None,
+                       intra: str = "fedavg", inter: str = "fedavg"):
+        """Two-tier Eq. 1 for an arbitrary site→pod assignment: per-pod
+        partial means → cross-pod combine, all through the same padded
+        [S, N] buffer.  Returns (new stacked params, global params) with
+        the usual active-site masking (inactive sites keep their local
+        weights)."""
         s = jax.tree.leaves(params_stacked)[0].shape[0]
-        npods = s // sites_per_pod
         if active is None:
             active = jnp.ones((s,), bool)
         flat, layout = self.flatten(params_stacked)
-        w = jnp.asarray(case_weights).astype(jnp.float32) * active.astype(jnp.float32)
-        wp = w.reshape(npods, sites_per_pod)
-        pod_tot = jnp.sum(wp, axis=1)                       # [P]
-        fp = flat.reshape(npods, sites_per_pod, layout.n)
-        pod_mean = jnp.einsum("ps,psn->pn", wp / (pod_tot[:, None] + _EPS), fp)
-        gflat = self.reduce_flat(pod_mean, pod_tot / (jnp.sum(pod_tot) + _EPS))
+        gflat = self.reduce_pods_flat(flat, jnp.asarray(case_weights),
+                                      jnp.asarray(active), pod_ids, num_pods,
+                                      intra, inter)
         global_params = self.unflatten(gflat, layout)
         broadcast = broadcast_to_sites(global_params, s)
         return where_site(active, broadcast, params_stacked), global_params
 
+    def aggregate_hierarchical(self, params_stacked, case_weights: jnp.ndarray,
+                               sites_per_pod: int,
+                               active: Optional[jnp.ndarray] = None):
+        """Contiguous-block special case of :meth:`aggregate_pods` (kept
+        for the mesh-shaped callers: pod p owns sites
+        [p·sites_per_pod, (p+1)·sites_per_pod))."""
+        s = jax.tree.leaves(params_stacked)[0].shape[0]
+        if sites_per_pod <= 0 or s % sites_per_pod:
+            # a ragged tail would silently fall outside every pod's
+            # one-hot row and be dropped from the mean — fail loudly,
+            # as the old reshape-based path did
+            raise ValueError(f"sites_per_pod={sites_per_pod} does not "
+                             f"divide {s} sites; pass an explicit "
+                             "assignment via aggregate_pods instead")
+        pod_ids = jnp.arange(s) // sites_per_pod
+        return self.aggregate_pods(params_stacked, case_weights, pod_ids,
+                                   s // sites_per_pod, active)
+
     def aggregate_round(self, params_stacked, round_inputs, ctx):
-        """Strategy ``post_exchange`` entry: pick flat vs hierarchical from
-        the mesh config and return (new stacked params, global params)."""
+        """Strategy ``post_exchange`` entry: flat vs two-tier is picked by
+        the job's :class:`~repro.core.topology.Topology` (``ctx.topology``
+        — this replaced the old ``ctx.hierarchical`` bool) and returns
+        (new stacked params, global params)."""
         active = round_inputs["active"]
-        if ctx.mesh.multi_pod and ctx.hierarchical:
-            return self.aggregate_hierarchical(
-                params_stacked, ctx.case_weights, ctx.mesh.sites_per_pod, active)
+        topo = ctx.topology
+        if topo.is_pods:
+            s = jax.tree.leaves(params_stacked)[0].shape[0]
+            return self.aggregate_pods(
+                params_stacked, ctx.case_weights, topo.pod_of(s),
+                topo.num_pods, active, topo.intra, topo.inter)
         return self.aggregate(params_stacked, ctx.case_weights, active)
 
 
@@ -222,6 +276,13 @@ class StreamingAccumulator:
     def nbytes(self) -> int:
         """Resident accumulator bytes (the O(N) mid-round state)."""
         return sum(a.nbytes for a in self._acc) if self._acc else 0
+
+    @property
+    def weight_total(self) -> float:
+        """Sum of the folded weights so far — a pod server reads this
+        right before ``finalize`` so its leader can re-upload the partial
+        at the pod's true (active-member) weight."""
+        return self._weight_total
 
     @staticmethod
     def _scaled(x, w: np.float32) -> np.ndarray:

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import FederationConfig, JobConfig, MeshConfig
 from repro.core import stacking
+from repro.core.topology import FLAT, Topology
 from repro.core.strategies import base as strat_base
 # strategy modules self-register on import
 from repro.core.strategies import fedavg as _f  # noqa: F401
@@ -46,7 +47,9 @@ class FLContext:
     optimizer: Optimizer
     grad_clip: float
     dcml_lr: float
-    hierarchical: bool = True
+    # where aggregation happens (flat star vs two-tier pods) — replaces
+    # the old ``hierarchical`` bool; see repro.core.topology
+    topology: Topology = FLAT
     microbatch: Optional[int] = None   # per-site microbatch for grad accumulation
     accum_dtype: Any = jnp.float32     # grad-accumulator dtype (bf16 for ≥236B)
 

@@ -23,15 +23,18 @@ buffers) **donated**, per-round losses/metrics accumulated into a
     threaded jax PRNG (``make_round_inputs_traced`` +
     ``TokenTaskGenerator.traced_stacked_batches``) so a chunk runs with
     zero host↔device traffic beyond the loss buffer;
-  * **compressed** rounds (int8/fp8 fedavg) keep simulated compression
-    entirely on device: error-feedback residuals ride the scan as
-    ``[S, …]`` state, quantize→dequantize runs through the
-    ``kernels/quantize.py`` math (Pallas kernel on TPU/GPU — including
-    the fused dequantize+weighted-fold ``fedagg_dequant`` so dense
-    per-site models never hit HBM — pure-jnp twin on CPU, bit-identical
-    to the numpy wire codec), and the fold goes through
-    ``AggregationEngine``'s padded ``[S, N]`` buffer instead of the
-    host ``StreamingAccumulator``;
+  * **compressed** rounds (int8/fp8/topk-fixed, fedavg or fedprox) keep
+    simulated compression entirely on device: error-feedback residuals
+    ride the scan as ``[S, …]`` state, quantize→dequantize runs through
+    the ``kernels/quantize.py`` math (Pallas kernel on TPU/GPU —
+    including the fused dequantize+weighted-fold ``fedagg_dequant`` so
+    dense per-site models never hit HBM — pure-jnp twin on CPU,
+    bit-identical to the numpy wire codec) or the ``jax.lax.top_k``
+    exact-k sparsifier, FedProx's proximal anchor re-pins to each
+    broadcast global inside the scan (``fedprox-local``), and the fold
+    goes through ``AggregationEngine``'s padded ``[S, N]`` buffer — the
+    two-tier segment-reduce when the job has a pods topology — instead
+    of the host ``StreamingAccumulator``;
   * **buffered** (FedBuff) rounds trace the arrival loop itself: the
     per-round upload order is precomputed host-side (same RNG stream as
     the retired loop), and staleness discounts, K-of-S finalization,
@@ -44,10 +47,12 @@ via AOT lowering and reported as ``JobResult.compile_s``, separate from
 the per-round ``step_s``.
 
 The host path is still taken for: the ``topk-sparse`` codec (data-
-dependent index payloads), buffered runs whose ``max_staleness`` reaches
-past the ``keep_globals`` ring, and ``round_engine="loop"`` — the
-retired per-round driver kept in ``repro.api`` as the parity oracle for
-tests and benchmarks.  Socket transports are untouched.
+dependent index payloads — the fixed-k ``topk-fixed`` variant
+compiles), buffered runs whose ``max_staleness`` reaches past the
+``keep_globals`` ring (or that use a top-k codec), and
+``round_engine="loop"`` — the retired per-round driver kept in
+``repro.api`` as the parity oracle for tests and benchmarks.  Socket
+transports are untouched.
 """
 from __future__ import annotations
 
@@ -63,8 +68,7 @@ from repro.core import federation as F
 from repro.core import stacking
 from repro.core.agg_engine import (get_engine, normalized_weights,
                                    per_site_nbytes)
-from repro.core.session import (BufferedScheduler, JobResult,
-                                availability_masks)
+from repro.core.session import BufferedScheduler, JobResult
 from repro.core.strategies import base as strat_base
 
 AUTO_CHUNK_ROUNDS = 32      # scan compiles its body once, so chunks are cheap
@@ -233,19 +237,58 @@ def _qdq_tree(u, chunkw: int, align: int, codec_name: str):
     return jax.tree.unflatten(treedef, out)
 
 
+def _topk_tree(u, fraction: float):
+    """Traced exact-k magnitude sparsification of a stacked [S, …] pytree
+    — the ``topk-fixed`` codec's device twin.  ``k`` per leaf is the same
+    ``ceil(fraction · n)`` the wire codec uses, a *static* function of
+    the leaf shape, so the scan body stays fixed-shape (the reason the
+    original data-shaped ``topk-sparse`` path could not compile)."""
+    def one(x):
+        s = x.shape[0]
+        flat = x.reshape(s, -1).astype(jnp.float32)
+        n = flat.shape[1]
+        k = max(1, int(np.ceil(fraction * n)))
+        if k >= n:
+            return flat.reshape(x.shape)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)            # [S, k]
+        rows = jnp.arange(s)[:, None]
+        kept = jnp.zeros_like(flat).at[rows, idx].set(
+            jnp.take_along_axis(flat, idx, axis=1))
+        return kept.reshape(x.shape)
+    return jax.tree.map(one, u)
+
+
+def _topk_nbytes(params_stacked, fraction: float) -> int:
+    """Wire payload bytes of ONE ``topk-fixed`` upload: a uint32 index +
+    fp32 value per kept entry — matches ``tree_payload_nbytes`` over the
+    host codec's ``QuantizedTensor``s."""
+    total = 0
+    for x in jax.tree.leaves(params_stacked):
+        n = int(np.prod(x.shape[1:], dtype=np.int64))
+        total += 8 * max(1, int(np.ceil(fraction * n)))
+    return total
+
+
 def _compressed_fold(u, w, codec_name: str, chunkw: int, align: int,
-                     accel: bool, engine):
+                     accel: bool, engine, fold_tree=None, dense=None,
+                     fraction: float = 0.1):
     """One round's simulated server step, fully on device: quantize→
-    dequantize every site's upload ``u`` and fold Eq. 1 at weights ``w``.
-    Returns ``(global_delta_tree, residual_tree)`` with
-    ``residual = u − deQ(Q(u))``.
+    dequantize (or top-k sparsify) every site's upload ``u`` and fold
+    Eq. 1 at weights ``w``.  Returns ``(global_delta_tree,
+    residual_tree)`` with ``residual = u − deQ(Q(u))``.
+
+    ``fold_tree`` overrides the flat reduction (the pods topology folds
+    per-pod partials first); ``dense`` is a traced bool that bypasses the
+    codec for the round (the top-k sparsifier's dense bootstrap — it
+    must not decimate the one full-model upload of a run).
 
     On TPU/GPU the int8 path runs the Pallas quantize kernel and the
     fused ``fedagg_dequant`` dequantize+fold, so the dense fp32 per-site
-    models never materialize off-chip; on CPU (and for fp8) the jnp twin
-    folds through the ``AggregationEngine``'s padded [S, N] buffer.
+    models never materialize off-chip; on CPU (and for fp8/top-k) the
+    jnp twin folds through the ``AggregationEngine``'s padded [S, N]
+    buffer.
     """
-    if accel and codec_name == "int8":
+    if accel and codec_name == "int8" and fold_tree is None:
         from repro.kernels import ops
         leaves, treedef = jax.tree.flatten(u)
         g_leaves, r_leaves = [], []
@@ -259,9 +302,19 @@ def _compressed_fold(u, w, codec_name: str, chunkw: int, align: int,
             r_leaves.append(_from_chunks(res, x.shape[1:], n))
         return (jax.tree.unflatten(treedef, g_leaves),
                 jax.tree.unflatten(treedef, r_leaves))
-    deq = _qdq_tree(u, chunkw, align, codec_name)
-    flat, layout = engine.flatten(deq)
-    gdelta = engine.unflatten(engine.reduce_flat(flat, w), layout)
+    if codec_name == "topk-fixed":
+        deq = _topk_tree(u, fraction)
+    else:
+        deq = _qdq_tree(u, chunkw, align, codec_name)
+    if dense is not None:
+        deq = jax.tree.map(
+            lambda full, q: jnp.where(dense, full.astype(jnp.float32), q),
+            u, deq)
+    if fold_tree is not None:
+        gdelta = fold_tree(deq)
+    else:
+        flat, layout = engine.flatten(deq)
+        gdelta = engine.unflatten(engine.reduce_flat(flat, w), layout)
     return gdelta, jax.tree.map(jnp.subtract, u, deq)
 
 
@@ -292,13 +345,16 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
     strategy = strat_base.get_strategy(job.strategy)
     num_sites = ctx.fed.num_sites
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
+    # a pods topology changes nothing here beyond the strategy's
+    # post_exchange hook: aggregate_round segment-reduces the padded
+    # [S, N] buffer by pod id inside the same scanned body
     fl_round = F.build_fl_round(ctx)
     needs_val = strategy.needs_val_batch
     needs_pair = strategy.needs_pairing
     pooled = job.strategy == "pooled"
     device_data = bool(job.device_data)
 
-    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    masks = job.masks(rounds)
     if needs_pair and not device_data:
         partner, is_recv = _pairings(masks, job.seed)
     else:
@@ -325,7 +381,7 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
                                                       job.max_dropout)
                 ri = F.make_round_inputs_traced(ctx, k_pair, active)
                 b = bundle.traced_stacked(k_data, job.local_steps,
-                                          job.task.batch, job.task.seq)
+                                          job.task.batch)
                 st, metrics = fl_round(st, b, add_val_batches(ri, b))
                 ys = {"loss": metrics["loss"], "active": active,
                       "partner": ri["partner"],
@@ -387,12 +443,16 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
     all_masks = np.concatenate(masks_seen) if masks_seen else masks
     comm = None
     if job.strategy in ("fedavg", "fedprox"):
-        uploads = int(all_masks.sum())
         nbytes = per_site_nbytes(state["params"])
-        comm = {"upload_bytes": uploads * nbytes,
-                "download_bytes": uploads * nbytes,
-                "upload_count": uploads, "compression": "none",
-                "simulated": True}
+        if ctx.topology.is_pods:
+            from repro.core.topology import simulated_pods_comm
+            comm = simulated_pods_comm(ctx.topology, all_masks, nbytes)
+        else:
+            uploads = int(all_masks.sum())
+            comm = {"upload_bytes": uploads * nbytes,
+                    "download_bytes": uploads * nbytes,
+                    "upload_count": uploads, "compression": "none",
+                    "simulated": True}
     return recorder.result(F.global_model(state, ctx), transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s)
@@ -405,23 +465,37 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
 
 def _run_compressed_scan(job, bundle, scheduler, rounds: int,
                          codec) -> JobResult:
-    ctx = job.context(bundle, strategy="individual")   # local-only rounds
+    """Compressed sync rounds on device.  Local training runs under the
+    strategy's *site half* — ``individual`` for FedAvg, ``fedprox-local``
+    for FedProx (the Eq. 2 proximal pull, re-anchored to every broadcast
+    global inside the scan) — and the simulated server fold goes through
+    the codec's device twin: int8/fp8 quantize→dequantize or the
+    ``topk-fixed`` exact-k sparsifier (dense on the bootstrap round).  A
+    pods topology swaps the flat fold for the two-tier segment-reduce."""
+    local_strategy = ("fedprox-local" if job.strategy == "fedprox"
+                      else "individual")
+    prox = local_strategy == "fedprox-local"
+    ctx = job.context(bundle, strategy=local_strategy)  # local-only rounds
     num_sites = ctx.fed.num_sites
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
     fl_round = F.build_fl_round(ctx)
-    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    masks = job.masks(rounds)
     case_w = jnp.asarray(np.asarray(job.federation().case_weights()),
                          jnp.float32)
     engine = get_engine()
     accel = _accel()
     chunkw = int(getattr(codec, "chunk", 1024))
     align = 128 if (accel and codec.name == "int8") else 1
+    fraction = float(getattr(codec, "fraction", 0.1))
+    topk = codec.name == "topk-fixed"
     error_feedback = bool(job.error_feedback)
     identity = np.arange(num_sites)
     no_recv = np.zeros(num_sites, bool)
+    topo = job.topo
+    pod_ids = jnp.asarray(topo.pod_of(num_sites)) if topo.is_pods else None
 
     # the init model is "reference zero": round 0's delta against zeros IS
-    # the dense (quantized) bootstrap upload the wire codec would send
+    # the dense bootstrap upload the wire codec would send
     reference = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], jnp.float32),
                              state["params"])
     residual = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
@@ -439,8 +513,18 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
                 lambda p, g, e: p.astype(jnp.float32) - g[None] + e,
                 st["params"], ref, res)
             w = normalized_weights(case_w, active)
-            gdelta, new_res = _compressed_fold(u, w, codec.name, chunkw,
-                                               align, accel, engine)
+            fold_tree = None
+            if pod_ids is not None:
+                def fold_tree(deq, active=active):
+                    flat, layout = engine.flatten(deq)
+                    g = engine.reduce_pods_flat(flat, case_w, active, pod_ids,
+                                                topo.num_pods, topo.intra,
+                                                topo.inter)
+                    return engine.unflatten(g, layout)
+            gdelta, new_res = _compressed_fold(
+                u, w, codec.name, chunkw, align, accel, engine,
+                fold_tree=fold_tree,
+                dense=x["bootstrap"] if topk else None, fraction=fraction)
             if error_feedback:
                 res = stacking.where_site(active, new_res, res)
             ref = jax.tree.map(jnp.add, ref, gdelta)
@@ -449,12 +533,20 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
                 ref, st["params"])
             st = {**st, "params": stacking.where_site(active, bcast,
                                                       st["params"])}
+            if prox:            # next round's proximal anchor = this global
+                st = {**st, "strategy": {"global": ref}}
             return (st, ref, res), {"loss": metrics["loss"]}
         return jax.lax.scan(body, carry, xs)
 
     runner = _ChunkRunner(chunk_fn)
     recorder = job.recorder(rounds, num_sites)
-    enc_nbytes = _encoded_nbytes(state["params"], chunkw, align)
+    dense_nbytes = per_site_nbytes(state["params"])
+    enc_nbytes = (_topk_nbytes(state["params"], fraction) if topk
+                  else _encoded_nbytes(state["params"], chunkw, align))
+    # the wire codec's dense_bootstrap rule: round 0 (no reference global
+    # yet) rides dense; sparsity starts once deltas exist
+    round_enc = [dense_nbytes if (topk and r == 0) else enc_nbytes
+                 for r in range(rounds)]
     carry = (state, reference, residual)
     r0 = 0
     for kc in chunk_plan(rounds, job.chunk_rounds,
@@ -462,6 +554,9 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
         xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
                                         False),
               "active": jnp.asarray(masks[r0:r0 + kc])}
+        if topk:
+            xs["bootstrap"] = jnp.asarray(
+                [r == 0 for r in range(r0, r0 + kc)])
         carry, ys, exec_s = runner.run(kc, carry, xs)
         losses = np.asarray(ys["loss"])
         step_s = exec_s / kc
@@ -470,15 +565,23 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
                 r0 + i, losses[i], masks[r0 + i],
                 global_fn=(lambda c=carry: c[1]) if i == kc - 1 else None,
                 extra={"step_s": step_s, "wall_s": step_s,
-                       "upload_bytes": int(masks[r0 + i].sum()) * enc_nbytes})
+                       "upload_bytes":
+                           int(masks[r0 + i].sum()) * round_enc[r0 + i]})
         r0 += kc
     state, reference, _ = carry
     uploads = int(masks.sum())
-    comm = {"upload_bytes": uploads * enc_nbytes,
-            "upload_raw_bytes": uploads * per_site_nbytes(state["params"]),
-            "download_bytes": uploads * per_site_nbytes(state["params"]),
+    upload_bytes = int(sum(int(masks[r].sum()) * round_enc[r]
+                           for r in range(rounds)))
+    comm = {"upload_bytes": upload_bytes,
+            "upload_raw_bytes": uploads * dense_nbytes,
+            "download_bytes": uploads * dense_nbytes,
             "upload_count": uploads, "compression": codec.name,
             "simulated": True}
+    if topo.is_pods:
+        from repro.core.topology import simulated_pods_comm
+        comm.update(simulated_pods_comm(topo, masks, dense_nbytes,
+                                        intra_upload_bytes=upload_bytes,
+                                        compression=codec.name))
     return recorder.result(reference, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s)
@@ -496,7 +599,7 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int,
     num_sites = ctx.fed.num_sites
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
     fl_round = F.build_fl_round(ctx)
-    masks = availability_masks(num_sites, job.max_dropout, job.seed, rounds)
+    masks = job.masks(rounds)
     order, n_act = _arrival_orders(masks, job.seed)
     case_w = jnp.asarray(np.asarray(job.federation().case_weights()),
                          jnp.float32)
@@ -662,12 +765,14 @@ def execute_stacked(job, bundle, scheduler, codec,
     the engine cannot replicate the job's semantics (the caller falls
     back to the retired per-round loop):
 
-      * ``topk-sparse`` uploads (data-dependent index payloads),
+      * ``topk-sparse`` uploads (data-dependent index payloads — the
+        fixed-k ``topk-fixed`` variant compiles),
       * buffered runs whose ``max_staleness`` reaches past the
         ``keep_globals`` decode-reference ring.
 
     ``device_data=True`` is an explicit request for on-device batch
-    generation and raises when the combination doesn't support it.
+    generation (token tasks AND the jnp dose/seg generators) and raises
+    when the combination doesn't support it.
     """
     buffered = isinstance(scheduler, BufferedScheduler)
     if job.device_data:
@@ -675,14 +780,19 @@ def execute_stacked(job, bundle, scheduler, codec,
                 or getattr(bundle, "traced_stacked", None) is None):
             raise ValueError(
                 "device_data=True (on-device batch generation) currently "
-                "supports sync uncompressed token-task jobs on the scan "
-                "engine; use host batches for volume tasks, buffered "
-                "scheduling or compressed uploads")
-    if codec.name not in ("none", "int8", "fp8"):
+                "supports sync uncompressed jobs whose task has a traced "
+                "generator (tokens, and dose/seg without site_pools); use "
+                "host batches for buffered scheduling or compressed uploads")
+        if job.pod_dropout:
+            raise ValueError(
+                "device_data=True runs the Algorithm-2 chain on device, "
+                "which covers the site tier only; pod_dropout needs the "
+                "host-precomputed schedule (device_data=False)")
+    if codec.name not in ("none", "int8", "fp8", "topk-fixed"):
         return None
     if buffered:
-        if compress_past_ring(scheduler, codec):
-            return None
+        if compress_past_ring(scheduler, codec) or codec.name == "topk-fixed":
+            return None        # flat-chunk qdq only; top-k buffers host-side
         return _run_buffered_scan(job, bundle, scheduler, rounds, codec)
     if codec.name != "none":
         return _run_compressed_scan(job, bundle, scheduler, rounds, codec)

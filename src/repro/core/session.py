@@ -140,16 +140,38 @@ def resolve_scheduler(spec: Union[str, RoundScheduler, None]) -> RoundScheduler:
 
 
 def availability_masks(num_sites: int, max_dropout: int, seed: int,
-                       rounds: int) -> np.ndarray:
+                       rounds: int, topology=None,
+                       pod_dropout: int = 0) -> np.ndarray:
     """[rounds, num_sites] bool active masks from the Algorithm-2 chain.
 
     Every participant that replays this with the same arguments gets the
     same schedule — distributed site processes agree on who is active
     each round without talking to the coordinator.
+
+    With a pods :class:`~repro.core.topology.Topology` and
+    ``pod_dropout > 0``, a second Algorithm-2 chain runs at the POD tier
+    (an institution hub losing its uplink takes all member sites offline
+    that round); the two chains consume distinct streams and compose by
+    intersection.
     """
     from repro.core.dropout import SiteAvailability
     chain = SiteAvailability(num_sites, max_dropout, seed=seed)
-    return np.stack([chain.step() for _ in range(rounds)])
+    masks = np.stack([chain.step() for _ in range(rounds)])
+    if topology is not None and pod_dropout:
+        from repro.core.topology import pod_availability_masks
+        pod_masks = pod_availability_masks(topology, num_sites, pod_dropout,
+                                           seed, rounds)
+        combined = masks & pod_masks
+        # each chain on its own guarantees survivors (max_dropout < S,
+        # pod_dropout < P); their intersection does not — an all-offline
+        # round would deadlock sync barriers and zero the Eq. 1 weights.
+        # Rule: pod-tier churn takes precedence on such rounds (the
+        # active pods' sites participate).  Deterministic, so every
+        # replaying participant agrees.
+        empty = ~combined.any(axis=1)
+        combined[empty] = pod_masks[empty]
+        masks = combined
+    return masks
 
 
 # ---------------------------------------------------------------------------

@@ -38,3 +38,19 @@ class FedProx(Strategy):
             fl_state["params"], round_inputs, ctx)
         return {**fl_state, "params": params,
                 "strategy": {"global": global_params}}
+
+
+@register
+class FedProxLocal(FedProx):
+    """FedProx's *site half* only: the Eq. 2 proximal pull toward the
+    anchored global, with no in-round aggregation.  The execution paths
+    that simulate or own the server themselves (the compressed stacked
+    loop/scan, the socket site workers) run local-only rounds under this
+    strategy and re-anchor ``strategy["global"]`` whenever a broadcast
+    global arrives — exactly what a real FedProx client does between
+    exchanges."""
+
+    name = "fedprox-local"
+
+    def post_exchange(self, fl_state, round_inputs, ctx):
+        return fl_state

@@ -195,6 +195,61 @@ class DoseTaskGenerator:
             sites.append({k: np.stack([x[k] for x in ks]) for k in ks[0]})
         return {k: np.stack([s[k] for s in sites]) for k in sites[0]}
 
+    def traced_stacked_batches(self, key, local_steps: int,
+                               per_site_batch: int):
+        """Traced [S, K, B, …] dose batches from a jax PRNG key — the
+        compiled round engine's on-device path for the SA-Net dose task:
+        the same geometry family, analytic dose law and per-site
+        heterogeneity shift as :meth:`sample`, produced inside the jitted
+        scan (streams differ from the numpy generators, like the token
+        generator's traced twin; ``site_pools`` case recycling indexes by
+        host step and stays host-side)."""
+        import jax
+        import jax.numpy as jnp
+        d, h, w = self.volume
+        s_, k_, b_ = self.num_sites, local_steps, per_site_batch
+        grid = jnp.stack(jnp.meshgrid(jnp.arange(d), jnp.arange(h),
+                                      jnp.arange(w), indexing="ij")
+                         ).astype(jnp.float32)               # [3, d, h, w]
+        dims = jnp.asarray([d, h, w], jnp.float32)
+
+        def sphere(center, radius):
+            d2 = jnp.sum((grid - center[:, None, None, None]) ** 2, axis=0)
+            return (d2 <= radius * radius).astype(jnp.float32)
+
+        body = sphere(dims / 2, 0.45 * d)
+        shifts = (self.heterogeneity
+                  * (jnp.arange(s_) - s_ / 2) / s_).astype(jnp.float32)
+
+        def case(k, shift):
+            k_ct, k_c, k_r = jax.random.split(k, 3)
+            ct = 0.3 * jax.random.normal(k_ct, (d, h, w)) * body
+            center = dims * (0.5 + shift
+                             + jax.random.uniform(k_c, (3,), minval=-0.14,
+                                                  maxval=0.14))
+            r_ptv = d * jax.random.uniform(k_r, minval=0.06, maxval=0.18)
+            ptv = sphere(center, r_ptv)
+            oars = [sphere(center + jnp.asarray([0.0, (j + 1) * 2.2, 0.0])
+                           * r_ptv * (1.0 if j % 2 == 0 else -1.0),
+                           r_ptv * 0.8)
+                    for j in range(self.num_oars)]
+            dist = jnp.sqrt(jnp.sum((grid - center[:, None, None, None]) ** 2,
+                                    axis=0))
+            field = 70.0 * jnp.exp(-jnp.maximum(dist - r_ptv, 0.0)
+                                   / (0.15 * d))
+            for o in oars:
+                field = field * (1.0 - 0.35 * o)
+            field = field * body
+            return {"volume": jnp.stack([ct, ptv] + oars, axis=-1),
+                    "dose": (field / 70.0)[..., None],
+                    "mask": body[..., None]}
+
+        keys = jax.random.split(key, s_ * k_ * b_).reshape(
+            (s_, k_, b_) + jax.random.split(key, 2).shape[1:])
+        f = jax.vmap(jax.vmap(jax.vmap(case, in_axes=(0, None)),
+                              in_axes=(0, None)), in_axes=(0, 0))
+        return f(keys, shifts)
+
 
 @dataclass
 class SegTaskGenerator:
@@ -241,3 +296,45 @@ class SegTaskGenerator:
                   for k in range(local_steps)]
             sites.append({k: np.stack([x[k] for x in ks]) for k in ks[0]})
         return {k: np.stack([s[k] for s in sites]) for k in sites[0]}
+
+    def traced_stacked_batches(self, key, local_steps: int,
+                               per_site_batch: int):
+        """Traced [S, K, B, …] segmentation batches from a jax PRNG key —
+        same blob-class law and heterogeneity shift as :meth:`sample`,
+        on-device (streams differ from numpy; ``site_pools`` stays
+        host-side)."""
+        import jax
+        import jax.numpy as jnp
+        d, h, w = self.volume
+        s_, k_, b_ = self.num_sites, local_steps, per_site_batch
+        grid = jnp.stack(jnp.meshgrid(jnp.arange(d), jnp.arange(h),
+                                      jnp.arange(w), indexing="ij")
+                         ).astype(jnp.float32)               # [3, d, h, w]
+        dims = jnp.asarray([d, h, w], jnp.float32)
+        shifts = (self.heterogeneity
+                  * (jnp.arange(s_) - s_ / 2) / s_).astype(jnp.float32)
+        ch_gain = jnp.asarray([0.5 + 0.25 * c
+                               for c in range(self.in_channels)], jnp.float32)
+
+        def case(k, shift):
+            k_noise, *k_cls = jax.random.split(k, self.num_classes + 1)
+            lab = jnp.zeros((d, h, w), jnp.int32)
+            for c in range(1, self.num_classes):
+                k_c, k_r = jax.random.split(k_cls[c - 1])
+                center = dims * (0.5 + shift
+                                 + jax.random.uniform(k_c, (3,), minval=-0.15,
+                                                      maxval=0.15))
+                r = d * jax.random.uniform(k_r, minval=0.10, maxval=0.20) / c
+                d2 = jnp.sum((grid - center[:, None, None, None]) ** 2,
+                             axis=0)
+                lab = jnp.where(d2 <= r * r, c, lab)
+            base = 0.15 * jax.random.normal(k_noise,
+                                            (d, h, w, self.in_channels))
+            base = base + lab[..., None].astype(jnp.float32) * ch_gain
+            return {"volume": base.astype(jnp.float32), "labels": lab}
+
+        keys = jax.random.split(key, s_ * k_ * b_).reshape(
+            (s_, k_, b_) + jax.random.split(key, 2).shape[1:])
+        f = jax.vmap(jax.vmap(jax.vmap(case, in_axes=(0, None)),
+                              in_axes=(0, None)), in_axes=(0, 0))
+        return f(keys, shifts)

@@ -99,10 +99,16 @@ def build_train(arch_id: str, shape_name: str = "train_4k",
     def loss_fn(params, batch):
         return T.next_token_loss(params, batch, cfg, remat=True, moe_impl=moe_impl)
 
+    # on a multi-pod mesh the mesh pod IS the aggregation pod: contiguous
+    # sites_per_pod blocks, per-pod partials over ICI then cross-pod over
+    # DCN (``hierarchical=False`` forces a flat all-reduce for A/B runs)
+    from repro.core.topology import FLAT, Topology
+    topo = (Topology.pods(mesh_cfg.num_pods)
+            if (mesh_cfg.multi_pod and hierarchical) else FLAT)
     ctx = F.FLContext(
         fed=fed, mesh=mesh_cfg, case_weights=jnp.asarray(fed.case_weights()),
         loss_fn=loss_fn, logits_fn=None, optimizer=opt, grad_clip=1.0,
-        dcml_lr=1e-4, hierarchical=hierarchical, microbatch=microbatch,
+        dcml_lr=1e-4, topology=topo, microbatch=microbatch,
         accum_dtype=(jnp.bfloat16 if prec.opt_state_dtype == "bfloat16"
                      else jnp.float32))
 

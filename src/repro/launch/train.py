@@ -52,6 +52,7 @@ def run(args) -> dict:
         local_steps=args.local_steps, lr=args.lr, prox_mu=args.prox_mu,
         max_dropout=args.max_dropout, dropout_scenario=args.dropout_scenario,
         transport=args.transport, scheduler=scheduler,
+        topology=args.topology, pod_dropout=args.pod_dropout,
         compression=args.compression,
         error_feedback=not args.no_error_feedback, seed=args.seed,
         round_engine=args.round_engine, chunk_rounds=args.chunk_rounds,
@@ -64,12 +65,15 @@ def run(args) -> dict:
         from repro.api import resolve_transport
         from repro.comms.compression import resolve_codec
         from repro.core.session import resolve_scheduler
+        topo = job.topo
         resolved = {
             "dry_run": True, "strategy": job.strategy,
             "task": job.task.kind, "sites": job.task.sites,
             "rounds": job.rounds,
             "transport": resolve_transport(job.transport).name,
             "scheduler": resolve_scheduler(job.scheduler).name,
+            "topology": (f"pods:{topo.num_pods}" if topo.is_pods else "flat"),
+            "pod_dropout": job.pod_dropout,
             "compression": resolve_codec(job.compression).name,
             "error_feedback": job.error_feedback,
             "round_engine": job.round_engine,
@@ -111,9 +115,20 @@ def make_parser():
     ap.add_argument("--scheduler", default="sync", choices=["sync", "buffered"])
     ap.add_argument("--buffer-k", type=int, default=2, dest="buffer_k",
                     help="buffered scheduler: aggregate after K uploads")
+    ap.add_argument("--topology", default="flat", metavar="flat|pods:K",
+                    help="federation topology: flat star (default) or "
+                         "pods:K — two-tier aggregation through K pod "
+                         "servers and a root combiner")
+    ap.add_argument("--pod-dropout", type=int, default=0, dest="pod_dropout",
+                    metavar="N",
+                    help="Algorithm-2 churn at the pod tier: up to N whole "
+                         "pods offline at once (requires --topology pods:K)")
     ap.add_argument("--compression", default="none",
-                    choices=["none", "int8", "fp8", "topk", "topk-sparse"],
-                    help="quantize uploads (error-feedback deltas)")
+                    choices=["none", "int8", "fp8", "topk", "topk-sparse",
+                             "topk-fixed"],
+                    help="quantize uploads (error-feedback deltas); "
+                         "topk-fixed = constant-shape top-k that compiles "
+                         "under the scan engine")
     ap.add_argument("--no-error-feedback", action="store_true",
                     dest="no_error_feedback",
                     help="disable the client-side quantization residual")

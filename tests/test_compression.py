@@ -353,9 +353,11 @@ def test_buffered_compression_stacked():
     assert int8.comm["upload_raw_bytes"] >= 3 * int8.comm["upload_bytes"]
 
 
-def test_stacked_compression_requires_fedavg():
-    with pytest.raises(ValueError, match="fedavg"):
-        _token_job(strategy="fedprox", compression="int8").run()
+def test_stacked_compression_requires_central_strategy():
+    """gcml still has no compressed stacked path; fedprox gained one
+    (the prox-aware compressed loop/scan — ROADMAP gap closed)."""
+    with pytest.raises(ValueError, match="fedavg/fedprox"):
+        _token_job(strategy="gcml", compression="int8").run()
 
 
 def test_job_result_reports_comm():

@@ -1,0 +1,351 @@
+"""Two-tier pod federation (ISSUE 5 tentpole): the Topology config, the
+engine's segment-reduce by pod id, flat↔pods parity on all three
+transports and both stacked engines, pod-tier Algorithm-2 churn, the
+per-tier scheduler seam, and the intra/cross-pod byte split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FederatedJob, TaskConfig
+from repro.core.agg_engine import AggregationEngine
+from repro.core.session import BufferedScheduler, availability_masks
+from repro.core.topology import (FLAT, Topology, active_pod_counts,
+                                 pod_availability_masks, resolve_topology)
+
+
+def _token_job(**kw):
+    base = dict(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=4, batch=2,
+                        seq=16, heterogeneity=0.3, seed=0),
+        strategy="fedavg", rounds=3, lr=1e-3, seed=0)
+    base.update(kw)
+    return FederatedJob(**base)
+
+
+def _assert_trees_close(a, b, rtol=2e-3, atol=1e-4):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Topology config units
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_topology():
+    assert resolve_topology(None) is FLAT
+    assert resolve_topology("flat") is FLAT
+    t = resolve_topology("pods:3")
+    assert t.is_pods and t.num_pods == 3
+    assert resolve_topology(t) is t
+    with pytest.raises(ValueError, match="pods:<K>"):
+        resolve_topology("pods")
+    with pytest.raises(KeyError):
+        resolve_topology("ring")
+    with pytest.raises(ValueError, match="kind"):
+        Topology(kind="mesh")
+    with pytest.raises(ValueError, match="combine"):
+        Topology.pods(2, intra="median")
+
+
+def test_pod_assignment():
+    t = Topology.pods(2)
+    np.testing.assert_array_equal(t.pod_of(4), [0, 0, 1, 1])
+    np.testing.assert_array_equal(t.pod_of(5), [0, 0, 0, 1, 1])
+    np.testing.assert_array_equal(FLAT.pod_of(3), [0, 0, 0])
+    custom = Topology.pods(2, assignment=(1, 0, 1, 0))
+    np.testing.assert_array_equal(custom.pod_of(4), [1, 0, 1, 0])
+    with pytest.raises(ValueError, match="covers"):
+        custom.pod_of(5)
+    with pytest.raises(ValueError, match="pod ids"):
+        Topology.pods(2, assignment=(0, 0, 2, 1)).pod_of(4)
+    with pytest.raises(ValueError, match="empty pods"):
+        Topology.pods(5).pod_of(3)
+    with pytest.raises(ValueError, match="no sites"):
+        Topology.pods(2, assignment=(0, 0, 0)).validate(3)
+
+
+# ---------------------------------------------------------------------------
+# Engine: segment-reduce by pod id == flat Eq. 1 (weighted means compose)
+# ---------------------------------------------------------------------------
+
+
+def _random_stacked(s, key=0):
+    rng = np.random.default_rng(key)
+    return {"a": jnp.asarray(rng.normal(size=(s, 7, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(s, 11)), jnp.float32)}
+
+
+def test_engine_pods_equals_flat_arbitrary_assignment():
+    """Case-weighted per-pod means recombined at the pod weights equal
+    the flat case-weighted mean — for ANY assignment, with churn."""
+    s = 6
+    tree = _random_stacked(s)
+    cw = jnp.asarray([3.0, 1.0, 2.0, 5.0, 1.0, 4.0])
+    active = jnp.asarray([True, True, False, True, True, True])
+    eng = AggregationEngine()
+    _, flat_g = eng.aggregate(tree, cw, active)
+    for pod_ids, npods in ([[0, 0, 0, 1, 1, 1], 2], [[2, 0, 1, 0, 2, 1], 3],
+                           [[0] * 6, 1]):
+        new, g = eng.aggregate_pods(tree, cw, jnp.asarray(pod_ids), npods,
+                                    active)
+        _assert_trees_close(flat_g, g, rtol=1e-5, atol=1e-6)
+        # inactive sites keep their local weights
+        np.testing.assert_array_equal(np.asarray(new["a"][2]),
+                                      np.asarray(tree["a"][2]))
+
+
+def test_hierarchical_rejects_ragged_sites_per_pod():
+    """A non-dividing sites_per_pod must fail loudly (the tail site
+    would otherwise silently fall out of every pod's mean)."""
+    eng = AggregationEngine()
+    tree = _random_stacked(5)
+    with pytest.raises(ValueError, match="divide"):
+        eng.aggregate_hierarchical(tree, jnp.ones(5), sites_per_pod=2)
+
+
+def test_engine_pods_uniform_tiers():
+    """uniform intra/inter combines are means over members/pods — a
+    different (valid) statistic from the case-weighted flat mean."""
+    s = 4
+    tree = _random_stacked(s)
+    cw = jnp.asarray([10.0, 1.0, 1.0, 1.0])
+    eng = AggregationEngine()
+    _, g_uni = eng.aggregate_pods(tree, cw, jnp.asarray([0, 0, 1, 1]), 2,
+                                  intra="uniform", inter="uniform")
+    expect = jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+    _assert_trees_close(expect, g_uni, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pod-tier Algorithm-2 churn
+# ---------------------------------------------------------------------------
+
+
+def test_pod_availability_masks():
+    topo = Topology.pods(3)
+    m = pod_availability_masks(topo, 6, 1, seed=7, rounds=40)
+    m2 = pod_availability_masks(topo, 6, 1, seed=7, rounds=40)
+    np.testing.assert_array_equal(m, m2)            # deterministic replay
+    pod_of = topo.pod_of(6)
+    for r in range(40):
+        off = {p for p in range(3) if not m[r][pod_of == p].any()}
+        # a pod is off as a unit, and at most pod_dropout pods at once
+        for p in range(3):
+            assert m[r][pod_of == p].all() or not m[r][pod_of == p].any()
+        assert len(off) <= 1
+    assert (~m).any()                               # churn actually happens
+    with pytest.raises(ValueError, match="num_pods"):
+        pod_availability_masks(topo, 6, 3, seed=0, rounds=2)
+
+
+def test_masks_compose_site_and_pod_tiers():
+    topo = Topology.pods(2)
+    combined = availability_masks(4, 1, seed=3, rounds=30, topology=topo,
+                                  pod_dropout=1)
+    site_only = availability_masks(4, 1, seed=3, rounds=30)
+    pod_only = pod_availability_masks(topo, 4, 1, seed=3, rounds=30)
+    raw = site_only & pod_only
+    nonempty = raw.any(axis=1)
+    np.testing.assert_array_equal(combined[nonempty], raw[nonempty])
+    counts = active_pod_counts(topo, combined)
+    assert counts.min() >= 1                        # never a dead federation
+
+
+def test_empty_intersection_falls_back_to_pod_tier():
+    """Each Algorithm-2 chain guarantees survivors; their intersection
+    does not (all surviving sites can sit in dropped pods).  Such rounds
+    would deadlock the sync barriers and zero the Eq. 1 weights, so the
+    pod-tier mask takes precedence there — deterministically."""
+    topo = Topology.pods(2)
+    for seed in range(100):
+        site = availability_masks(2, 1, seed=seed, rounds=40)
+        pod = pod_availability_masks(topo, 2, 1, seed=seed, rounds=40)
+        raw = site & pod
+        empty = ~raw.any(axis=1)
+        if empty.any():
+            combined = availability_masks(2, 1, seed=seed, rounds=40,
+                                          topology=topo, pod_dropout=1)
+            assert combined.any(axis=1).all()       # no dead rounds
+            np.testing.assert_array_equal(combined[empty], pod[empty])
+            np.testing.assert_array_equal(combined[~empty], raw[~empty])
+            return
+    pytest.fail("no seed produced an empty intersection to exercise")
+
+
+def test_pod_dropout_requires_pods():
+    with pytest.raises(ValueError, match="pods"):
+        _token_job(pod_dropout=1).masks(3)
+
+
+# ---------------------------------------------------------------------------
+# Flat ↔ pods parity, all transports (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_pods_equals_flat_uniform_weights():
+    """With uniform weights and fedavg at both tiers, the 2-tier global
+    is the flat global — on the scan engine and the loop oracle."""
+    flat = _token_job().run()
+    pods = _token_job(topology="pods:2").run()
+    _assert_trees_close(flat.global_params, pods.global_params,
+                        rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(flat.losses, pods.losses, rtol=1e-4)
+    one = _token_job(topology="pods:1").run()
+    _assert_trees_close(flat.global_params, one.global_params,
+                        rtol=1e-4, atol=1e-6)
+
+
+def test_stacked_pods_equals_flat_case_weighted():
+    """Nonuniform m_i: per-pod partials at case weights recombined at the
+    pod totals still equal flat Eq. 1 (the composition law, end to end)."""
+    flat = _token_job(case_counts=(5, 1, 2, 8)).run()
+    pods = _token_job(case_counts=(5, 1, 2, 8), topology="pods:2").run()
+    _assert_trees_close(flat.global_params, pods.global_params,
+                        rtol=1e-4, atol=1e-6)
+
+
+def test_scan_matches_loop_pods_with_churn():
+    job = _token_job(topology="pods:2", max_dropout=1, pod_dropout=1,
+                     rounds=4, seed=3)
+    loop = job.replace(round_engine="loop").run()
+    scan = job.replace(round_engine="scan").run()
+    _assert_trees_close(loop.global_params, scan.global_params,
+                        rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(loop.losses, scan.losses, rtol=1e-4)
+    assert loop.comm["cross_pod_upload_bytes"] == \
+        scan.comm["cross_pod_upload_bytes"]
+
+
+def test_thread_pods_matches_stacked_and_splits_bytes():
+    """The two-tier server stack (pod servers + leader relays + root)
+    reproduces the stacked pods global, and JobResult.comm reports
+    intra-pod vs cross-pod wire bytes separately."""
+    job = _token_job(topology="pods:2")
+    stacked = job.run()
+    threaded = job.replace(transport="thread").run()
+    _assert_trees_close(stacked.global_params, threaded.global_params)
+    comm = threaded.comm
+    assert not comm["simulated"] and comm["pods"] == 2
+    assert comm["intra_pod_upload_bytes"] > 0
+    assert comm["cross_pod_upload_bytes"] > 0
+    # 4 sites upload per round intra; only 2 pod partials cross — the
+    # cross-pod (WAN) link carries about half the intra volume here
+    assert comm["cross_pod_upload_bytes"] < comm["intra_pod_upload_bytes"]
+    assert comm["upload_bytes"] == (comm["intra_pod_upload_bytes"]
+                                    + comm["cross_pod_upload_bytes"])
+    # the stacked simulator predicts the same split shape
+    assert stacked.comm["pods"] == 2
+    assert stacked.comm["cross_pod_upload_bytes"] < \
+        stacked.comm["intra_pod_upload_bytes"]
+
+
+def test_tcp_pods_end_to_end():
+    """One OS process per site, two pod servers, root combiner — the
+    full 2-tier deployment shape matches the flat stacked run under
+    identity settings."""
+    job = _token_job(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=2, batch=2,
+                        seq=16, seed=0),
+        rounds=2, topology="pods:2")
+    flat = job.replace(topology="flat").run()
+    tcp = job.replace(transport="tcp").run()
+    _assert_trees_close(flat.global_params, tcp.global_params)
+    assert tcp.comm["pods"] == 2
+    assert tcp.comm["cross_pod_upload_bytes"] > 0
+
+
+def test_thread_pods_survives_whole_pod_dropout():
+    """A fully-offline pod (Algorithm-2 churn at the pod tier) skips its
+    partial and root upload for the round; the surviving pods' barrier
+    uses the active-pod count, so nothing deadlocks."""
+    job = _token_job(rounds=4, seed=3, topology="pods:2", pod_dropout=1,
+                     transport="thread")
+    masks = job.masks(4)
+    pod_of = job.topo.pod_of(4)
+    assert any(not masks[r][pod_of == p].any()
+               for r in range(4) for p in range(2))   # seed picked to churn
+    res = job.run()
+    assert np.isfinite(np.asarray(res.losses)).all()
+    assert res.comm["upload_count"] == int(masks.sum())
+
+
+# ---------------------------------------------------------------------------
+# Per-tier scheduler seam
+# ---------------------------------------------------------------------------
+
+
+def test_per_tier_scheduler_compositions_thread():
+    """sync-within-pod + buffered-across-pods, and the reverse, both run
+    over the socket stack.  buffer_k=2 covers the root-buffer-not-ready
+    window: a leader whose want=0 download returns nothing installs its
+    own pod partial instead of leaving its barrier sites blocked
+    (regression — this used to deadlock round 1)."""
+    for topo in (Topology.pods(2, inter_scheduler=BufferedScheduler(buffer_k=2)),
+                 Topology.pods(2, inter_scheduler=BufferedScheduler(buffer_k=1)),
+                 Topology.pods(2, intra_scheduler=BufferedScheduler(buffer_k=1))):
+        res = _token_job(rounds=3, topology=topo, transport="thread").run()
+        assert np.isfinite(res.losses).all()
+        assert res.comm["cross_pod_upload_bytes"] > 0
+
+
+def test_stacked_rejects_buffered_pods():
+    with pytest.raises(ValueError, match="synchronously"):
+        _token_job(topology="pods:2", scheduler="buffered").run()
+    with pytest.raises(ValueError, match="synchronously"):
+        _token_job(topology=Topology.pods(
+            2, inter_scheduler=BufferedScheduler(buffer_k=1))).run()
+
+
+def test_pods_require_central_strategy():
+    with pytest.raises(ValueError, match="fedavg/fedprox"):
+        _token_job(strategy="gcml", topology="pods:2").run()
+    with pytest.raises(ValueError, match="fedavg/fedprox"):
+        _token_job(strategy="individual", topology="pods:2",
+                   transport="thread").run()
+
+
+# ---------------------------------------------------------------------------
+# The job surface
+# ---------------------------------------------------------------------------
+
+
+def test_train_cli_topology_flags():
+    from repro.launch.train import make_parser
+    args = make_parser().parse_args(["--topology", "pods:2",
+                                     "--pod-dropout", "1"])
+    assert args.topology == "pods:2" and args.pod_dropout == 1
+    assert make_parser().parse_args([]).topology == "flat"
+
+
+def test_uniform_tiers_match_across_transports():
+    """intra/inter="uniform" must mean the same statistic on the socket
+    stack as on the engine: pod servers fold members at weight 1 and
+    leaders re-upload at weight 1 (regression — sockets used to run
+    every combine as fedavg silently)."""
+    topo = Topology.pods(2, intra="uniform", inter="uniform")
+    job = _token_job(case_counts=(5, 1, 2, 8), topology=topo)
+    stacked = job.run()
+    threaded = job.replace(transport="thread").run()
+    _assert_trees_close(stacked.global_params, threaded.global_params)
+    # and the knob is not a no-op: it differs from the fedavg combine
+    fedavg = _token_job(case_counts=(5, 1, 2, 8),
+                        topology=Topology.pods(2)).run()
+    delta = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                for a, b in zip(jax.tree.leaves(stacked.global_params),
+                                jax.tree.leaves(fedavg.global_params)))
+    assert delta > 1e-5
+
+
+def test_fedprox_pods_thread_matches_stacked():
+    """FedProx's proximal anchor follows the pod-installed global on the
+    socket path and the aggregate_round global on the stacked path —
+    same math, two implementations."""
+    job = _token_job(strategy="fedprox", topology="pods:2")
+    stacked = job.run()
+    threaded = job.replace(transport="thread").run()
+    _assert_trees_close(stacked.global_params, threaded.global_params)
