@@ -64,6 +64,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -73,13 +74,14 @@ import numpy as np
 from repro.comms.compression import (KEEP_GLOBALS_DEFAULT, Codec,
                                      UploadCompressor, decode_upload,
                                      resolve_codec, tree_payload_nbytes)
+from repro.comms.transport import WireConfig
 from repro.configs.base import FederationConfig, MeshConfig
 from repro.core import federation as F
 from repro.core import stacking
 from repro.core.agg_engine import StreamingAccumulator, per_site_nbytes
 from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
                                 RoundScheduler, availability_masks,
-                                resolve_scheduler)
+                                check_engine_tag, resolve_scheduler)
 from repro.core.strategies import base as strat_base
 from repro.core.topology import FLAT, Topology, resolve_topology
 from repro.optim import adamw
@@ -292,6 +294,15 @@ class FederatedJob:
     error_feedback: bool = True         # carry quantization residual
     seed: int = 0                       # init + dropout + pairing seed
     io_timeout: float = 120.0           # socket-transport exchange bound
+    # deployable wire (socket transports): hello auth secret, optional
+    # TLS, chunked streaming threshold, retry/backoff, fault injection —
+    # see repro.comms.transport.WireConfig
+    wire: WireConfig = field(default_factory=WireConfig)
+    # elastic membership (socket transports): sites lease their seat and
+    # renew by heartbeat; a site silent for lease_ttl seconds is expired
+    # into the round's Algorithm-2 dropout accounting instead of
+    # deadlocking the barrier.  None = fixed roster (the paper's setup).
+    lease_ttl: Optional[float] = None
     # stacked-transport round engine (repro.core.round_engine): "auto"
     # compiles chunks of rounds into one donated lax.scan and falls back
     # to the per-round loop where the scan can't replicate semantics;
@@ -384,10 +395,21 @@ class FederatedJob:
                              checkpoint_dir=self.checkpoint_dir,
                              ckpt_every=self.ckpt_every, num_sites=num_sites)
 
-    def run(self, rounds: Optional[int] = None) -> JobResult:
-        """Execute the federation — the one round loop."""
+    def run(self, rounds: Optional[int] = None,
+            resume: bool = False) -> JobResult:
+        """Execute the federation — the one round loop.
+
+        ``resume=True`` re-enters a killed/crashed job from the newest
+        usable checkpoint under ``checkpoint_dir`` instead of round 0:
+        the stacked engines reload their full carry (fl_state + engine
+        buffers + EF residuals), the socket transports reload the driver
+        global and every site's own state at the newest round all of
+        them share.  With nothing on disk the run starts fresh
+        (``result.resumed_from`` is None).  At checkpoint-aligned
+        boundaries the resumed loss trajectory is identical to an
+        uninterrupted run."""
         return resolve_transport(self.transport).execute(
-            self, self.rounds if rounds is None else rounds)
+            self, self.rounds if rounds is None else rounds, resume=resume)
 
 
 # ---------------------------------------------------------------------------
@@ -396,12 +418,47 @@ class FederatedJob:
 
 
 class Transport:
-    """Execution backend protocol: run ``rounds`` FL rounds of ``job``."""
+    """Execution backend protocol: run ``rounds`` FL rounds of ``job``
+    (optionally re-entering from the job's checkpoints)."""
 
     name = "base"
 
-    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+    def execute(self, job: FederatedJob, rounds: int,
+                resume: bool = False) -> JobResult:
         raise NotImplementedError
+
+
+def _driver_resume_round(job: FederatedJob, resume: bool) -> Optional[int]:
+    """Stacked transport: the newest ``driver_state`` checkpoint round,
+    or None for a fresh start.  ``resume=True`` without a
+    ``checkpoint_dir`` has nothing to resume from and raises."""
+    if not resume:
+        return None
+    if not job.checkpoint_dir:
+        raise ValueError("run(resume=True) needs checkpoint_dir set")
+    from repro.checkpoint import CheckpointStore
+    saved = CheckpointStore(Path(job.checkpoint_dir)).saved_rounds(
+        "driver_state")
+    return saved[-1] if saved else None
+
+
+def _socket_resume_point(job: FederatedJob, num_sites: int):
+    """Socket transports: ``(resume_round, global)`` — the newest round
+    present in the driver's "global" store AND every site's own
+    sub-store, i.e. the round every participant can re-enter from.
+    ``(None, None)`` when no common round survived (fresh start)."""
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(Path(job.checkpoint_dir))
+    common = set(store.saved_rounds("global"))
+    for i in range(num_sites):
+        sub = CheckpointStore(Path(job.checkpoint_dir) / f"site{i}")
+        common &= set(sub.saved_rounds("state"))
+    if not common:
+        return None, None
+    rr = max(common)
+    like = job.task.build().init_fn(jax.random.PRNGKey(job.seed))
+    g, _ = store.load("global", rr, like)
+    return rr, g
 
 
 class StackedTransport(Transport):
@@ -417,7 +474,8 @@ class StackedTransport(Transport):
 
     name = "stacked"
 
-    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+    def execute(self, job: FederatedJob, rounds: int,
+                resume: bool = False) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
         buffered = isinstance(scheduler, BufferedScheduler)
@@ -448,10 +506,12 @@ class StackedTransport(Transport):
         if job.round_engine not in ("auto", "scan", "loop"):
             raise ValueError(f"unknown round_engine {job.round_engine!r}; "
                              "known: auto, scan, loop")
+        resume_round = _driver_resume_round(job, resume)
         if job.round_engine != "loop":
             from repro.core import round_engine
             res = round_engine.execute_stacked(job, bundle, scheduler, codec,
-                                               rounds)
+                                               rounds,
+                                               resume_round=resume_round)
             if res is not None:
                 return res
             if job.round_engine == "scan":
@@ -462,14 +522,21 @@ class StackedTransport(Transport):
         if job.device_data:
             raise ValueError("device_data=True requires the scan engine")
         if buffered:
+            if resume_round is not None:
+                raise ValueError(
+                    "the buffered host loop carries a mid-round accumulator "
+                    "that is not checkpointable; resume buffered jobs on "
+                    "the scan engine (round_engine='auto')")
             return self._execute_buffered(job, bundle, scheduler, rounds,
                                           codec)
         if codec.name != "none":
             return self._execute_compressed(job, bundle, scheduler, rounds,
-                                            codec)
-        return self._execute_sync(job, bundle, scheduler, rounds)
+                                            codec, resume_round)
+        return self._execute_sync(job, bundle, scheduler, rounds,
+                                  resume_round)
 
-    def _execute_sync(self, job, bundle, scheduler, rounds) -> JobResult:
+    def _execute_sync(self, job, bundle, scheduler, rounds,
+                      resume_round=None) -> JobResult:
         ctx = job.context(bundle)
         strategy = strat_base.get_strategy(job.strategy)
         state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
@@ -479,7 +546,20 @@ class StackedTransport(Transport):
         masks = job.masks(rounds)
         pair_rng = np.random.default_rng(job.seed)
         recorder = job.recorder(rounds, ctx.fed.num_sites)
-        for r in range(rounds):
+        start_round = 0
+        if resume_round is not None:
+            check_engine_tag(recorder.store.meta("driver_state",
+                                                 resume_round), "sync-loop")
+            loaded, _ = recorder.store.load(
+                "driver_state", resume_round, {"fl_state": state})
+            state = jax.tree.map(jnp.asarray, loaded["fl_state"])
+            start_round = resume_round + 1
+            # replay the pairing draws the completed rounds consumed, so
+            # a resumed gossip schedule continues where the dead run was
+            for rr in range(start_round):
+                F.make_round_inputs(ctx, rng=pair_rng, round_index=rr,
+                                    active=masks[rr])
+        for r in range(start_round, rounds):
             b = bundle.round_batches(r, job.local_steps,
                                      pooled=(job.strategy == "pooled"))
             ri = F.make_round_inputs(ctx, rng=pair_rng, round_index=r,
@@ -502,28 +582,34 @@ class StackedTransport(Transport):
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
                             global_fn=lambda: F.global_model(state, ctx),
                             extra=extra)
+            recorder.save_state(
+                r, lambda: {"fl_state": jax.tree.map(np.asarray, state)},
+                meta={"engine": "sync-loop"})
         comm = None
         if job.strategy in ("fedavg", "fedprox"):
             # no wire in-process: report what the equivalent socket run
             # would upload/download (one fp32 model per active site per
             # round, each direction; with pods, plus one partial/global
-            # per active pod on the cross-pod link)
+            # per active pod on the cross-pod link).  A resumed run
+            # counts only the rounds it actually executed.
             nbytes = per_site_nbytes(state["params"])
             if ctx.topology.is_pods:
                 from repro.core.topology import simulated_pods_comm
-                comm = simulated_pods_comm(ctx.topology, masks, nbytes)
+                comm = simulated_pods_comm(ctx.topology, masks[start_round:],
+                                           nbytes)
             else:
-                uploads = int(masks.sum())
+                uploads = int(masks[start_round:].sum())
                 comm = {"upload_bytes": uploads * nbytes,
                         "download_bytes": uploads * nbytes,
                         "upload_count": uploads, "compression": "none",
                         "simulated": True}
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
-                               state=state, comm=comm, compile_s=compile_s)
+                               state=state, comm=comm, compile_s=compile_s,
+                               resumed_from=resume_round)
 
     def _execute_compressed(self, job, bundle, scheduler, rounds,
-                            codec) -> JobResult:
+                            codec, resume_round=None) -> JobResult:
         """Sync rounds with the upload path routed through the codec:
         every active site's post-training weights are delta-encoded
         against the last broadcast global (error-feedback residual
@@ -556,7 +642,26 @@ class StackedTransport(Transport):
         reference = None                     # last broadcast global (fp32)
         global_params = jax.tree.map(np.asarray, F.global_model(state, ctx))
         recorder = job.recorder(rounds, num_sites)
-        for r in range(rounds):
+        # the reference/residual like: one site's (unstacked) zero tree
+        site_zero = jax.tree.map(lambda x: np.zeros(x.shape[1:], np.float32),
+                                 state["params"])
+        start_round = 0
+        if resume_round is not None:
+            lmeta = recorder.store.meta("driver_state", resume_round)
+            check_engine_tag(lmeta, "compressed-loop")
+            like = {"fl_state": state, "reference": site_zero,
+                    "residuals": [site_zero for _ in range(num_sites)]}
+            loaded, _ = recorder.store.load("driver_state", resume_round,
+                                            like)
+            state = jax.tree.map(jnp.asarray, loaded["fl_state"])
+            reference = jax.tree.map(np.asarray, loaded["reference"])
+            global_params = reference
+            for i, has in enumerate(lmeta.get("has_residual",
+                                              [False] * num_sites)):
+                if has:
+                    comps[i].residual = loaded["residuals"][i]
+            start_round = resume_round + 1
+        for r in range(start_round, rounds):
             b = bundle.round_batches(r, job.local_steps)
             ri = F.make_round_inputs(ctx, active=masks[r])
             if local_round is None:          # warm up once (compile_s)
@@ -597,17 +702,30 @@ class StackedTransport(Transport):
                             global_fn=lambda: global_params,
                             extra={"step_s": time.time() - t_step,
                                    "upload_bytes": round_bytes})
+
+            def _ckpt_tree(state=state, reference=reference):
+                return {"fl_state": jax.tree.map(np.asarray, state),
+                        "reference": (reference if reference is not None
+                                      else site_zero),
+                        "residuals": [c.residual if c.residual is not None
+                                      else site_zero for c in comps]}
+            recorder.save_state(
+                r, _ckpt_tree,
+                meta={"engine": "compressed-loop",
+                      "has_residual": [c.residual is not None
+                                       for c in comps]})
         comm = _compressor_comm(comps, codec,
                                 per_site_nbytes(state["params"]))
         if topo.is_pods:
             from repro.core.topology import simulated_pods_comm
             comm.update(simulated_pods_comm(
-                topo, masks, per_site_nbytes(state["params"]),
+                topo, masks[start_round:], per_site_nbytes(state["params"]),
                 intra_upload_bytes=comm["upload_bytes"],
                 compression=codec.name))
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
-                               comm=comm, compile_s=compile_s)
+                               comm=comm, compile_s=compile_s,
+                               resumed_from=resume_round)
 
     def _execute_buffered(self, job, bundle, scheduler, rounds,
                           codec) -> JobResult:
@@ -731,12 +849,21 @@ def _site_host_tree(params_stacked):
 
 
 def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
-              rounds: int) -> Dict[str, Any]:
+              rounds: int, start_round: int = 0) -> Dict[str, Any]:
     """One site's FL script — identical whether driven by a thread or an
     OS process (paper Algorithm 1, site side), and identical under a
     pods topology: the site just talks to its pod's aggregation server
     (``agg_addr`` arrives as a site→address map) and counts its barrier
-    against its pod's active members."""
+    against its pod's active members.
+
+    With a ``checkpoint_dir`` the site keeps its own sub-store
+    (``checkpoint_dir/site{id}``: fl_state + delta reference + EF
+    residual every ``ckpt_every`` rounds) and, when the driver resumes
+    it at ``start_round > 0``, reloads round ``start_round - 1`` and
+    re-enters mid-job.  With a ``lease_ttl`` it holds a lease at its
+    aggregation point via a heartbeat thread; if admitted after the job
+    advanced (a late joiner), it bootstraps from the join reply's dense
+    global and skips the completed rounds."""
     from repro.comms.peer import Peer
     bundle = job.task.build()
     if isinstance(agg_addr, dict):          # pods: my pod server's address
@@ -756,11 +883,11 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
         job.topo.pod_of(job.task.sites)[site_id]     # my barrier's peers
     strategy = strat_base.get_strategy(job.strategy)
     dcml_step = None
-    peer = Peer(site_id)
+    peer = Peer(site_id, wire=job.wire)
     ri1 = {"active": np.ones(1, bool), "partner": np.zeros(1, np.int64),
            "is_receiver": np.zeros(1, bool)}
     losses: List[float] = []
-    base_round = 0          # server round of the global this site trained on
+    base_round = start_round  # server round of the global this site holds
     stale_uploads = 0
     # upload compression: one compressor per outgoing stream, so the
     # error-feedback residuals compensate the right channel
@@ -770,12 +897,58 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
     peer_comp = (UploadCompressor(codec, job.error_feedback)
                  if codec.name != "none" and strategy.needs_pairing else None)
     reference = None        # last pulled global (fp32) — the delta anchor
+    site_store = None
+    if job.checkpoint_dir:
+        from repro.checkpoint import CheckpointStore
+        site_store = CheckpointStore(
+            Path(job.checkpoint_dir) / f"site{site_id}")
+    # the reference/residual checkpoint like: this site's zero model tree
+    site_zero = jax.tree.map(lambda x: np.zeros(x.shape[1:], np.float32),
+                             state["params"])
+    hb = None
     try:
+        if start_round > 0 and site_store is not None:
+            like = {"fl_state": state}
+            if comp is not None:
+                like["reference"] = site_zero
+                like["residual"] = site_zero
+            loaded, lmeta = site_store.load("state", start_round - 1, like)
+            state = jax.tree.map(jnp.asarray, loaded["fl_state"])
+            base_round = int(lmeta.get("base_round", start_round))
+            if comp is not None:
+                if lmeta.get("has_reference"):
+                    reference = jax.tree.map(np.asarray, loaded["reference"])
+                if lmeta.get("has_residual"):
+                    comp.residual = jax.tree.map(np.asarray,
+                                                 loaded["residual"])
+        if job.lease_ttl and agg_addr is not None:
+            from repro.comms.membership import HeartbeatClient
+            hb = HeartbeatClient(
+                site_id, lambda k, m: peer.request(agg_addr, k, m),
+                job.lease_ttl).start()
+            join_round = int(hb.join_meta.get("round", 0))
+            if join_round > start_round and hb.bootstrap is not None:
+                # late joiner: the job is join_round rounds in — adopt the
+                # dense bootstrap global and skip the completed rounds
+                g = hb.bootstrap
+                state = {**state, "params": jax.tree.map(
+                    lambda x, gg: jnp.broadcast_to(
+                        jnp.asarray(gg).astype(x.dtype)[None], x.shape),
+                    state["params"], g)}
+                if local_strategy == "fedprox-local":
+                    state = {**state, "strategy": {"global": jax.tree.map(
+                        lambda gg: jnp.asarray(gg, jnp.float32), g)}}
+                base_round = join_round
+                if comp is not None:
+                    reference = jax.tree.map(
+                        lambda x: np.asarray(x, np.float32), g)
+                losses.extend([float("nan")] * (join_round - start_round))
+                start_round = join_round
         if strategy.needs_pairing:
             from repro.core.strategies.gcml import make_site_dcml
             dcml_step = jax.jit(make_site_dcml(job.context(bundle)))
             peer.register(coord_addr)
-        for r in range(rounds):
+        for r in range(start_round, rounds):
             me_active = bool(masks[r, site_id])
             b = bundle.site_batches(site_id, r, job.local_steps)
             # -- decentralized pre-exchange: gossip + regional DCML ------
@@ -857,6 +1030,22 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                         state = {**state, "strategy": {
                             "global": jax.tree.map(
                                 lambda gg: jnp.asarray(gg, jnp.float32), g)}}
+            # -- crash-resume checkpoint (end-of-round state) ------------
+            if site_store is not None and r % job.ckpt_every == 0:
+                tree = {"fl_state": jax.tree.map(np.asarray, state)}
+                if comp is not None:
+                    tree["reference"] = (reference if reference is not None
+                                         else site_zero)
+                    tree["residual"] = (comp.residual
+                                        if comp.residual is not None
+                                        else site_zero)
+                site_store.save(
+                    "state", r, tree,
+                    meta={"base_round": base_round,
+                          "has_reference": comp is not None
+                          and reference is not None,
+                          "has_residual": comp is not None
+                          and comp.residual is not None})
         streams = [c for c in (comp, peer_comp) if c is not None]
         return {"losses": losses, "stale_uploads": stale_uploads,
                 "params": _site_host_tree(state["params"]),
@@ -864,14 +1053,17 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 "upload_raw_bytes": sum(c.raw_bytes for c in streams),
                 "upload_count": sum(c.encodes for c in streams)}
     finally:
+        if hb is not None:
+            hb.stop(leave=True)
         peer.close()
 
 
-def _site_worker(job, site_id, agg_addr, coord_addr, result_q, rounds):
+def _site_worker(job, site_id, agg_addr, coord_addr, result_q, rounds,
+                 start_round=0):
     """Queue-reporting wrapper around :func:`_run_site` (thread/process)."""
     try:
         result_q.put((site_id, _run_site(job, site_id, agg_addr, coord_addr,
-                                         rounds)))
+                                         rounds, start_round)))
     except Exception as e:  # noqa: BLE001 — surface worker death to the job
         result_q.put((site_id, {"error": f"{type(e).__name__}: {e}"}))
 
@@ -887,7 +1079,8 @@ class _SocketTransport(Transport):
 
     name = "socket"
 
-    def execute(self, job: FederatedJob, rounds: int) -> JobResult:
+    def execute(self, job: FederatedJob, rounds: int,
+                resume: bool = False) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
         strategy = strat_base.get_strategy(job.strategy)
         topo = job.topo
@@ -903,6 +1096,16 @@ class _SocketTransport(Transport):
                 f"(fedavg/fedprox), not {job.strategy!r}")
         fed = job.federation()
         num_sites = fed.num_sites
+        start_round = 0
+        resumed_from = None
+        initial_global = None
+        if resume:
+            if not job.checkpoint_dir:
+                raise ValueError("run(resume=True) needs checkpoint_dir set")
+            resumed_from, initial_global = _socket_resume_point(job,
+                                                                num_sites)
+            if resumed_from is not None:
+                start_round = resumed_from + 1
         # construct before the workers run so wall_s spans the actual run
         recorder = job.recorder(rounds, num_sites)
         from repro.comms.coordinator import (AggregationServer,
@@ -918,7 +1121,11 @@ class _SocketTransport(Transport):
                 pod_stack = PodTransport(
                     topo, num_sites, list(fed.case_weights()),
                     job.masks(rounds), intra_s, inter_s,
-                    io_timeout=job.io_timeout).start()
+                    io_timeout=job.io_timeout, wire=job.wire,
+                    lease_ttl=job.lease_ttl, start_round=start_round,
+                    initial_global=initial_global,
+                    ckpt_store=recorder.store,
+                    ckpt_every=job.ckpt_every).start()
                 servers.append(pod_stack)
                 agg_addr = pod_stack.site_addrs()
             elif not strategy.needs_pairing and job.strategy != "individual":
@@ -926,16 +1133,20 @@ class _SocketTransport(Transport):
                     "127.0.0.1", 0, num_sites=num_sites,
                     case_weights=list(fed.case_weights()),
                     download_timeout=job.io_timeout / 2,
-                    scheduler=scheduler)
+                    scheduler=scheduler, wire=job.wire,
+                    lease_ttl=job.lease_ttl, initial_round=start_round,
+                    initial_global=initial_global,
+                    ckpt_store=recorder.store, ckpt_every=job.ckpt_every)
                 servers.append(agg)
                 agg_addr = agg.addr
             if strategy.needs_pairing:
                 coord = CoordinationServer("127.0.0.1", 0,
-                                           num_sites=num_sites, seed=job.seed)
+                                           num_sites=num_sites, seed=job.seed,
+                                           wire=job.wire)
                 servers.append(coord)
                 coord_addr = coord.addr
             results = self._run_workers(job, num_sites, agg_addr, coord_addr,
-                                        rounds)
+                                        rounds, start_round)
         finally:
             for s in servers:
                 s.stop()
@@ -945,7 +1156,16 @@ class _SocketTransport(Transport):
             dead = {**dead, **{f"pod-leader-{p}": e
                                for p, e in pod_stack.leader_errors.items()}}
         if dead:
-            raise RuntimeError(f"site workers failed: {dead}")
+            # elastic federation (lease_ttl set): a dead SITE already fell
+            # out of the barriers via lease expiry — finish without it.
+            # Dead infrastructure (a pod-leader relay) still aborts.
+            elastic = (job.lease_ttl is not None
+                       and all(isinstance(k, int) for k in dead))
+            if not elastic:
+                raise RuntimeError(f"site workers failed: {dead}")
+            if job.verbose:
+                print(f"elastic: finishing without failed sites "
+                      f"{sorted(dead)}")
         # bytes-on-the-wire accounting: server-side counters are the real
         # framed bytes; site counters are the encoded payload (covers the
         # serverless gossip P2P pushes too)
@@ -973,28 +1193,37 @@ class _SocketTransport(Transport):
                     "upload_raw_bytes": site_raw, "download_bytes": 0,
                     "upload_count": site_count,
                     "compression": codec.name, "simulated": False}
-        losses = np.stack([per_site[i]["losses"] for i in range(num_sites)])
+        exec_rounds = rounds - start_round
+        nan_row = [float("nan")] * exec_rounds
+        losses = np.stack([per_site[i].get("losses", nan_row)
+                           for i in range(num_sites)])
         masks = job.masks(rounds)
         stale = [per_site[i].get("stale_uploads", 0) for i in range(num_sites)]
-        round_wall = recorder.elapsed / max(rounds, 1)
-        for r in range(rounds):
+        round_wall = recorder.elapsed / max(exec_rounds, 1)
+        for ri, r in enumerate(range(start_round, rounds)):
             extra = {"wall_s": round_wall}
             if r == rounds - 1:
                 extra["stale_uploads"] = stale
-            recorder.record(r, losses[:, r], masks[r], extra=extra)
+            recorder.record(r, losses[:, ri], masks[r], extra=extra)
         # the served global: case-weighted mean of the final site models
-        # (for FedAvg the sites already hold the last broadcast global)
+        # (for FedAvg the sites already hold the last broadcast global);
+        # an elastic run folds the survivors only
         acc = StreamingAccumulator()
         cw = fed.case_weights()
         for i in range(num_sites):
-            acc.fold(per_site[i]["params"], float(cw[i]))
+            if "params" in per_site[i]:
+                acc.fold(per_site[i]["params"], float(cw[i]))
+        if not acc.count:
+            raise RuntimeError(f"no site produced a final model: {dead}")
         global_params = acc.finalize()
         if recorder.store is not None:       # --checkpoint: final global
             recorder.store.save("global", rounds - 1, global_params)
         return recorder.result(global_params, transport=self.name,
-                               scheduler=scheduler.name, comm=comm)
+                               scheduler=scheduler.name, comm=comm,
+                               resumed_from=resumed_from)
 
-    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds,
+                     start_round=0):
         raise NotImplementedError
 
 
@@ -1003,11 +1232,13 @@ class ThreadTransport(_SocketTransport):
 
     name = "thread"
 
-    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds,
+                     start_round=0):
         q: "queue.Queue" = queue.Queue()
         threads = [threading.Thread(
             target=_site_worker,
-            args=(job, i, agg_addr, coord_addr, q, rounds), daemon=True)
+            args=(job, i, agg_addr, coord_addr, q, rounds, start_round),
+            daemon=True)
             for i in range(num_sites)]
         for t in threads:
             t.start()
@@ -1024,7 +1255,8 @@ class TcpTransport(_SocketTransport):
 
     name = "tcp"
 
-    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds):
+    def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds,
+                     start_round=0):
         import multiprocessing as mp
         import queue as queue_mod
         import time as time_mod
@@ -1032,7 +1264,8 @@ class TcpTransport(_SocketTransport):
         q = mpctx.Queue()
         procs = [mpctx.Process(
             target=_site_worker,
-            args=(job, i, agg_addr, coord_addr, q, rounds), daemon=True)
+            args=(job, i, agg_addr, coord_addr, q, rounds, start_round),
+            daemon=True)
             for i in range(num_sites)]
         for p in procs:
             p.start()
@@ -1045,12 +1278,26 @@ class TcpTransport(_SocketTransport):
                 except queue_mod.Empty:
                     # a worker that died before reporting would stall the
                     # collection until the deadline — fail fast instead
-                    dead = [p for p in procs if not p.is_alive()
-                            and p.exitcode not in (0, None)]
+                    reported = {i for i, _ in results}
+                    dead = [i for i, p in enumerate(procs)
+                            if not p.is_alive()
+                            and p.exitcode not in (0, None)
+                            and i not in reported]
                     if dead and q.empty():
+                        if job.lease_ttl is not None:
+                            # elastic: a killed site never reports — its
+                            # lease expiry already unblocked the
+                            # survivors, so stand in an error record and
+                            # keep collecting the rest
+                            for i in dead:
+                                results.append((i, {
+                                    "error": f"process exited "
+                                             f"{procs[i].exitcode}"}))
+                            continue
                         raise RuntimeError(
                             f"{len(dead)} site process(es) exited with "
-                            f"{[p.exitcode for p in dead]} before reporting")
+                            f"{[procs[i].exitcode for i in dead]} before "
+                            f"reporting")
                     if time_mod.time() > deadline:
                         raise TimeoutError(
                             f"collected {len(results)}/{num_sites} site "

@@ -34,6 +34,22 @@ import numpy as np
 MAGIC = b"FKBP"
 _HDR = struct.Struct("<4sI")
 
+#: Wire protocol generation.  Sent in the ``hello`` handshake by every
+#: :class:`~repro.comms.transport.Channel`; a server speaking a different
+#: generation rejects the connection with a typed
+#: :class:`~repro.comms.transport.ProtocolVersionError` instead of
+#: mis-decoding frames.  Bump on any incompatible framing/header change.
+PROTOCOL_VERSION = 1
+
+
+def chunk_spans(total: int, size: int) -> List[Tuple[int, int]]:
+    """(start, end) byte spans that cut ``total`` bytes into ``size``-byte
+    chunks — the split used by streaming uploads so an encoded message
+    larger than ``max_message_size`` never crosses the wire as one frame."""
+    if size <= 0:
+        raise ValueError(f"chunk size must be positive, got {size}")
+    return [(a, min(a + size, total)) for a in range(0, max(total, 1), size)]
+
 
 @dataclasses.dataclass
 class QuantizedTensor:

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.comms import compression
 from repro.comms.codec import encode_message
-from repro.comms.transport import Server, WireStats
+from repro.comms.membership import LeaseRegistry
+from repro.comms.transport import Server, WireConfig, WireStats
 from repro.core.agg_engine import StreamingAccumulator
 from repro.core.gossip import pair_sites
 from repro.core.session import RoundScheduler, SyncScheduler
@@ -57,7 +58,11 @@ class AggregationServer:
                  case_weights: Optional[List[float]] = None,
                  download_timeout: float = 60.0,
                  scheduler: Optional[RoundScheduler] = None,
-                 keep_globals: int = compression.KEEP_GLOBALS_DEFAULT):
+                 keep_globals: int = compression.KEEP_GLOBALS_DEFAULT,
+                 wire: Optional[WireConfig] = None,
+                 lease_ttl: Optional[float] = None,
+                 initial_round: int = 0, initial_global: Any = None,
+                 ckpt_store=None, ckpt_every: int = 10):
         self.num_sites = num_sites
         self.weights = {i: (case_weights[i] if case_weights else 1.0)
                         for i in range(num_sites)}
@@ -68,16 +73,36 @@ class AggregationServer:
         self._lock = threading.Condition()
         self._acc = StreamingAccumulator()
         self._folded: Set[int] = set()
-        self._round = 0
-        self._global: Any = None
+        # a resumed job re-enters mid-sequence: the server starts at the
+        # checkpointed round and serves the checkpointed global (also the
+        # delta decode reference sites re-anchor to after resume)
+        self._round = int(initial_round)
+        self._global: Any = initial_global
         # recent globals by round — the decode references for quantized
         # *delta* uploads (a site's delta is anchored to the global it
         # last pulled; under a buffered scheduler that can lag several
         # rounds, so a bounded history is kept, not just the latest)
         self._globals: Dict[int, Any] = {}
+        if initial_global is not None:
+            self._globals[self._round] = initial_global
+        # crash-resume hook: checkpoint the global server-side as rounds
+        # complete (the driver only sees the FINAL global on the socket
+        # transports, so mid-job persistence has to happen here)
+        self._ckpt_store = ckpt_store
+        self._ckpt_every = int(ckpt_every)
+        # elastic membership: sites hold ttl leases renewed by heartbeat;
+        # a reaper folds silent sites out of the barrier expectation
+        self.lease_ttl = lease_ttl
+        self.registry = LeaseRegistry(lease_ttl) if lease_ttl else None
+        self._last_scheduled = num_sites   # active_sites from last upload
+        self._reaper_stop = threading.Event()
+        self._reaper: Optional[threading.Thread] = None
+        if self.registry is not None:
+            self._reaper = threading.Thread(target=self._reap, daemon=True)
+            self._reaper.start()
         # writable decode lets the accumulator scale fp32 uploads in place
-        self.server = Server(host, port, self._handle,
-                             decode_writable=True, stats=self.stats).start()
+        self.server = Server(host, port, self._handle, decode_writable=True,
+                             stats=self.stats, wire=wire).start()
         self.addr = self.server.addr
 
     def _discount(self, upload_round: int) -> Optional[float]:
@@ -108,7 +133,45 @@ class AggregationServer:
         for old in [k for k in self._globals
                     if k <= self._round - self.keep_globals]:
             del self._globals[old]
+        self._checkpoint_global()
         self._lock.notify_all()
+
+    def _checkpoint_global(self):
+        """Lock held.  Server round r is the global after 0-based loop
+        round r-1 — persisted on the recorder's ``ckpt_every`` grid so a
+        killed job resumes from it."""
+        round_index = self._round - 1
+        if self._ckpt_store is not None and round_index % self._ckpt_every == 0:
+            self._ckpt_store.save("global", round_index, self._global,
+                                  meta={"server_round": self._round})
+
+    # -- elastic membership -------------------------------------------------
+
+    def _expected(self, scheduled: int) -> int:
+        """Barrier expectation: the Algorithm-2 scheduled count, shrunk
+        to the live lease count when leases are in play (a silent site
+        folds into the dropout mask instead of deadlocking the round)."""
+        if self.registry is None:
+            return int(scheduled)
+        return self.registry.expected(int(scheduled))
+
+    def _maybe_finalize(self):
+        """Lock held.  Re-check the barrier after membership shrank —
+        the uploads already folded may now be everyone we can expect."""
+        if self._folded and self.scheduler.ready(
+                len(self._folded), self._expected(self._last_scheduled)):
+            self._on_ready()
+
+    def _reap(self):
+        period = max(self.registry.ttl / 4.0, 0.01)
+        while not self._reaper_stop.wait(period):
+            with self._lock:
+                dead = self.registry.expire()
+                if dead:
+                    self.registry.expired_log.extend(
+                        (self._round + 1, s) for s in dead)
+                    self._maybe_finalize()
+                    self._lock.notify_all()
 
     def _handle(self, kind, meta, tree):
         if kind == "upload":
@@ -146,7 +209,11 @@ class AggregationServer:
                     w = float(meta.get("weight", self.weights[site]))
                     self._acc.fold(tree, w * discount)
                     self._folded.add(site)
-                expected = int(meta.get("active_sites", self.num_sites))
+                if self.registry is not None:       # an upload is a renewal
+                    self.registry.renew(site)
+                self._last_scheduled = int(meta.get("active_sites",
+                                                    self.num_sites))
+                expected = self._expected(self._last_scheduled)
                 if self.scheduler.ready(len(self._folded), expected):
                     self._on_ready()
             return encode_message("ack", {"round": self._round,
@@ -167,9 +234,38 @@ class AggregationServer:
         if kind == "status":
             return encode_message("status", {"round": self._round,
                                              "pending": len(self._folded)}, None)
+        if kind == "join":
+            # lease admission; the reply doubles as the late-joiner
+            # bootstrap — current round + a dense copy of the current
+            # global, so a site admitted mid-job starts from the live
+            # model instead of round 0
+            with self._lock:
+                if self.registry is not None:
+                    self.registry.join(int(meta["site"]))
+                return encode_message(
+                    "joined", {"round": self._round,
+                               "ttl": float(self.lease_ttl or 0.0)},
+                    self._global)
+        if kind == "heartbeat":
+            with self._lock:
+                if self.registry is not None:
+                    self.registry.renew(int(meta["site"]))
+                return encode_message("ack", {"round": self._round}, None)
+        if kind == "leave":
+            # graceful exit: drop the lease now and re-check the barrier
+            # so surviving sites do not wait out the ttl
+            with self._lock:
+                if self.registry is not None:
+                    self.registry.leave(int(meta["site"]))
+                    self._maybe_finalize()
+                    self._lock.notify_all()
+                return encode_message("ack", {"round": self._round}, None)
         raise ValueError(f"unknown rpc {kind!r}")
 
     def stop(self):
+        self._reaper_stop.set()
+        if self._reaper is not None:
+            self._reaper.join(timeout=2)
         self.server.stop()
 
 
@@ -177,7 +273,8 @@ class CoordinationServer:
     """Decentralized FL coordinator: metadata + pairing only (Fig 4)."""
 
     def __init__(self, host: str, port: int, num_sites: int, seed: int = 0,
-                 keep_assignments: int = 64):
+                 keep_assignments: int = 64,
+                 wire: Optional[WireConfig] = None):
         self.num_sites = num_sites
         self.rng = np.random.default_rng(seed)
         self.keep_assignments = keep_assignments
@@ -185,7 +282,7 @@ class CoordinationServer:
         self._sites: Dict[int, Dict[str, Any]] = {}       # site -> {addr, active}
         self._assignments: Dict[int, Dict[str, Any]] = {} # round -> assignment
         self._next_round = 1
-        self.server = Server(host, port, self._handle).start()
+        self.server = Server(host, port, self._handle, wire=wire).start()
         self.addr = self.server.addr
 
     def _handle(self, kind, meta, tree):

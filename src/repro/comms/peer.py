@@ -7,42 +7,85 @@ the paper's FL scripts use:
 
   centralized : upload(weights) / download(round)
   decentralized: get_assignment(round) → send_model(addr) or recv_model()
+
+A ``wire`` config (see :class:`~repro.comms.transport.WireConfig`)
+applies to both halves: the peer's own server enforces the handshake,
+and every outgoing channel authenticates as ``site:{id}``, streams
+oversized uploads, and retries dropped sockets.  ``close()`` drains the
+inbox with a deadline and wakes any blocked ``recv_model`` with a typed
+:class:`~repro.comms.transport.PeerClosed` so site scripts exit cleanly
+on shutdown instead of leaking ``queue.Empty``.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Dict, Optional, Set, Tuple
 
 from repro.comms.codec import encode_message
-from repro.comms.transport import Address, Channel, Server
+from repro.comms.transport import (Address, Channel, PeerClosed, Server,
+                                   WireConfig, make_channel)
+
+_CLOSED = object()   # inbox sentinel: wakes receivers blocked in close()
 
 
 class Peer:
-    def __init__(self, site_id: int, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, site_id: int, host: str = "127.0.0.1", port: int = 0,
+                 wire: Optional[WireConfig] = None):
         self.site_id = site_id
+        self.wire = wire
         self._inbox: "queue.Queue[Tuple[Dict, Any]]" = queue.Queue()
-        self.server = Server(host, port, self._handle).start()
+        self._closed = threading.Event()
+        self._seen: Set[Tuple[int, int]] = set()
+        self.server = Server(host, port, self._handle, wire=wire).start()
         self.addr: Address = self.server.addr
         self._channels: Dict[Address, Channel] = {}
 
     # -- incoming ----------------------------------------------------------
     def _handle(self, kind, meta, tree):
         if kind == "model":
-            self._inbox.put((meta, tree))
+            # a retried/duplicated send delivers the same (site, round)
+            # model twice — ack it, enqueue it once
+            key = (int(meta.get("site", -1)), int(meta.get("round", -1)))
+            if key not in self._seen:
+                self._seen.add(key)
+                self._inbox.put((meta, tree))
             return encode_message("ack", {}, None)
         raise ValueError(f"unknown rpc {kind!r}")
 
     def recv_model(self, timeout: float = 60.0) -> Tuple[Dict, Any]:
-        """Block until a peer model arrives (Receiver role)."""
-        return self._inbox.get(timeout=timeout)
+        """Block until a peer model arrives (Receiver role).  Raises
+        :class:`PeerClosed` if the peer is shut down before/while
+        waiting, ``TimeoutError`` if no model arrives in time."""
+        if self._closed.is_set():
+            raise PeerClosed(f"peer {self.site_id} is closed")
+        try:
+            item = self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            if self._closed.is_set():
+                raise PeerClosed(f"peer {self.site_id} closed while "
+                                 f"waiting for a model") from None
+            raise TimeoutError(f"peer {self.site_id}: no model within "
+                               f"{timeout}s") from None
+        if item is _CLOSED:
+            self._inbox.put(_CLOSED)   # wake any other blocked receiver
+            raise PeerClosed(f"peer {self.site_id} closed while "
+                             f"waiting for a model")
+        return item
 
     # -- outgoing ----------------------------------------------------------
     def _channel(self, addr: Address) -> Channel:
         addr = (addr[0], int(addr[1]))
         if addr not in self._channels:
-            self._channels[addr] = Channel(addr)
+            self._channels[addr] = make_channel(
+                addr, wire=self.wire, identity=f"site:{self.site_id}")
         return self._channels[addr]
+
+    def request(self, addr: Address, kind: str, meta: Dict,
+                tree: Any = None) -> Tuple[str, Dict, Any]:
+        """Raw rpc against ``addr`` (join/heartbeat/leave and friends)."""
+        return self._channel(addr).request(kind, meta, tree)
 
     def send_model(self, addr: Address, weights: Any, round_index: int,
                    meta_extra: Optional[Dict] = None):
@@ -93,7 +136,26 @@ class Peer:
         self._channel(coord_addr).request(
             "status_update", {"site": self.site_id, "active": active}, None)
 
-    def close(self):
+    def close(self, deadline: float = 1.0):
+        """Shut the peer down cleanly: mark closed (new/blocked
+        ``recv_model`` calls raise :class:`PeerClosed`), give in-flight
+        sender pushes up to ``deadline`` seconds to finish their ack
+        round-trip, then close channels and the server socket."""
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        self._inbox.put(_CLOSED)
+        # drain the receiving half: models already queued (or acked right
+        # now on a connection thread) are consumed, not stranded
+        end = time.monotonic() + deadline
+        while time.monotonic() < end:
+            try:
+                item = self._inbox.get_nowait()
+            except queue.Empty:
+                break
+            if item is _CLOSED:
+                self._inbox.put(_CLOSED)  # keep the sentinel for receivers
+                break
         for ch in self._channels.values():
             ch.close()
         self.server.stop()

@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.comms.codec import encode_message
 from repro.comms.coordinator import AggregationServer
-from repro.comms.transport import Channel
+from repro.comms.transport import WireConfig, make_channel
 from repro.core.session import BufferedScheduler, RoundScheduler
 from repro.core.topology import Topology
 
@@ -124,7 +124,11 @@ class PodTransport:
                  case_weights: List[float], masks: np.ndarray,
                  intra_scheduler: RoundScheduler,
                  inter_scheduler: RoundScheduler,
-                 io_timeout: float = 120.0):
+                 io_timeout: float = 120.0,
+                 wire: Optional[WireConfig] = None,
+                 lease_ttl: Optional[float] = None,
+                 start_round: int = 0, initial_global: Any = None,
+                 ckpt_store=None, ckpt_every: int = 10):
         topology.validate(num_sites)
         self.topology = topology
         self.num_sites = num_sites
@@ -134,6 +138,12 @@ class PodTransport:
         self.intra_scheduler = intra_scheduler
         self.inter_scheduler = inter_scheduler
         self.io_timeout = io_timeout
+        self.wire = wire
+        self.lease_ttl = lease_ttl
+        self.start_round = int(start_round)
+        self.initial_global = initial_global
+        self.ckpt_store = ckpt_store
+        self.ckpt_every = ckpt_every
         self.pod_of = topology.pod_of(num_sites)
         self.root: Optional[AggregationServer] = None
         self.pod_servers: List[PodAggregationServer] = []
@@ -150,7 +160,10 @@ class PodTransport:
         self.root = AggregationServer(
             "127.0.0.1", 0, num_sites=p,
             download_timeout=self.io_timeout / 2,
-            scheduler=self.inter_scheduler)
+            scheduler=self.inter_scheduler, wire=self.wire,
+            initial_round=self.start_round,
+            initial_global=self.initial_global,
+            ckpt_store=self.ckpt_store, ckpt_every=self.ckpt_every)
         # pod servers keep GLOBAL site ids (uploads carry them), so they
         # take the full case-weight table; `expected` comes from each
         # upload's pod-local active_sites count.  intra="uniform" folds
@@ -161,7 +174,10 @@ class PodTransport:
             PodAggregationServer("127.0.0.1", 0, num_sites=self.num_sites,
                                  case_weights=intra_w,
                                  download_timeout=self.io_timeout / 2,
-                                 scheduler=self.intra_scheduler, pod_id=i)
+                                 scheduler=self.intra_scheduler, pod_id=i,
+                                 wire=self.wire, lease_ttl=self.lease_ttl,
+                                 initial_round=self.start_round,
+                                 initial_global=self.initial_global)
             for i in range(p)]
         self._leaders = [threading.Thread(target=self._leader, args=(i,),
                                           daemon=True) for i in range(p)]
@@ -201,18 +217,20 @@ class PodTransport:
 
     def _leader(self, pod_id: int):
         from repro.comms.peer import Peer
-        peer = Peer(site_id=pod_id)
-        chan = Channel(self.pod_servers[pod_id].addr,
-                       timeout=self.io_timeout)
+        # leaders speak the same authenticated/streaming wire as sites
+        peer = Peer(site_id=pod_id, wire=self.wire)
+        chan = make_channel(self.pod_servers[pod_id].addr,
+                            timeout=self.io_timeout, wire=self.wire,
+                            identity=f"leader:{pod_id}")
         buffered = isinstance(self.inter_scheduler, BufferedScheduler)
         mine = self.pod_of == pod_id
-        base_round = 0          # root round of the last pulled global
+        base_round = self.start_round   # root round of the last pulled global
         partials = 0            # partials the pod server has produced:
         #                         one per round with ≥1 active member —
         #                         NOT the loop round (a fully-off pod
         #                         produces none that round)
         try:
-            for r in range(self.rounds):
+            for r in range(self.start_round, self.rounds):
                 partial = None
                 if bool((self.masks[r] & mine).any()):
                     partials += 1

@@ -68,7 +68,8 @@ from repro.core import federation as F
 from repro.core import stacking
 from repro.core.agg_engine import (get_engine, normalized_weights,
                                    per_site_nbytes)
-from repro.core.session import BufferedScheduler, JobResult
+from repro.core.session import (BufferedScheduler, JobResult,
+                                check_engine_tag)
 from repro.core.strategies import base as strat_base
 
 AUTO_CHUNK_ROUNDS = 32      # scan compiles its body once, so chunks are cheap
@@ -80,16 +81,20 @@ AUTO_CHUNK_ROUNDS = 32      # scan compiles its body once, so chunks are cheap
 
 
 def chunk_plan(rounds: int, chunk_rounds: Optional[int] = None,
-               ckpt_every: Optional[int] = None) -> List[int]:
-    """Split ``rounds`` into scan-chunk lengths.
+               ckpt_every: Optional[int] = None,
+               start: int = 0) -> List[int]:
+    """Split rounds ``[start, rounds)`` into scan-chunk lengths.
 
     With checkpointing, a chunk boundary lands right after every
     checkpoint round (``r % ckpt_every == 0``) so the recorder can
     materialize the global model there — mid-chunk states never exist
-    on the host.
+    on the host.  A resumed run passes ``start`` (the round after its
+    checkpoint) and the grid stays aligned because the boundary rule is
+    a function of the *absolute* round index.
     """
-    chunk = max(1, chunk_rounds or min(rounds, AUTO_CHUNK_ROUNDS))
-    plan, r = [], 0
+    chunk = max(1, chunk_rounds or min(max(rounds - start, 1),
+                                       AUTO_CHUNK_ROUNDS))
+    plan, r = [], start
     while r < rounds:
         kc = min(chunk, rounds - r)
         if ckpt_every:
@@ -340,7 +345,8 @@ def _accel() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
+def _run_sync_scan(job, bundle, scheduler, rounds: int,
+                   resume_round: Optional[int] = None) -> JobResult:
     ctx = job.context(bundle)
     strategy = strat_base.get_strategy(job.strategy)
     num_sites = ctx.fed.num_sites
@@ -404,10 +410,20 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
 
     runner = _ChunkRunner(chunk_fn)
     recorder = job.recorder(rounds, num_sites)
+    start_round = 0
+    if resume_round is not None:
+        check_engine_tag(recorder.store.meta("driver_state", resume_round),
+                         "sync-scan")
+        loaded, _ = recorder.store.load(
+            "driver_state", resume_round, jax.tree.map(np.asarray, carry))
+        carry = jax.tree.map(jnp.asarray, loaded)
+        state = carry[0] if device_data else carry
+        start_round = resume_round + 1
     masks_seen: List[np.ndarray] = []
-    r0 = 0
+    r0 = start_round
     plan = chunk_plan(rounds, job.chunk_rounds,
-                      job.ckpt_every if recorder.store else None)
+                      job.ckpt_every if recorder.store else None,
+                      start=start_round)
     for kc in plan:
         if device_data:
             xs = jnp.arange(r0, r0 + kc)
@@ -439,8 +455,12 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
                 global_fn=(lambda st=state: F.global_model(st, ctx))
                 if i == kc - 1 else None,
                 extra=extra)
+        recorder.save_state(r0 + kc - 1,
+                            lambda: jax.tree.map(np.asarray, carry),
+                            meta={"engine": "sync-scan"})
         r0 += kc
-    all_masks = np.concatenate(masks_seen) if masks_seen else masks
+    all_masks = (np.concatenate(masks_seen) if masks_seen
+                 else masks[start_round:])
     comm = None
     if job.strategy in ("fedavg", "fedprox"):
         nbytes = per_site_nbytes(state["params"])
@@ -455,7 +475,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
                     "simulated": True}
     return recorder.result(F.global_model(state, ctx), transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
-                           compile_s=runner.compile_s)
+                           compile_s=runner.compile_s,
+                           resumed_from=resume_round)
 
 
 # ---------------------------------------------------------------------------
@@ -463,8 +484,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int) -> JobResult:
 # ---------------------------------------------------------------------------
 
 
-def _run_compressed_scan(job, bundle, scheduler, rounds: int,
-                         codec) -> JobResult:
+def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
+                         resume_round: Optional[int] = None) -> JobResult:
     """Compressed sync rounds on device.  Local training runs under the
     strategy's *site half* — ``individual`` for FedAvg, ``fedprox-local``
     for FedProx (the Eq. 2 proximal pull, re-anchored to every broadcast
@@ -548,9 +569,18 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
     round_enc = [dense_nbytes if (topk and r == 0) else enc_nbytes
                  for r in range(rounds)]
     carry = (state, reference, residual)
-    r0 = 0
+    start_round = 0
+    if resume_round is not None:
+        check_engine_tag(recorder.store.meta("driver_state", resume_round),
+                         "compressed-scan")
+        loaded, _ = recorder.store.load(
+            "driver_state", resume_round, jax.tree.map(np.asarray, carry))
+        carry = jax.tree.map(jnp.asarray, loaded)
+        start_round = resume_round + 1
+    r0 = start_round
     for kc in chunk_plan(rounds, job.chunk_rounds,
-                         job.ckpt_every if recorder.store else None):
+                         job.ckpt_every if recorder.store else None,
+                         start=start_round):
         xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
                                         False),
               "active": jnp.asarray(masks[r0:r0 + kc])}
@@ -567,11 +597,14 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
                 extra={"step_s": step_s, "wall_s": step_s,
                        "upload_bytes":
                            int(masks[r0 + i].sum()) * round_enc[r0 + i]})
+        recorder.save_state(r0 + kc - 1,
+                            lambda: jax.tree.map(np.asarray, carry),
+                            meta={"engine": "compressed-scan"})
         r0 += kc
     state, reference, _ = carry
-    uploads = int(masks.sum())
+    uploads = int(masks[start_round:].sum())
     upload_bytes = int(sum(int(masks[r].sum()) * round_enc[r]
-                           for r in range(rounds)))
+                           for r in range(start_round, rounds)))
     comm = {"upload_bytes": upload_bytes,
             "upload_raw_bytes": uploads * dense_nbytes,
             "download_bytes": uploads * dense_nbytes,
@@ -579,12 +612,14 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
             "simulated": True}
     if topo.is_pods:
         from repro.core.topology import simulated_pods_comm
-        comm.update(simulated_pods_comm(topo, masks, dense_nbytes,
+        comm.update(simulated_pods_comm(topo, masks[start_round:],
+                                        dense_nbytes,
                                         intra_upload_bytes=upload_bytes,
                                         compression=codec.name))
     return recorder.result(reference, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
-                           compile_s=runner.compile_s)
+                           compile_s=runner.compile_s,
+                           resumed_from=resume_round)
 
 
 # ---------------------------------------------------------------------------
@@ -592,8 +627,8 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int,
 # ---------------------------------------------------------------------------
 
 
-def _run_buffered_scan(job, bundle, scheduler, rounds: int,
-                       codec) -> JobResult:
+def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
+                       resume_round: Optional[int] = None) -> JobResult:
     compress = codec.name != "none"
     ctx = job.context(bundle, strategy="individual")
     num_sites = ctx.fed.num_sites
@@ -715,10 +750,19 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int,
 
     runner = _ChunkRunner(chunk_fn)
     recorder = job.recorder(rounds, num_sites)
+    start_round = 0
+    if resume_round is not None:
+        check_engine_tag(recorder.store.meta("driver_state", resume_round),
+                         "buffered-scan")
+        loaded, _ = recorder.store.load(
+            "driver_state", resume_round, jax.tree.map(np.asarray, carry))
+        carry = jax.tree.map(jnp.asarray, loaded)
+        start_round = resume_round + 1
     total_folds = 0
-    r0 = 0
+    r0 = start_round
     for kc in chunk_plan(rounds, job.chunk_rounds,
-                         job.ckpt_every if recorder.store else None):
+                         job.ckpt_every if recorder.store else None,
+                         start=start_round):
         xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
                                         False),
               "active": jnp.asarray(masks[r0:r0 + kc]),
@@ -737,6 +781,9 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int,
                 if i == kc - 1 else None,
                 extra={"version": int(versions[i]), "step_s": step_s,
                        "wall_s": step_s})
+        recorder.save_state(r0 + kc - 1,
+                            lambda: jax.tree.map(np.asarray, carry),
+                            meta={"engine": "buffered-scan"})
         r0 += kc
     state = carry["state"]
     global_params = engine.unflatten(carry["gflat"], layout)
@@ -751,7 +798,8 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int,
                 "simulated": True}
     return recorder.result(global_params, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
-                           compile_s=runner.compile_s)
+                           compile_s=runner.compile_s,
+                           resumed_from=resume_round)
 
 
 # ---------------------------------------------------------------------------
@@ -759,8 +807,9 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int,
 # ---------------------------------------------------------------------------
 
 
-def execute_stacked(job, bundle, scheduler, codec,
-                    rounds: int) -> Optional[JobResult]:
+def execute_stacked(job, bundle, scheduler, codec, rounds: int,
+                    resume_round: Optional[int] = None
+                    ) -> Optional[JobResult]:
     """Run ``job`` on the compiled scan engine, or return ``None`` when
     the engine cannot replicate the job's semantics (the caller falls
     back to the retired per-round loop):
@@ -793,10 +842,12 @@ def execute_stacked(job, bundle, scheduler, codec,
     if buffered:
         if compress_past_ring(scheduler, codec) or codec.name == "topk-fixed":
             return None        # flat-chunk qdq only; top-k buffers host-side
-        return _run_buffered_scan(job, bundle, scheduler, rounds, codec)
+        return _run_buffered_scan(job, bundle, scheduler, rounds, codec,
+                                  resume_round)
     if codec.name != "none":
-        return _run_compressed_scan(job, bundle, scheduler, rounds, codec)
-    return _run_sync_scan(job, bundle, scheduler, rounds)
+        return _run_compressed_scan(job, bundle, scheduler, rounds, codec,
+                                    resume_round)
+    return _run_sync_scan(job, bundle, scheduler, rounds, resume_round)
 
 
 def compress_past_ring(scheduler: BufferedScheduler, codec) -> bool:

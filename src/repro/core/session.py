@@ -197,6 +197,10 @@ class JobResult:
     # jit compile time, measured once per program shape and kept OUT of
     # the per-round ``step_s`` history (round 0 used to absorb it)
     compile_s: float = 0.0
+    # crash resume: the checkpoint round this run re-entered from
+    # (None = started at round 0); history then covers only the rounds
+    # actually executed by this invocation
+    resumed_from: Optional[int] = None
 
     @property
     def losses(self) -> List[float]:
@@ -204,13 +208,29 @@ class JobResult:
 
     @property
     def final_loss(self) -> float:
+        # empty history is legal: a resume that re-enters at the final
+        # checkpoint has no rounds left to execute
+        if not self.history:
+            return float("nan")
         return self.history[-1]["loss"]
 
     def to_dict(self) -> Dict[str, Any]:
         return {"history": self.history, "final_loss": self.final_loss,
                 "wall_s": self.wall_s, "compile_s": self.compile_s,
                 "transport": self.transport,
-                "scheduler": self.scheduler, "comm": self.comm}
+                "scheduler": self.scheduler, "comm": self.comm,
+                "resumed_from": self.resumed_from}
+
+
+def check_engine_tag(meta: Dict[str, Any], engine: str):
+    """Guard a ``driver_state`` resume: the checkpointed carry only fits
+    the engine path that wrote it (scan carries ≠ loop state dicts)."""
+    saved = meta.get("engine")
+    if saved != engine:
+        raise ValueError(
+            f"driver_state checkpoint was written by engine {saved!r} but "
+            f"this run resolves to {engine!r}; resume with the same "
+            "round_engine / compression / scheduler settings")
 
 
 class RoundRecorder:
@@ -258,9 +278,22 @@ class RoundRecorder:
                 and round_index % self.ckpt_every == 0):
             self.store.save("global", round_index, global_fn())
 
+    def save_state(self, round_index: int, state_fn,
+                   meta: Optional[Dict[str, Any]] = None):
+        """Persist resumable engine state ("driver_state" tag) on the
+        same ``ckpt_every`` grid as the global model.  ``state_fn`` is
+        called lazily (host transfer of a scan carry is not free) and
+        must return a pytree whose structure the resuming engine can
+        rebuild as a ``like`` — the ``meta["engine"]`` tag guards
+        against resuming across engine paths with different carries."""
+        if self.store and round_index % self.ckpt_every == 0:
+            self.store.save("driver_state", round_index, state_fn(),
+                            meta=meta)
+
     def result(self, global_params, *, transport: str, scheduler: str,
-               state=None, comm=None, compile_s: float = 0.0) -> JobResult:
+               state=None, comm=None, compile_s: float = 0.0,
+               resumed_from: Optional[int] = None) -> JobResult:
         return JobResult(history=self.history, global_params=global_params,
                          wall_s=time.time() - self._t0, transport=transport,
                          scheduler=scheduler, state=state, comm=comm,
-                         compile_s=compile_s)
+                         compile_s=compile_s, resumed_from=resumed_from)

@@ -33,6 +33,7 @@ import json
 from pathlib import Path
 
 from repro.api import FederatedJob, TaskConfig
+from repro.comms.transport import WireConfig
 from repro.core.session import BufferedScheduler
 
 
@@ -47,6 +48,9 @@ def run(args) -> dict:
         verbose = not args.quiet
     scheduler = (BufferedScheduler(buffer_k=args.buffer_k)
                  if args.scheduler == "buffered" else args.scheduler)
+    wire = WireConfig(secret=args.auth_secret, tls_cert=args.tls_cert,
+                      tls_key=args.tls_key,
+                      max_message_size=args.max_message_size)
     job = FederatedJob(
         task=task, strategy=args.strategy, rounds=args.rounds,
         local_steps=args.local_steps, lr=args.lr, prox_mu=args.prox_mu,
@@ -55,6 +59,7 @@ def run(args) -> dict:
         topology=args.topology, pod_dropout=args.pod_dropout,
         compression=args.compression,
         error_feedback=not args.no_error_feedback, seed=args.seed,
+        wire=wire, lease_ttl=args.lease_ttl,
         round_engine=args.round_engine, chunk_rounds=args.chunk_rounds,
         device_data=args.device_data,
         checkpoint_dir=str(Path(args.out) / "ckpt") if args.checkpoint else None,
@@ -79,10 +84,15 @@ def run(args) -> dict:
             "round_engine": job.round_engine,
             "chunk_rounds": job.chunk_rounds,
             "device_data": job.device_data,
+            "auth": job.wire.secret is not None,
+            "tls": job.wire.tls,
+            "max_message_size": job.wire.max_message_size,
+            "lease_ttl": job.lease_ttl,
+            "resume": bool(getattr(args, "resume", False)),
         }
         print(json.dumps(resolved))
         return resolved
-    res = job.run()
+    res = job.run(resume=args.resume)
     result = {**res.to_dict(), "strategy": args.strategy}
     if args.out:
         out = Path(args.out)
@@ -145,6 +155,26 @@ def make_parser():
                          "compiled scan (token tasks)")
     ap.add_argument("--dry-run", action="store_true", dest="dry_run",
                     help="resolve and print the job, skip training")
+    ap.add_argument("--auth-secret", default=None, dest="auth_secret",
+                    metavar="SECRET",
+                    help="socket transports: require an HMAC hello token "
+                         "over this shared job secret on every connection")
+    ap.add_argument("--tls-cert", default=None, dest="tls_cert",
+                    metavar="PEM", help="serve TLS with this certificate "
+                                        "(clients pin it)")
+    ap.add_argument("--tls-key", default=None, dest="tls_key", metavar="PEM",
+                    help="private key for --tls-cert")
+    ap.add_argument("--max-message-size", type=int, default=None,
+                    dest="max_message_size", metavar="BYTES",
+                    help="stream uploads larger than this in chunks "
+                         "instead of one frame")
+    ap.add_argument("--lease-ttl", type=float, default=None, dest="lease_ttl",
+                    metavar="SECONDS",
+                    help="elastic membership: expire sites silent for this "
+                         "long into the round's dropout accounting")
+    ap.add_argument("--resume", action="store_true",
+                    help="re-enter a killed job from the newest usable "
+                         "checkpoint under --out/ckpt (needs --checkpoint)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     ap.add_argument("--checkpoint", action="store_true")

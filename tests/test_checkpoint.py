@@ -1,0 +1,97 @@
+"""Checkpoint store: atomic payload/manifest writes and crash-window
+recovery (a manifest entry whose payload never landed is skipped)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.checkpoint.store import load_pytree, save_pytree
+
+
+def _tree(scale=1.0):
+    return {"w": np.arange(6, dtype=np.float32) * scale,
+            "b": {"inner": np.ones((2, 3), np.float32) * scale}}
+
+
+def test_save_pytree_roundtrip_no_droppings(tmp_path):
+    """Atomic save leaves exactly the target file — no stray tmp files
+    (regression: np.savez given a *name* appends .npz, which forced
+    rename juggling that could strand or mispick candidates)."""
+    path = tmp_path / "model.npz"
+    save_pytree(path, _tree())
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["model.npz"]
+    loaded = load_pytree(path, _tree(0.0))
+    np.testing.assert_array_equal(loaded["w"], _tree()["w"])
+    np.testing.assert_array_equal(loaded["b"]["inner"], _tree()["b"]["inner"])
+
+
+def test_save_pytree_overwrite_is_atomic_replace(tmp_path):
+    path = tmp_path / "model.npz"
+    save_pytree(path, _tree(1.0))
+    save_pytree(path, _tree(2.0))
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["model.npz"]
+    loaded = load_pytree(path, _tree(0.0))
+    np.testing.assert_array_equal(loaded["w"], _tree(2.0)["w"])
+
+
+def test_store_save_load_and_meta(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save("global", 0, _tree(1.0), meta={"engine": "sync-loop"})
+    store.save("global", 2, _tree(3.0))
+    assert store.saved_rounds("global") == [0, 2]
+    tree, meta = store.load("global", 0, _tree(0.0))
+    np.testing.assert_array_equal(tree["w"], _tree(1.0)["w"])
+    assert meta == {"engine": "sync-loop"}
+    assert store.meta("global", 0) == {"engine": "sync-loop"}
+    with pytest.raises(KeyError):
+        store.load("global", 1, _tree(0.0))
+    with pytest.raises(KeyError):
+        store.meta("global", 1)
+
+
+def test_store_same_round_resave_replaces(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save("global", 4, _tree(1.0))
+    store.save("global", 4, _tree(9.0))
+    assert store.saved_rounds("global") == [4]
+    tree, _ = store.load("global", 4, _tree(0.0))
+    np.testing.assert_array_equal(tree["w"], _tree(9.0)["w"])
+
+
+def test_store_retention_keeps_last_k(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    for r in range(5):
+        store.save("global", r, _tree(float(r)))
+    assert store.saved_rounds("global") == [3, 4]
+    # evicted payloads actually removed from disk
+    npzs = sorted(p.name for p in tmp_path.glob("global_round*.npz"))
+    assert npzs == ["global_round000003.npz", "global_round000004.npz"]
+
+
+def test_crash_window_latest_skips_lost_payload(tmp_path):
+    """Simulated crash between manifest write and payload landing: the
+    dangling entry (and any stray *.tmp dropping) must not break
+    ``latest`` — it returns the newest entry whose payload survived."""
+    store = CheckpointStore(tmp_path)
+    store.save("global", 0, _tree(1.0))
+    store.save("global", 2, _tree(3.0))
+    # crash artifacts: a half-written tmp file + a manifest entry whose
+    # payload was lost
+    (tmp_path / "garbage.tmp").write_bytes(b"\x00\x01partial")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    manifest["rounds"]["global"].append(
+        {"round": 4, "file": "global_round000004.npz", "meta": {}})
+    (tmp_path / "manifest.json").write_text(json.dumps(manifest))
+    reopened = CheckpointStore(tmp_path)
+    assert reopened.saved_rounds("global") == [0, 2]
+    tree, rnd = reopened.latest("global", _tree(0.0))
+    assert rnd == 2
+    np.testing.assert_array_equal(tree["w"], _tree(3.0)["w"])
+
+
+def test_latest_on_empty_store(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree, rnd = store.latest("global", _tree(0.0))
+    assert tree is None and rnd == -1

@@ -118,3 +118,289 @@ def test_remote_error_propagates():
     finally:
         p.close()
         agg.stop()
+
+
+# ---------------------------------------------------------------------------
+# Sessioned wire: handshake (version + auth), TLS, streaming, retry
+# ---------------------------------------------------------------------------
+
+import shutil                                              # noqa: E402
+import subprocess                                          # noqa: E402
+
+import jax                                                 # noqa: E402
+
+from repro.api import FederatedJob, TaskConfig             # noqa: E402
+from repro.comms.codec import chunk_spans, encode_message as _enc  # noqa: E402
+from repro.comms.membership import HeartbeatClient, LeaseRegistry  # noqa: E402
+from repro.comms.transport import (AuthError, Channel, ChannelError,  # noqa: E402
+                                   FlakyChannel, PeerClosed,
+                                   ProtocolVersionError, Server, WireConfig)
+
+
+def _echo_server(wire=None):
+    def handler(kind, meta, tree):
+        return _enc("echo", meta, tree)
+    return Server("127.0.0.1", 0, handler, wire=wire).start()
+
+
+def test_hello_version_mismatch_rejected_typed():
+    """A peer speaking the wrong PROTOCOL_VERSION is refused at the
+    handshake with a typed error, not silently served garbage."""
+    srv = _echo_server(wire=WireConfig())
+    try:
+        class _OldChannel(Channel):
+            proto_version = 99
+        with pytest.raises(ProtocolVersionError, match="version"):
+            _OldChannel(srv.addr)
+    finally:
+        srv.stop()
+
+
+def test_hello_auth_token_verified():
+    """With a job secret set, a missing or wrong HMAC token is a typed
+    AuthError at connect time; the matched secret round-trips rpcs."""
+    srv = _echo_server(wire=WireConfig(secret="s3cret"))
+    try:
+        with pytest.raises(AuthError):
+            Channel(srv.addr, wire=WireConfig())            # no token
+        with pytest.raises(AuthError):
+            Channel(srv.addr, wire=WireConfig(secret="wrong"))
+        ch = Channel(srv.addr, wire=WireConfig(secret="s3cret"),
+                     identity="site:0")
+        kind, meta, _ = ch.request("ping", {"x": 42})
+        assert kind == "echo" and meta["x"] == 42
+        ch.close()
+    finally:
+        srv.stop()
+
+
+def test_tls_wire_roundtrip(tmp_path):
+    """Self-signed TLS on both ends of the socket (cert pinned by the
+    client) — gated on the openssl binary being present."""
+    openssl = shutil.which("openssl")
+    if openssl is None:
+        pytest.skip("openssl not available to mint a test cert")
+    cert, key = str(tmp_path / "c.pem"), str(tmp_path / "k.pem")
+    subprocess.run(
+        [openssl, "req", "-x509", "-newkey", "rsa:2048", "-keyout", key,
+         "-out", cert, "-days", "1", "-nodes", "-subj", "/CN=127.0.0.1"],
+        check=True, capture_output=True)
+    wire = WireConfig(tls_cert=cert, tls_key=key, secret="s")
+    srv = _echo_server(wire=wire)
+    try:
+        ch = Channel(srv.addr, wire=wire, identity="site:0")
+        kind, meta, tree = ch.request("ping", {"x": 1},
+                                      {"w": np.ones(4, np.float32)})
+        assert kind == "echo" and meta["x"] == 1
+        np.testing.assert_array_equal(tree["w"], 1.0)
+        ch.close()
+    finally:
+        srv.stop()
+
+
+def test_streamed_upload_bit_identical_and_counted_once():
+    """An upload above max_message_size crosses as begin/chunk/commit
+    frames and reassembles byte-identically: the aggregated global
+    equals the single-frame path bit for bit, and WireStats counts ONE
+    upload whose bytes include every chunk."""
+    tree = {"w": np.arange(12288, dtype=np.float32)}
+    encoded_len = len(_enc("upload", {"site": 0, "round": 1}, tree))
+    mms = 4096
+    assert len(chunk_spans(encoded_len, mms)) >= 4      # really streams
+    globals_, stats = [], []
+    for wire in (None, WireConfig(max_message_size=mms)):
+        agg = AggregationServer("127.0.0.1", 0, num_sites=1, wire=wire)
+        p = Peer(0, wire=wire)
+        try:
+            p.upload(agg.addr, tree, 1)
+            globals_.append(p.download(agg.addr, 1))
+            stats.append(agg.stats.snapshot())
+        finally:
+            p.close()
+            agg.stop()
+    np.testing.assert_array_equal(globals_[0]["w"], globals_[1]["w"])
+    assert stats[1]["upload"]["count"] == 1             # chunks ≠ uploads
+    assert stats[1]["upload"]["in_bytes"] >= encoded_len
+
+
+def test_flaky_channel_reconnects_and_replays():
+    """Dropped/duplicated frames are retried transparently: every
+    request still returns its own reply, in order."""
+    srv = _echo_server()
+    try:
+        ch = FlakyChannel(srv.addr, drop=0.25, dup=0.25, seed=0,
+                          wire=WireConfig(connect_retries=10,
+                                          backoff_base=0.005))
+        for i in range(25):
+            kind, meta, _ = ch.request("ping", {"i": i})
+            assert kind == "echo" and meta["i"] == i
+        ch.close()
+    finally:
+        srv.stop()
+
+
+def test_channel_connect_budget_exhausts_typed():
+    wire = WireConfig(connect_retries=1, backoff_base=0.001)
+    with pytest.raises(ChannelError):
+        Channel(("127.0.0.1", 1), timeout=0.3, wire=wire)   # nothing listens
+
+
+@pytest.mark.parametrize("transport", ["thread", "tcp"])
+def test_flaky_wire_job_matches_clean(transport):
+    """End to end: a job over an injected-fault wire (drops + dups on
+    every channel) converges to the SAME model as the clean wire — the
+    reconnect/replay + server dedup machinery is invisible to FL math."""
+    base = dict(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=2, batch=2,
+                        seq=16, seed=0),
+        strategy="fedavg", rounds=2, seed=0, transport=transport,
+        io_timeout=120)
+    clean = FederatedJob(**base).run()
+    flaky = FederatedJob(
+        **base, wire=WireConfig(flaky="drop=0.15,dup=0.1,seed=3",
+                                connect_retries=8, backoff_base=0.01)).run()
+    for a, b in zip(jax.tree.leaves(clean.global_params),
+                    jax.tree.leaves(flaky.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership: leases, heartbeats, late joiners
+# ---------------------------------------------------------------------------
+
+
+def test_lease_registry_expected_semantics():
+    reg = LeaseRegistry(ttl=60.0)
+    assert reg.expected(4) == 4            # leases not in use yet
+    reg.join(0)
+    reg.join(1)
+    assert reg.expected(4) == 2            # never wait for more than live
+    assert reg.expected(1) == 1
+    reg.leave(1)
+    reg.leave(0)
+    assert reg.expected(4) == 1            # never below one survivor
+
+
+def test_lease_expiry_unblocks_flat_barrier():
+    """A site that joins then goes silent expires after the ttl and the
+    round finalizes from the survivors instead of deadlocking."""
+    agg = AggregationServer("127.0.0.1", 0, num_sites=2, lease_ttl=0.4,
+                            download_timeout=10)
+    p0, p1 = Peer(0), Peer(1)
+    hb = None
+    try:
+        hb = HeartbeatClient(0, lambda k, m: p0.request(agg.addr, k, m),
+                             0.4).start()
+        p1.request(agg.addr, "join", {"site": 1})      # joins, never beats
+        p0.upload(agg.addr, {"w": np.ones(3, np.float32)}, 1, active_sites=2)
+        g = p0.download(agg.addr, 1)                   # waits out the lease
+        np.testing.assert_allclose(g["w"], 1.0)
+        assert any(s == 1 for _, s in agg.registry.expired_log)
+    finally:
+        if hb is not None:
+            hb.stop()
+        p0.close()
+        p1.close()
+        agg.stop()
+
+
+def test_graceful_leave_shrinks_barrier_immediately():
+    """An explicit leave drops the lease now — the barrier does not have
+    to wait out the ttl."""
+    agg = AggregationServer("127.0.0.1", 0, num_sites=2, lease_ttl=30.0,
+                            download_timeout=10)
+    p0, p1 = Peer(0), Peer(1)
+    try:
+        p0.request(agg.addr, "join", {"site": 0})
+        p1.request(agg.addr, "join", {"site": 1})
+        p1.request(agg.addr, "leave", {"site": 1})
+        p0.upload(agg.addr, {"w": np.full(3, 2.0, np.float32)}, 1,
+                  active_sites=2)
+        g = p0.download(agg.addr, 1)
+        np.testing.assert_allclose(g["w"], 2.0)
+    finally:
+        p0.close()
+        p1.close()
+        agg.stop()
+
+
+def test_late_joiner_bootstrap_carries_current_global():
+    """The join reply doubles as the late-joiner bootstrap: current
+    server round + a dense copy of the current global."""
+    g0 = {"w": np.full(4, 7.0, np.float32)}
+    agg = AggregationServer("127.0.0.1", 0, num_sites=2, lease_ttl=5.0,
+                            initial_round=3, initial_global=g0)
+    p = Peer(5)
+    hb = None
+    try:
+        hb = HeartbeatClient(5, lambda k, m: p.request(agg.addr, k, m),
+                             5.0).start()
+        assert hb.join_meta["round"] == 3
+        np.testing.assert_array_equal(np.asarray(hb.bootstrap["w"]), g0["w"])
+    finally:
+        if hb is not None:
+            hb.stop()
+        p.close()
+        agg.stop()
+
+
+# ---------------------------------------------------------------------------
+# Peer shutdown semantics
+# ---------------------------------------------------------------------------
+
+
+def test_peer_close_wakes_blocked_receiver_typed():
+    p = Peer(9)
+    caught = []
+
+    def recv():
+        try:
+            p.recv_model(timeout=10)
+        except Exception as e:  # noqa: BLE001
+            caught.append(e)
+
+    t = threading.Thread(target=recv)
+    t.start()
+    p.close()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert len(caught) == 1 and isinstance(caught[0], PeerClosed)
+    with pytest.raises(PeerClosed):                    # and ever after
+        p.recv_model(timeout=0.1)
+
+
+def test_recv_model_timeout_is_timeouterror():
+    p = Peer(8)
+    try:
+        with pytest.raises(TimeoutError):
+            p.recv_model(timeout=0.2)
+    finally:
+        p.close()
+
+
+def test_lease_expiry_unblocks_pod_tier_barrier():
+    """Same elastic rule one tier down: a silent pod member expires and
+    the pod partial finalizes from the survivors, so the leader's
+    pod_partial pull does not deadlock."""
+    from repro.comms.pods import PodAggregationServer
+    pod = PodAggregationServer("127.0.0.1", 0, num_sites=2, pod_id=0,
+                               lease_ttl=0.4, download_timeout=10)
+    p0, p1 = Peer(0), Peer(1)
+    hb = None
+    try:
+        hb = HeartbeatClient(0, lambda k, m: p0.request(pod.addr, k, m),
+                             0.4).start()
+        p1.request(pod.addr, "join", {"site": 1})      # joins, never beats
+        p0.upload(pod.addr, {"w": np.full(3, 5.0, np.float32)}, 1,
+                  active_sites=2)
+        kind, meta, tree = p0.request(pod.addr, "pod_partial", {"round": 1})
+        assert kind == "partial" and meta["round"] == 1
+        np.testing.assert_allclose(tree["w"], 5.0)
+        assert any(s == 1 for _, s in pod.registry.expired_log)
+    finally:
+        if hb is not None:
+            hb.stop()
+        p0.close()
+        p1.close()
+        pod.stop()

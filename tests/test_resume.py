@@ -1,0 +1,144 @@
+"""Crash-resumable jobs: ``FederatedJob.run(resume=True)`` re-enters a
+killed run from the newest usable checkpoint and continues with a
+loss trajectory identical to the uninterrupted run — on the stacked
+engines (scan and loop, with/without compression, buffered) and on the
+socket transports (driver + per-site sub-stores, common-round rule)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FederatedJob, TaskConfig
+from repro.core.session import BufferedScheduler
+
+
+def _job(**kw):
+    base = dict(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=3, batch=2,
+                        seq=16, seed=0),
+        strategy="fedavg", rounds=5, lr=1e-3, seed=0, ckpt_every=2)
+    base.update(kw)
+    return FederatedJob(**base)
+
+
+def _flat(tree):
+    return np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree.leaves(tree)])
+
+
+def _assert_resume_parity(job_kw, tmp_path, first_rounds, rounds,
+                          expect_from):
+    """Uninterrupted run vs run(first_rounds) + run(resume=True): the
+    resumed tail must reproduce the reference trajectory exactly-ish and
+    land on the same global model."""
+    ref = _job(rounds=rounds, **job_kw).run()
+    job = _job(rounds=rounds, checkpoint_dir=str(tmp_path), **job_kw)
+    job.run(rounds=first_rounds)
+    res = job.run(rounds=rounds, resume=True)
+    assert res.resumed_from == expect_from
+    assert len(res.history) == rounds - expect_from - 1
+    np.testing.assert_allclose(res.losses, ref.losses[expect_from + 1:],
+                               rtol=1e-5)
+    np.testing.assert_allclose(_flat(res.global_params),
+                               _flat(ref.global_params),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Stacked engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                            # sync scan
+    dict(round_engine="loop"),                         # retired host loop
+    dict(compression="int8"),                          # compressed scan
+    dict(compression="int8", round_engine="loop"),     # compressed loop
+    dict(scheduler=BufferedScheduler(buffer_k=2)),     # FedBuff scan
+], ids=["scan", "loop", "int8-scan", "int8-loop", "buffered-scan"])
+def test_stacked_resume_parity(kw, tmp_path):
+    # first run covers rounds 0..2, driver_state lands on the ckpt grid
+    # at rounds 0 and 2 → the resume re-enters from round 2
+    _assert_resume_parity(kw, tmp_path, first_rounds=3, rounds=5,
+                          expect_from=2)
+
+
+def test_resume_without_checkpoint_dir_raises():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        _job().run(resume=True)
+
+
+def test_resume_empty_store_is_fresh_start(tmp_path):
+    """resume=True with nothing on disk starts from round 0 (the CI
+    kill-and-resume job passes --resume unconditionally)."""
+    res = _job(checkpoint_dir=str(tmp_path)).run(resume=True)
+    assert res.resumed_from is None
+    assert len(res.history) == 5
+
+
+def test_resume_after_completion_is_a_noop_run(tmp_path):
+    """A crash-loop supervisor passes --resume unconditionally; resuming
+    a job whose final round is already checkpointed executes zero rounds
+    and must still report cleanly (final_loss = nan, empty history)."""
+    job = _job(checkpoint_dir=str(tmp_path), ckpt_every=1, rounds=3)
+    done = job.run()
+    res = job.run(resume=True)
+    assert res.resumed_from == 2
+    assert res.history == []
+    assert np.isnan(res.final_loss)
+    assert np.isnan(res.to_dict()["final_loss"])
+    np.testing.assert_allclose(_flat(res.global_params),
+                               _flat(done.global_params), rtol=1e-5)
+
+
+def test_resume_engine_mismatch_raises(tmp_path):
+    """A loop-engine checkpoint cannot seed a scan-engine resume — the
+    carries differ; the guard fires before any shaped load."""
+    job = _job(checkpoint_dir=str(tmp_path), round_engine="loop")
+    job.run(rounds=3)
+    with pytest.raises(ValueError, match="engine"):
+        _job(checkpoint_dir=str(tmp_path), round_engine="scan").run(
+            resume=True)
+
+
+def test_buffered_loop_resume_rejected(tmp_path):
+    """The buffered HOST loop carries a mid-round accumulator that is
+    not checkpointable; resuming it is a typed error pointing at the
+    scan engine (which checkpoints its full carry)."""
+    kw = dict(scheduler=BufferedScheduler(buffer_k=2), round_engine="loop")
+    job = _job(checkpoint_dir=str(tmp_path),
+               scheduler=BufferedScheduler(buffer_k=2))
+    job.run(rounds=3)                      # scan engine writes driver_state
+    with pytest.raises(ValueError):
+        _job(checkpoint_dir=str(tmp_path), **kw).run(resume=True)
+
+
+# ---------------------------------------------------------------------------
+# Socket transports (driver store + per-site sub-stores)
+# ---------------------------------------------------------------------------
+
+
+def test_thread_transport_resume_parity(tmp_path):
+    _assert_resume_parity(
+        dict(transport="thread",
+             task=TaskConfig(kind="tokens", arch="smollm-135m", sites=2,
+                             batch=2, seq=16, seed=0),
+             ckpt_every=1),
+        tmp_path, first_rounds=2, rounds=4, expect_from=1)
+
+
+def test_tcp_transport_resume_parity(tmp_path):
+    """One OS process per site, killed after 2 of 4 rounds (simulated by
+    a short first run): --resume re-enters at the newest round present
+    in the driver store AND every site sub-store."""
+    _assert_resume_parity(
+        dict(transport="tcp",
+             task=TaskConfig(kind="tokens", arch="smollm-135m", sites=2,
+                             batch=2, seq=16, seed=0),
+             ckpt_every=1, io_timeout=120),
+        tmp_path, first_rounds=2, rounds=4, expect_from=1)
+
+
+def test_socket_resume_requires_checkpoint_dir():
+    job = _job(transport="thread")
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        job.run(resume=True)
