@@ -66,6 +66,11 @@ def run(quick: bool = False):
             pods_res2 = res
     sim_rec, _ = _run(_job(rounds=rounds, topology="pods:2",
                            transport="stacked"))
+    # leaders re-upload partials through the same codec as the sites, so
+    # --compression also shrinks the WAN link (int8 deltas ≈ 4× fewer
+    # payload bytes; framing + first-round dense upload dilute that)
+    int8_rec, _ = _run(_job(rounds=rounds, topology="pods:2",
+                            compression="int8"))
 
     model_nbytes = sum(np.asarray(x).nbytes
                        for x in jax.tree.leaves(flat_res.global_params))
@@ -85,6 +90,9 @@ def run(quick: bool = False):
     # expected: pods × rounds × model bytes (leaders re-upload fp32)
     expect2 = 2 * rounds * model_nbytes
     expect_ok = abs(cross2 - expect2) / expect2 < 0.05
+    # the compressed leader path must shrink the cross-pod upload link
+    cross2_int8 = int8_rec["comm"]["cross_pod_upload_bytes"]
+    compressed_ok = cross2_int8 < 0.6 * cross2
 
     out = {
         "bench": f"pod_scaling ({rounds}-round thread fedavg, {SITES} sites;"
@@ -93,6 +101,7 @@ def run(quick: bool = False):
         "flat": flat_rec,
         "pods": {str(p): rec for p, rec in per_pods.items()},
         "stacked_pods2_simulated": sim_rec,
+        "pods2_int8": int8_rec,
         "note": "cross_pod bytes = one partial up + one global down per "
                 "active pod per round — the WAN term scales with P while "
                 "the flat star's central link scales with S; intra_pod "
@@ -101,11 +110,12 @@ def run(quick: bool = False):
             "cross_pod_scales_with_P": bool(scale_ok),
             "cross_pod_below_flat_central": bool(wan_below_flat),
             "cross_pod_matches_P_rounds_model": bool(expect_ok),
+            "cross_pod_compressed_shrinks": bool(compressed_ok),
             "pods_flat_parity": bool(parity_ok),
         },
     }
     (ARTIFACTS / "BENCH_pod_scaling.json").write_text(json.dumps(out, indent=2))
-    derived = (f"cross2={cross2}B;cross4={cross4}B;"
+    derived = (f"cross2={cross2}B;cross4={cross4}B;int8={cross2_int8}B;"
                f"flat_central={central_flat}B;parity={parity_ok}")
     return derived, out
 

@@ -105,6 +105,30 @@ def pod_scaling_table() -> str:
     return "\n".join(out)
 
 
+def privacy_table() -> str:
+    fn = ARTIFACTS / "BENCH_privacy.json"
+    if not fn.exists():
+        return "_run benchmarks.privacy_tradeoff first_"
+    rec = json.loads(fn.read_text())
+    out = [f"_{rec['rounds']}-round FedAvg, {rec['sites']} sites, "
+           f"clip C={rec['clip']}; ε is per site from the Rényi "
+           "accountant_\n",
+           "| σ (noise mult.) | ε (δ=1e-5) | final loss |",
+           "|---|---|---|"]
+    for r in rec["dp_sweep"]:
+        eps = "∞ (no DP)" if r["epsilon"] is None else f"{r['epsilon']:.2f}"
+        out.append(f"| {r['sigma']} | {eps} | {r['final_loss']:.4f} |")
+    sa = rec["secure_agg"]
+    out.append(f"\nSecure aggregation (thread transport, same job): masked "
+               f"uploads {sa['masked']['upload_bytes']} B vs plain "
+               f"{sa['plain']['upload_bytes']} B "
+               f"({sa['byte_ratio']:.2f}× — int64 fixed point vs fp32), "
+               f"final loss {sa['masked']['final_loss']:.4f} vs "
+               f"{sa['plain']['final_loss']:.4f} (identical to fixed-point "
+               "precision).")
+    return "\n".join(out)
+
+
 def checks_table() -> str:
     out = ["| benchmark | check | pass |", "|---|---|---|"]
     for fn in sorted(ARTIFACTS.glob("*.json")):
@@ -163,6 +187,8 @@ if __name__ == "__main__":
     print(round_engine_table())
     print("\n## §Pod scaling (two-tier topology)\n")
     print(pod_scaling_table())
+    print("\n## §Privacy tier (DP-SGD ε sweep + secure aggregation)\n")
+    print(privacy_table())
     print("\n## §Perf hillclimb\n")
     print(hillclimb_table())
     print("\n## Paper-claim checks\n")

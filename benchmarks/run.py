@@ -24,7 +24,8 @@ def main() -> None:
 
     from benchmarks import (agg_engine, comm_bytes, dose_prediction,
                             gossip_robustness, parallel_scaling, pod_scaling,
-                            roofline, round_engine, strategy_compare)
+                            privacy_tradeoff, roofline, round_engine,
+                            strategy_compare)
     benches = [
         ("dose_prediction_fig7_8_9", dose_prediction.run),
         ("strategy_compare_fig11_12", strategy_compare.run),
@@ -33,6 +34,7 @@ def main() -> None:
         ("agg_engine_eq1", agg_engine.run),
         ("round_engine_scan", round_engine.run),
         ("pod_scaling_two_tier", pod_scaling.run),
+        ("privacy_tradeoff_eps", privacy_tradeoff.run),
         ("parallel_scaling_sec3a4", parallel_scaling.run),
         ("roofline_dryrun", roofline.run),
     ]

@@ -1,0 +1,150 @@
+"""Secure aggregation surviving a killed site (the CI privacy smoke).
+
+Two phases:
+
+  1. **DP + masks over tcp, end to end** — the ``repro.launch.train``
+     CLI with ``--secure-agg --dp-clip 1.0 --dp-noise-multiplier 0.5``
+     on the tcp transport: every site clips + noises its update
+     locally, masks it pairwise in fixed point, and the job reports a
+     finite (ε, δ) from the Rényi accountant.
+  2. **Kill-and-lease-expire** — three real OS processes join one
+     ``AggregationServer`` (lease_ttl set, SecureAggState armed); one
+     is SIGKILLed *after joining the round's schedule* but before
+     uploading, so its pairwise masks never cancel.  The reaper expires
+     its lease, the server regenerates exactly the dead site's pair
+     streams (seed escrow), and the published global is the survivors'
+     exact weighted mean — a crashed participant costs its contribution,
+     never the round.
+
+    PYTHONPATH=src python examples/secure_dropout.py
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+SITES = 3
+LEASE_TTL = 3.0          # > the survivors' join→upload window below
+JOIN_WINDOW = 1.5        # survivors hold uploads until everyone joined
+SECRET = "example-mask-secret"
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _model(site: int) -> np.ndarray:
+    return np.random.default_rng(site).normal(size=(256,)).astype(np.float32)
+
+
+def _weight(site: int) -> float:
+    return float(site + 1)
+
+
+def worker(site: int, host: str, port: int, die: bool):
+    """One site process: join the schedule, then either upload a masked
+    model or (the victim) hang until SIGKILLed."""
+    from repro.comms.peer import Peer
+    from repro.privacy import SecureAggClient
+    peer = Peer(site)
+    peer.request((host, port), "join", {"site": site})
+    if die:
+        time.sleep(600)                      # killed long before this ends
+    time.sleep(JOIN_WINDOW)                  # everyone joins the schedule
+    enc, meta = SecureAggClient(SECRET, "site", site).encode(
+        {"w": _model(site)}, _weight(site), list(range(SITES)), 0)
+    ack = peer.upload((host, port), enc, 1, active_sites=SITES,
+                      meta_extra=meta)
+    assert not ack["stale"], f"site {site} upload rejected"
+    peer.close()
+
+
+def phase_dp_over_tcp():
+    print("phase 1: DP-SGD + secure aggregation over tcp (train CLI)…")
+    cmd = [sys.executable, "-m", "repro.launch.train", "--reduced",
+           "--sites", "2", "--rounds", "2", "--batch", "2", "--seq", "16",
+           "--transport", "tcp", "--secure-agg",
+           "--dp-clip", "1.0", "--dp-noise-multiplier", "0.5",
+           "--lease-ttl", "30", "--quiet", "--out", "/tmp/secure_dropout"]
+    subprocess.run(cmd, env=_env(), check=True)
+    rec = json.loads(
+        Path("/tmp/secure_dropout/train_fedavg.json").read_text())
+    losses = [h["loss"] for h in rec["history"]]
+    assert np.isfinite(losses).all(), losses
+    eps = rec["privacy"]["epsilon"]
+    assert np.isfinite(eps) and eps > 0, rec["privacy"]
+    print(f"  finished, losses {['%.3f' % l for l in losses]}, "
+          f"epsilon={eps:.2f} at delta={rec['privacy']['delta']}")
+
+
+def phase_kill_and_recover():
+    print("phase 2: masked round with a SIGKILLed, lease-expired site…")
+    from repro.comms.coordinator import AggregationServer
+    from repro.comms.peer import Peer
+    from repro.privacy import SecureAggState
+
+    sa = SecureAggState(SECRET, "site", np.ones((1, SITES), bool))
+    srv = AggregationServer("127.0.0.1", 0, num_sites=SITES,
+                            case_weights=[_weight(s) for s in range(SITES)],
+                            download_timeout=60.0, lease_ttl=LEASE_TTL,
+                            secure_agg=sa)
+    host, port = srv.addr
+    victim_site = 1
+    procs = {}
+    try:
+        for s in range(SITES):
+            procs[s] = subprocess.Popen(
+                [sys.executable, __file__, "--worker", str(s), host,
+                 str(port), "die" if s == victim_site else "up"],
+                env=_env(), start_new_session=True)
+        # survivors upload inside the victim's lease window, so the
+        # round barrier is genuinely waiting on the victim when it dies
+        for s, p in procs.items():
+            if s != victim_site:
+                assert p.wait(timeout=120) == 0, f"site {s} failed"
+        os.kill(procs[victim_site].pid, signal.SIGKILL)
+        procs[victim_site].wait()
+        print(f"  site {victim_site} SIGKILLed after joining the schedule; "
+              f"waiting out its {LEASE_TTL}s lease…")
+
+        peer = Peer(99)
+        g = peer.download((host, port), 1)
+        peer.close()
+        alive = [s for s in range(SITES) if s != victim_site]
+        expect = (sum(_weight(s) * _model(s) for s in alive)
+                  / sum(_weight(s) for s in alive))
+        np.testing.assert_allclose(g["w"], expect, rtol=1e-6, atol=1e-6)
+        assert sa.recovered == [(0, victim_site)], sa.recovered
+        print(f"  round repaired by seed recovery: global == exact weighted "
+              f"mean of sites {alive} ({g['w'].size} params, "
+              f"recovered pair streams for site {victim_site})")
+    finally:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+        srv.stop()
+
+
+def main():
+    phase_dp_over_tcp()
+    phase_kill_and_recover()
+    print("OK — DP + masked uploads over tcp, and a killed site repaired "
+          "by lease-expiry seed recovery")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        worker(int(sys.argv[2]), sys.argv[3], int(sys.argv[4]),
+               sys.argv[5] == "die")
+    else:
+        main()

@@ -81,7 +81,8 @@ from repro.core import stacking
 from repro.core.agg_engine import StreamingAccumulator, per_site_nbytes
 from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
                                 RoundScheduler, availability_masks,
-                                check_engine_tag, resolve_scheduler)
+                                check_engine_tag, check_privacy_tag,
+                                resolve_scheduler)
 from repro.core.strategies import base as strat_base
 from repro.core.topology import FLAT, Topology, resolve_topology
 from repro.optim import adamw
@@ -292,6 +293,19 @@ class FederatedJob:
     pod_dropout: int = 0                # Algorithm-2 churn at the pod tier
     compression: Union[str, Codec] = "none"   # upload codec (comms seam)
     error_feedback: bool = True         # carry quantization residual
+    # privacy tier (repro.privacy).  DP-SGD is ON iff dp_clip > 0:
+    # per-site/per-example gradient clipping + Gaussian noise inside
+    # every site update (all transports, compiled into the scan engine),
+    # with the Rényi accountant's (ε, δ) on ``result.privacy``.
+    # secure_agg=True masks uploads pairwise in fixed-point int64 so the
+    # aggregation point only ever sees their sum (socket transports,
+    # sync schedulers, compression="none"; dropped/lease-expired sites
+    # are repaired by seed recovery).
+    dp_clip: float = 0.0
+    dp_noise_multiplier: float = 0.0
+    dp_delta: float = 1e-5
+    dp_mode: str = "per-site"           # clipping unit: per-site | per-example
+    secure_agg: bool = False
     seed: int = 0                       # init + dropout + pairing seed
     io_timeout: float = 120.0           # socket-transport exchange bound
     # deployable wire (socket transports): hello auth secret, optional
@@ -328,6 +342,55 @@ class FederatedJob:
     @property
     def topo(self) -> Topology:
         return resolve_topology(self.topology)
+
+    @property
+    def dp(self):
+        """The job's :class:`~repro.privacy.DPConfig`, or None (off)."""
+        if self.dp_clip <= 0 and self.dp_noise_multiplier <= 0:
+            return None
+        from repro.privacy import DPConfig
+        return DPConfig(clip=self.dp_clip,
+                        noise_multiplier=self.dp_noise_multiplier,
+                        delta=self.dp_delta, mode=self.dp_mode,
+                        seed=self.seed)
+
+    def dp_tag(self) -> Optional[List[Any]]:
+        """Checkpoint-meta fingerprint of the DP settings — a resume
+        with a different mechanism must refuse, not splice streams."""
+        dp = self.dp
+        if dp is None:
+            return None
+        return [dp.clip, dp.noise_multiplier, dp.mode, dp.seed]
+
+    @property
+    def mask_secret(self) -> str:
+        """The shared secret the pairwise mask seeds derive from: the
+        wire auth secret when set (the deployed configuration), else a
+        seed-derived default so offline tests run without one."""
+        return self.wire.secret or f"fedkbp-mask:{self.seed}"
+
+    def privacy_report(self, rounds: Optional[int] = None
+                       ) -> Optional[Dict[str, Any]]:
+        """``JobResult.privacy``: accountant output + mechanism settings
+        (None when no privacy mechanism is on).  ε accounts the FULL
+        logical run of ``rounds`` — a crash-resumed invocation replays
+        the same noise stream, it does not spend new budget."""
+        dp = self.dp
+        if dp is None and not self.secure_agg:
+            return None
+        rep: Dict[str, Any] = {"secure_agg": bool(self.secure_agg)}
+        if dp is None:
+            rep["mechanism"] = "none"
+            return rep
+        from repro.privacy import gaussian_epsilon
+        steps = (self.rounds if rounds is None else rounds) * self.local_steps
+        rep.update({
+            "mechanism": "dp-sgd", "mode": dp.mode, "clip": dp.clip,
+            "noise_multiplier": dp.noise_multiplier, "delta": dp.delta,
+            "steps": steps, "accountant": "rdp-gaussian",
+            "epsilon": gaussian_epsilon(dp.noise_multiplier, steps,
+                                        dp.delta)})
+        return rep
 
     def replace(self, **kw) -> "FederatedJob":
         return dataclasses.replace(self, **kw)
@@ -372,11 +435,14 @@ class FederatedJob:
 
     def context(self, bundle: Optional[TaskBundle] = None,
                 num_sites: Optional[int] = None,
-                strategy: Optional[str] = None) -> F.FLContext:
+                strategy: Optional[str] = None,
+                dp_site_base: int = 0) -> F.FLContext:
         """The FLContext view of this job (stacked or per-site worker).
         The topology rides along only on the full-federation view — a
         worker's 1-site (or otherwise resized) context is flat, since
-        tiering happens at its aggregation point, not inside its rounds."""
+        tiering happens at its aggregation point, not inside its rounds.
+        ``dp_site_base`` maps the view's site rows to global site ids so
+        a socket worker draws the same DP noise as its stacked twin."""
         bundle = bundle or self.task.build()
         fed = self.federation(num_sites, strategy)
         topo = self.topo if num_sites is None and self.strategy != "pooled" \
@@ -387,7 +453,7 @@ class FederatedJob:
             loss_fn=bundle.loss_fn, logits_fn=bundle.logits_fn,
             optimizer=adamw(self.lr, weight_decay=self.weight_decay),
             grad_clip=self.grad_clip, dcml_lr=self.dcml_lr or self.lr,
-            topology=topo)
+            topology=topo, privacy=self.dp, dp_site_base=dp_site_base)
 
     def recorder(self, rounds: int, num_sites: int) -> RoundRecorder:
         return RoundRecorder(rounds, verbose=self.verbose,
@@ -479,6 +545,11 @@ class StackedTransport(Transport):
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
         buffered = isinstance(scheduler, BufferedScheduler)
+        if job.secure_agg:
+            raise ValueError(
+                "secure_agg masks real uploads between distrusting "
+                "participants — there is no wire to protect inside the "
+                "stacked simulator; run it on transport='thread' or 'tcp'")
         topo = job.topo
         if topo.is_pods:
             topo.validate(job.task.sites)
@@ -548,8 +619,9 @@ class StackedTransport(Transport):
         recorder = job.recorder(rounds, ctx.fed.num_sites)
         start_round = 0
         if resume_round is not None:
-            check_engine_tag(recorder.store.meta("driver_state",
-                                                 resume_round), "sync-loop")
+            lmeta = recorder.store.meta("driver_state", resume_round)
+            check_engine_tag(lmeta, "sync-loop")
+            check_privacy_tag(lmeta, job.dp_tag())
             loaded, _ = recorder.store.load(
                 "driver_state", resume_round, {"fl_state": state})
             state = jax.tree.map(jnp.asarray, loaded["fl_state"])
@@ -584,7 +656,7 @@ class StackedTransport(Transport):
                             extra=extra)
             recorder.save_state(
                 r, lambda: {"fl_state": jax.tree.map(np.asarray, state)},
-                meta={"engine": "sync-loop"})
+                meta={"engine": "sync-loop", "dp": job.dp_tag()})
         comm = None
         if job.strategy in ("fedavg", "fedprox"):
             # no wire in-process: report what the equivalent socket run
@@ -606,7 +678,8 @@ class StackedTransport(Transport):
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
                                state=state, comm=comm, compile_s=compile_s,
-                               resumed_from=resume_round)
+                               resumed_from=resume_round,
+                               privacy=job.privacy_report(rounds))
 
     def _execute_compressed(self, job, bundle, scheduler, rounds,
                             codec, resume_round=None) -> JobResult:
@@ -649,6 +722,7 @@ class StackedTransport(Transport):
         if resume_round is not None:
             lmeta = recorder.store.meta("driver_state", resume_round)
             check_engine_tag(lmeta, "compressed-loop")
+            check_privacy_tag(lmeta, job.dp_tag())
             like = {"fl_state": state, "reference": site_zero,
                     "residuals": [site_zero for _ in range(num_sites)]}
             loaded, _ = recorder.store.load("driver_state", resume_round,
@@ -711,7 +785,7 @@ class StackedTransport(Transport):
                                       else site_zero for c in comps]}
             recorder.save_state(
                 r, _ckpt_tree,
-                meta={"engine": "compressed-loop",
+                meta={"engine": "compressed-loop", "dp": job.dp_tag(),
                       "has_residual": [c.residual is not None
                                        for c in comps]})
         comm = _compressor_comm(comps, codec,
@@ -725,7 +799,8 @@ class StackedTransport(Transport):
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
                                comm=comm, compile_s=compile_s,
-                               resumed_from=resume_round)
+                               resumed_from=resume_round,
+                               privacy=job.privacy_report(rounds))
 
     def _execute_buffered(self, job, bundle, scheduler, rounds,
                           codec) -> JobResult:
@@ -812,7 +887,8 @@ class StackedTransport(Transport):
                 if compress else None)
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
-                               comm=comm, compile_s=compile_s)
+                               comm=comm, compile_s=compile_s,
+                               privacy=job.privacy_report(rounds))
 
 
 
@@ -873,7 +949,9 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
     buffered = isinstance(job.tier_schedulers()[0], BufferedScheduler)
     local_strategy = ("fedprox-local" if job.strategy == "fedprox"
                       else "individual")
-    ctx = job.context(bundle, num_sites=1, strategy=local_strategy)
+    ctx = job.context(bundle, num_sites=1, strategy=local_strategy,
+                      dp_site_base=site_id)
+    dp_on = job.dp is not None
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
     local_round = jax.jit(F.build_fl_round(ctx))
     # every site replays the same Algorithm-2 chain (site + pod tiers) —
@@ -897,6 +975,14 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
     peer_comp = (UploadCompressor(codec, job.error_feedback)
                  if codec.name != "none" and strategy.needs_pairing else None)
     reference = None        # last pulled global (fp32) — the delta anchor
+    sa = None               # secure aggregation: pairwise upload masker
+    sa_bytes = sa_raw = sa_count = 0
+    if job.secure_agg:
+        from repro.privacy import SecureAggClient
+        sa = SecureAggClient(job.mask_secret, "site", site_id)
+        case_w = np.asarray(job.federation().case_weights())
+        sa_weight = (1.0 if job.topo.intra == "uniform"
+                     else float(case_w[site_id]))
     site_store = None
     if job.checkpoint_dir:
         from repro.checkpoint import CheckpointStore
@@ -977,6 +1063,12 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                              "params": stacking.broadcast_to_sites(merged, 1)}
             # -- local training ------------------------------------------
             if me_active or job.dropout_scenario == "disconnect":
+                if dp_on:
+                    # pin the carried round counter to the loop round: a
+                    # shut-down or late-joining site skips rounds, and its
+                    # DP noise stream must skip with it to match the
+                    # stacked twin
+                    state = {**state, "round": jnp.asarray(r, jnp.int32)}
                 state, metrics = local_round(state, b, ri1)
                 losses.append(float(np.asarray(metrics["loss"])[0]))
             else:                                    # workstation off
@@ -990,7 +1082,18 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 upload_round = base_round + 1 if buffered else r + 1
                 payload = _site_host_tree(state["params"])
                 cmeta = None
-                if comp is not None:
+                if sa is not None:
+                    # mask against the round's *scheduled* barrier peers
+                    # (every participant replays masks, so the set needs
+                    # no negotiation); the server recovers the pair seeds
+                    # of anyone scheduled who never arrives
+                    sa_raw += tree_payload_nbytes(payload)
+                    participants = np.flatnonzero(masks[r] & pod_members)
+                    payload, cmeta = sa.encode(payload, sa_weight,
+                                               participants, r)
+                    sa_bytes += tree_payload_nbytes(payload)
+                    sa_count += 1
+                elif comp is not None:
                     # a site that sat out long enough for its reference
                     # global to leave the server's keep_globals window
                     # must re-send dense: under the sync barrier a
@@ -1049,9 +1152,11 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
         streams = [c for c in (comp, peer_comp) if c is not None]
         return {"losses": losses, "stale_uploads": stale_uploads,
                 "params": _site_host_tree(state["params"]),
-                "upload_payload_bytes": sum(c.encoded_bytes for c in streams),
-                "upload_raw_bytes": sum(c.raw_bytes for c in streams),
-                "upload_count": sum(c.encodes for c in streams)}
+                "upload_payload_bytes":
+                    sum(c.encoded_bytes for c in streams) + sa_bytes,
+                "upload_raw_bytes":
+                    sum(c.raw_bytes for c in streams) + sa_raw,
+                "upload_count": sum(c.encodes for c in streams) + sa_count}
     finally:
         if hb is not None:
             hb.stop(leave=True)
@@ -1094,6 +1199,24 @@ class _SocketTransport(Transport):
             raise ValueError(
                 "a pods topology needs a centrally-aggregated strategy "
                 f"(fedavg/fedprox), not {job.strategy!r}")
+        if job.secure_agg:
+            intra_s, inter_s = job.tier_schedulers()
+            if (isinstance(intra_s, BufferedScheduler)
+                    or isinstance(inter_s, BufferedScheduler)):
+                raise ValueError(
+                    "secure aggregation cancels pairwise masks at a sync "
+                    "barrier over the round's scheduled participants; "
+                    "buffered-async folds partial subsets, so the masks "
+                    "would never cancel")
+            if resolve_codec(job.compression).name != "none":
+                raise ValueError(
+                    "secure aggregation uploads fixed-point masked "
+                    "integers; quantizing that ciphertext would corrupt "
+                    "the modular sum — use compression='none'")
+            if job.strategy not in ("fedavg", "fedprox"):
+                raise ValueError(
+                    "secure aggregation protects centrally-aggregated "
+                    f"uploads (fedavg/fedprox), not {job.strategy!r}")
         fed = job.federation()
         num_sites = fed.num_sites
         start_round = 0
@@ -1125,10 +1248,19 @@ class _SocketTransport(Transport):
                     lease_ttl=job.lease_ttl, start_round=start_round,
                     initial_global=initial_global,
                     ckpt_store=recorder.store,
-                    ckpt_every=job.ckpt_every).start()
+                    ckpt_every=job.ckpt_every,
+                    codec=resolve_codec(job.compression),
+                    error_feedback=job.error_feedback,
+                    mask_secret=(job.mask_secret if job.secure_agg
+                                 else None)).start()
                 servers.append(pod_stack)
                 agg_addr = pod_stack.site_addrs()
             elif not strategy.needs_pairing and job.strategy != "individual":
+                sa_state = None
+                if job.secure_agg:
+                    from repro.privacy import SecureAggState
+                    sa_state = SecureAggState(job.mask_secret, "site",
+                                              job.masks(rounds))
                 agg = AggregationServer(
                     "127.0.0.1", 0, num_sites=num_sites,
                     case_weights=list(fed.case_weights()),
@@ -1136,7 +1268,8 @@ class _SocketTransport(Transport):
                     scheduler=scheduler, wire=job.wire,
                     lease_ttl=job.lease_ttl, initial_round=start_round,
                     initial_global=initial_global,
-                    ckpt_store=recorder.store, ckpt_every=job.ckpt_every)
+                    ckpt_store=recorder.store, ckpt_every=job.ckpt_every,
+                    secure_agg=sa_state)
                 servers.append(agg)
                 agg_addr = agg.addr
             if strategy.needs_pairing:
@@ -1220,7 +1353,8 @@ class _SocketTransport(Transport):
             recorder.store.save("global", rounds - 1, global_params)
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, comm=comm,
-                               resumed_from=resumed_from)
+                               resumed_from=resumed_from,
+                               privacy=job.privacy_report(rounds))
 
     def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds,
                      start_round=0):

@@ -73,7 +73,37 @@ class QuantizedTensor:
         return sum(np.asarray(a).nbytes for a in self.data.values())
 
 
+@dataclasses.dataclass
+class MaskedTensor:
+    """A secure-aggregation pytree leaf on the wire.
+
+    ``shape`` is the logical tensor shape; ``data["v"]`` holds the
+    fixed-point masked words (int64, two's complement — uniformly
+    random to anyone without the pairwise seeds).  Serialized as a
+    ``__masked__`` skeleton node beside ``__quant__``; the transport
+    layer never unmasks (that is :mod:`repro.privacy.secure_agg`'s
+    job, and only the sum ever is).  ``meta`` carries small per-leaf
+    scalars (currently none — frac_bits rides the upload meta).
+    """
+
+    shape: Tuple[int, ...]
+    data: Dict[str, np.ndarray]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        """Payload bytes this leaf contributes to the wire."""
+        return sum(np.asarray(a).nbytes for a in self.data.values())
+
+
 def _flatten(obj: Any, prefix: str, leaves: List[Tuple[str, np.ndarray]], skeleton: Any):
+    if isinstance(obj, MaskedTensor):
+        data_sk = {k: _flatten(obj.data[k], f"{prefix}/{k}", leaves, skeleton)
+                   for k in sorted(obj.data)}
+        node = {"shape": list(obj.shape), "data": data_sk}
+        if obj.meta:
+            node["meta"] = obj.meta
+        return {"__masked__": node}
     if isinstance(obj, QuantizedTensor):
         data_sk = {k: _flatten(obj.data[k], f"{prefix}/{k}", leaves, skeleton)
                    for k in sorted(obj.data)}
@@ -116,6 +146,12 @@ def _unflatten(sk: Any, leaves: List[np.ndarray]) -> Any:
                 codec=q["codec"], shape=tuple(q["shape"]),
                 data={k: _unflatten(v, leaves) for k, v in q["data"].items()},
                 meta=q.get("meta", {}))
+        if "__masked__" in sk:
+            m = sk["__masked__"]
+            return MaskedTensor(
+                shape=tuple(m["shape"]),
+                data={k: _unflatten(v, leaves) for k, v in m["data"].items()},
+                meta=m.get("meta", {}))
         if "__list__" in sk:
             return [_unflatten(v, leaves) for v in sk["__list__"]]
         if "__tuple__" in sk:

@@ -46,7 +46,7 @@ from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.comms.codec import QuantizedTensor
+from repro.comms.codec import MaskedTensor, QuantizedTensor
 
 # absmax-0 chunks quantize to 0 instead of dividing by 0.  This is THE
 # scale floor: the Pallas kernels import it (repro/kernels/quantize.py),
@@ -79,12 +79,14 @@ def _tree_map(fn, *trees):
 
 def tree_payload_nbytes(tree: Any) -> int:
     """Wire payload bytes of a pytree whose leaves are arrays and/or
-    :class:`QuantizedTensor` (header/framing overhead excluded)."""
+    :class:`QuantizedTensor` / :class:`MaskedTensor` (header/framing
+    overhead excluded)."""
     import jax
+    wire_leaf = (QuantizedTensor, MaskedTensor)
     return sum(
-        x.nbytes if isinstance(x, QuantizedTensor) else np.asarray(x).nbytes
+        x.nbytes if isinstance(x, wire_leaf) else np.asarray(x).nbytes
         for x in jax.tree.leaves(
-            tree, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+            tree, is_leaf=lambda x: isinstance(x, wire_leaf)))
 
 
 def chunk_geom(n: int, chunk: int, align: int = 1) -> Tuple[int, int]:

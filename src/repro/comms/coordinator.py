@@ -62,8 +62,16 @@ class AggregationServer:
                  wire: Optional[WireConfig] = None,
                  lease_ttl: Optional[float] = None,
                  initial_round: int = 0, initial_global: Any = None,
-                 ckpt_store=None, ckpt_every: int = 10):
+                 ckpt_store=None, ckpt_every: int = 10,
+                 secure_agg=None):
         self.num_sites = num_sites
+        # secure aggregation (repro.privacy.SecureAggState): masked
+        # uploads fold as raw uint64 modular sums; finalize decodes the
+        # fixed point AFTER recovering the pair seeds of any scheduled
+        # site that never arrived (Bonawitz-style dropout repair)
+        self.secure_agg = secure_agg
+        self._masked_weight = 0.0
+        self._masked_round: Optional[int] = None
         self.weights = {i: (case_weights[i] if case_weights else 1.0)
                         for i in range(num_sites)}
         self.download_timeout = download_timeout
@@ -120,13 +128,30 @@ class AggregationServer:
         self._lock.wait_for(lambda: upload_round <= self._round + 1,
                             timeout=self.download_timeout)
 
+    def _finalize_buffer(self):
+        """Lock held.  Finalize the accumulator → ``(tree, weight)``.
+        A masked round takes the integer path: the raw modular sum,
+        repaired for scheduled-but-missing participants, then decoded
+        from fixed point at the plaintext weight total the uploads'
+        meta carried."""
+        if self._masked_round is not None:
+            tree = self.secure_agg.unmask(
+                self._acc.finalize_int(), self._masked_round,
+                set(self._folded), self._masked_weight)
+            w = self._masked_weight
+            self._masked_weight = 0.0
+            self._masked_round = None
+            return tree, w
+        w = self._acc.weight_total
+        return self._acc.finalize(), w
+
     def _on_ready(self):
         """Lock held.  The buffer is complete: finalize into a new global
         and advance the round.  The pod-tier subclass
         (:class:`repro.comms.pods.PodAggregationServer`) overrides this to
         finalize into a *partial* for its leader instead — the round only
         advances when the leader installs the root global."""
-        self._global = self._acc.finalize()
+        self._global, _ = self._finalize_buffer()
         self._folded = set()
         self._round += 1
         self._globals[self._round] = self._global
@@ -176,6 +201,17 @@ class AggregationServer:
     def _handle(self, kind, meta, tree):
         if kind == "upload":
             site = int(meta["site"])
+            masked = bool(meta.get("masked"))
+            if masked:
+                if self.secure_agg is None:
+                    return encode_message(
+                        "error", {"message": "masked upload to a server "
+                                             "without secure aggregation "
+                                             "configured"}, None)
+                from repro.privacy import masked_values
+                # MaskedTensor wrappers → raw uint64 arrays; the server
+                # never sees a plaintext model, only masked integers
+                tree = masked_values(tree)
             if compression.is_compressed(meta) or meta.get("delta"):
                 # dequantize OUTSIDE the lock — a full-model numpy decode
                 # per upload would otherwise serialize all concurrent
@@ -203,11 +239,28 @@ class AggregationServer:
                     return encode_message(
                         "ack", {"round": self._round, "stale": True}, None)
                 if site not in self._folded:
-                    # a pod leader re-uploading a pod partial carries the
-                    # pod's folded (active-member) weight in the meta —
-                    # per-site weights stay the static case weights
-                    w = float(meta.get("weight", self.weights[site]))
-                    self._acc.fold(tree, w * discount)
+                    if self._folded and masked != (self._masked_round
+                                                   is not None):
+                        return encode_message(
+                            "error", {"message": "mixed masked and "
+                                                 "plaintext uploads in one "
+                                                 "round"}, None)
+                    if masked:
+                        # masked integers fold at weight 1.0 — modular
+                        # arithmetic, exact; the plaintext weight total
+                        # rides the meta and divides out at finalize
+                        self._acc.fold(tree, 1.0)
+                        self._masked_weight += float(
+                            meta.get("weight", self.weights[site]))
+                        self._masked_round = int(
+                            meta.get("mask_round", upload_round - 1))
+                    else:
+                        # a pod leader re-uploading a pod partial carries
+                        # the pod's folded (active-member) weight in the
+                        # meta — per-site weights stay the static case
+                        # weights
+                        w = float(meta.get("weight", self.weights[site]))
+                        self._acc.fold(tree, w * discount)
                     self._folded.add(site)
                 if self.registry is not None:       # an upload is a renewal
                     self.registry.renew(site)

@@ -72,8 +72,7 @@ class PodAggregationServer(AggregationServer):
         super().__init__(*args, **kw)
 
     def _on_ready(self):                     # lock held
-        self._partial_weight = float(self._acc.weight_total)
-        self._partial = self._acc.finalize()
+        self._partial, self._partial_weight = self._finalize_buffer()
         self._folded = set()
         self._partial_round += 1
         self._lock.notify_all()
@@ -128,8 +127,22 @@ class PodTransport:
                  wire: Optional[WireConfig] = None,
                  lease_ttl: Optional[float] = None,
                  start_round: int = 0, initial_global: Any = None,
-                 ckpt_store=None, ckpt_every: int = 10):
+                 ckpt_store=None, ckpt_every: int = 10,
+                 codec=None, error_feedback: bool = True,
+                 mask_secret: Optional[str] = None):
         topology.validate(num_sites)
+        # codec: leader→root partial re-uploads ride the same upload
+        # compressor as site uploads (delta against the last pulled root
+        # global, error-feedback residual per leader) — the WAN link
+        # shrinks with the pod count AND the codec ratio.
+        self.codec = codec if codec is not None and codec.name != "none" \
+            else None
+        self.error_feedback = error_feedback
+        # mask_secret: secure aggregation at BOTH tiers — sites mask
+        # against their pod's scheduled members, leaders mask partials
+        # against the round's active pods, so neither the pod servers
+        # nor the root ever see a plaintext contribution.
+        self.mask_secret = mask_secret
         self.topology = topology
         self.num_sites = num_sites
         self.case_weights = list(case_weights)
@@ -152,8 +165,31 @@ class PodTransport:
 
     # -- lifecycle ----------------------------------------------------------
 
+    def _pod_active_rows(self) -> np.ndarray:
+        """[rounds, P] bool: pod p has ≥1 active site in round r — the
+        pod-tier Algorithm-2 schedule (what the root's secure-agg masks
+        and the leaders' participant lists derive from)."""
+        p = self.topology.num_pods
+        rows = np.zeros((self.rounds, p), bool)
+        for q in range(p):
+            rows[:, q] = self.masks[:, self.pod_of == q].any(axis=1)
+        return rows
+
     def start(self) -> "PodTransport":
         p = self.topology.num_pods
+        root_sa = None
+        self._pod_sa = [None] * p
+        if self.mask_secret is not None:
+            from repro.privacy import SecureAggState
+            root_sa = SecureAggState(self.mask_secret, "pod",
+                                     self._pod_active_rows())
+            # each pod server schedules only its own members (other
+            # pods' columns zeroed), matching the participant set its
+            # sites mask against
+            for q in range(p):
+                rows = self.masks & (self.pod_of == q)[None, :]
+                self._pod_sa[q] = SecureAggState(self.mask_secret, "site",
+                                                 rows)
         # root combiner: "sites" are pod ids; fold weights arrive per
         # upload (the pod's folded active-member weight), so the static
         # per-pod weights are never used
@@ -163,7 +199,8 @@ class PodTransport:
             scheduler=self.inter_scheduler, wire=self.wire,
             initial_round=self.start_round,
             initial_global=self.initial_global,
-            ckpt_store=self.ckpt_store, ckpt_every=self.ckpt_every)
+            ckpt_store=self.ckpt_store, ckpt_every=self.ckpt_every,
+            secure_agg=root_sa)
         # pod servers keep GLOBAL site ids (uploads carry them), so they
         # take the full case-weight table; `expected` comes from each
         # upload's pod-local active_sites count.  intra="uniform" folds
@@ -177,7 +214,8 @@ class PodTransport:
                                  scheduler=self.intra_scheduler, pod_id=i,
                                  wire=self.wire, lease_ttl=self.lease_ttl,
                                  initial_round=self.start_round,
-                                 initial_global=self.initial_global)
+                                 initial_global=self.initial_global,
+                                 secure_agg=self._pod_sa[i])
             for i in range(p)]
         self._leaders = [threading.Thread(target=self._leader, args=(i,),
                                           daemon=True) for i in range(p)]
@@ -229,6 +267,15 @@ class PodTransport:
         #                         one per round with ≥1 active member —
         #                         NOT the loop round (a fully-off pod
         #                         produces none that round)
+        comp = reference = sa = None
+        if self.codec is not None:
+            from repro.comms.compression import (KEEP_GLOBALS_DEFAULT,
+                                                 UploadCompressor)
+            comp = UploadCompressor(self.codec, self.error_feedback)
+        if self.mask_secret is not None:
+            from repro.privacy import SecureAggClient
+            sa = SecureAggClient(self.mask_secret, "pod", pod_id)
+            pod_rows = self._pod_active_rows()
         try:
             for r in range(self.start_round, self.rounds):
                 partial = None
@@ -243,13 +290,33 @@ class PodTransport:
                     upload_round = base_round + 1 if buffered else r + 1
                     pw = (1.0 if self.topology.inter == "uniform"
                           else float(pmeta["weight"]))
-                    peer.upload(self.root.addr, partial, upload_round,
+                    payload, xmeta = partial, {"weight": pw}
+                    if sa is not None:
+                        # pod-tier masking: the root only ever sees the
+                        # masked cross-pod sum
+                        payload, xmeta = sa.encode(
+                            partial, pw, np.flatnonzero(pod_rows[r]), r)
+                    elif comp is not None:
+                        # delta-encode the partial against the last
+                        # pulled root global (same dense-resend guard as
+                        # the site client: an anchor past the root's
+                        # keep_globals window cannot decode)
+                        if (reference is not None and upload_round
+                                - base_round >= KEEP_GLOBALS_DEFAULT):
+                            reference = None
+                        payload, xmeta = comp.encode(partial, reference)
+                        xmeta["base_round"] = base_round \
+                            if reference is not None else 0
+                        xmeta["weight"] = pw
+                    peer.upload(self.root.addr, payload, upload_round,
                                 active_sites=self._active_pods(r),
-                                meta_extra={"weight": pw})
+                                meta_extra=xmeta)
                 want = 0 if buffered else r + 1
                 g, dmeta = peer.download(self.root.addr, want, with_meta=True)
                 if g is not None:
                     base_round = int(dmeta["round"])
+                    if comp is not None:   # next delta anchors to this pull
+                        reference = g
                 elif partial is not None:
                     # buffered root with nothing finalized yet: the pod
                     # continues from its OWN partial (FedBuff semantics —

@@ -287,6 +287,18 @@ class StreamingAccumulator:
     @staticmethod
     def _scaled(x, w: np.float32) -> np.ndarray:
         x = np.asarray(x)
+        if np.issubdtype(x.dtype, np.integer):
+            # secure-aggregation path: masked fixed-point words sum as
+            # EXACT modular uint64 arithmetic — any float scaling would
+            # destroy the pairwise mask cancellation, so integer leaves
+            # only ever fold at weight 1 (the site weights ride the
+            # upload metadata and divide out at unmask time)
+            if float(w) != 1.0:
+                raise ValueError("integer (masked) uploads fold at weight "
+                                 f"1.0, got {float(w)}")
+            v = x.view(np.uint64) if x.dtype.itemsize == 8 \
+                else x.astype(np.uint64)
+            return v if v.flags.writeable else v.copy()
         if x.dtype == np.float32 and x.flags.writeable:
             return np.multiply(x, w, out=x)        # in place — no model copy
         return np.multiply(x, w, dtype=np.float32)
@@ -305,14 +317,34 @@ class StreamingAccumulator:
         self._weight_total += float(weight)
         self.count += 1
 
+    @property
+    def is_integer(self) -> bool:
+        """True when the buffered round is a masked (fixed-point) one."""
+        return bool(self._acc) and \
+            np.issubdtype(self._acc[0].dtype, np.integer)
+
     def finalize(self):
         """Normalize by the folded weight total and return the global pytree
         (fp32 leaves).  Resets the accumulator for the next round."""
         if self._acc is None:
             return None
+        if self.is_integer:
+            raise ValueError("masked integer rounds finalize via "
+                             "finalize_int() + SecureAggState.unmask()")
         inv = np.float32(1.0 / self._weight_total)
         leaves = [np.multiply(a, inv, out=a) for a in self._acc]
         tree = jax.tree.unflatten(self._treedef, leaves)
+        self._treedef, self._acc = None, None
+        self._weight_total, self.count = 0.0, 0
+        return tree
+
+    def finalize_int(self):
+        """The raw modular uint64 sum of a masked round, unnormalized —
+        :meth:`~repro.privacy.secure_agg.SecureAggState.unmask` recovers
+        the weighted mean.  Resets the accumulator for the next round."""
+        if self._acc is None:
+            return None
+        tree = jax.tree.unflatten(self._treedef, self._acc)
         self._treedef, self._acc = None, None
         self._weight_total, self.count = 0.0, 0
         return tree

@@ -52,6 +52,13 @@ class FLContext:
     topology: Topology = FLAT
     microbatch: Optional[int] = None   # per-site microbatch for grad accumulation
     accum_dtype: Any = jnp.float32     # grad-accumulator dtype (bf16 for ≥236B)
+    # DP-SGD (repro.privacy.dp.DPConfig or None): clip+noise inside the
+    # site update, keys derived from (seed, fl_state["round"], global
+    # site id, local step).  ``dp_site_base`` maps this context's site
+    # rows onto GLOBAL site ids (a 1-site socket worker's row 0 is its
+    # real site id), so every transport draws the same noise stream.
+    privacy: Optional[Any] = None
+    dp_site_base: int = 0
 
     def scalar_loss_fn(self, params, batch):
         return self.loss_fn(params, batch)[0]
@@ -123,12 +130,29 @@ def build_fl_round(ctx: FLContext, remat_local: bool = False):
     ``val_batch`` with leaves [S, …].
     """
     strategy = strat_base.get_strategy(ctx.fed.strategy)
+    dp = ctx.privacy
+    if dp is not None and ctx.microbatch:
+        raise ValueError("DP-SGD composes its own per-example/per-site "
+                         "clipping; microbatch gradient accumulation is "
+                         "not supported alongside it")
 
-    def site_train_step(params, opt, batch, strat_ref):
+    def site_train_step(params, opt, batch, strat_ref, noise_key=None):
         def lf(p, b):
             loss, metrics = ctx.loss_fn(p, b)
             loss = loss + strategy.local_loss_extra(p, strat_ref, ctx)
             return loss, metrics
+
+        if dp is not None:
+            from repro.privacy.dp import dp_gradients
+            # DP clipping REPLACES ctx.grad_clip — the clip norm is the
+            # mechanism's sensitivity, a second rescale would break the
+            # accountant's calibration
+            grads, loss, metrics, gnorm = dp_gradients(
+                lf, params, batch, noise_key, dp)
+            updates, opt = ctx.optimizer.update(grads, opt, params)
+            params = apply_updates(params, updates)
+            return params, opt, {"loss": loss, "grad_norm": gnorm,
+                                 **metrics}
 
         bsz = jax.tree.leaves(batch)[0].shape[0]
         if ctx.microbatch and ctx.microbatch < bsz:
@@ -167,16 +191,47 @@ def build_fl_round(ctx: FLContext, remat_local: bool = False):
     def local_phase(fl_state, batches, active):
         strat_ref = fl_state["strategy"]
 
-        def per_site(params, opt, site_batches):
-            def body(carry, b):
-                p, o = carry
-                p, o, m = site_train_step(p, o, b, strat_ref)
-                return (p, o), m
-            (params, opt), ms = jax.lax.scan(body, (params, opt), site_batches)
-            return params, opt, jax.tree.map(lambda x: x[-1], ms)
+        if dp is not None:
+            # noise keys threaded through the carry: fl_state["round"]
+            # rides every engine's scan carry, so fold_in(round, site,
+            # step) replays identically across scan/loop/socket paths
+            # and across crash-resume re-entry
+            from repro.privacy.dp import round_key, site_step_key
+            rkey = round_key(dp, fl_state["round"])
+            s = jax.tree.leaves(batches)[0].shape[0]
+            site_ids = jnp.arange(s, dtype=jnp.int32) + ctx.dp_site_base
 
-        new_params, new_opt, metrics = jax.vmap(
-            per_site, in_axes=(0, 0, 0))(fl_state["params"], fl_state["opt"], batches)
+            def per_site_dp(params, opt, site_batches, site_id):
+                k = jax.tree.leaves(site_batches)[0].shape[0]
+
+                def body(carry, xs):
+                    b, step = xs
+                    p, o = carry
+                    p, o, m = site_train_step(
+                        p, o, b, strat_ref,
+                        site_step_key(rkey, site_id, step))
+                    return (p, o), m
+                (params, opt), ms = jax.lax.scan(
+                    body, (params, opt),
+                    (site_batches, jnp.arange(k, dtype=jnp.int32)))
+                return params, opt, jax.tree.map(lambda x: x[-1], ms)
+
+            new_params, new_opt, metrics = jax.vmap(
+                per_site_dp, in_axes=(0, 0, 0, 0))(
+                fl_state["params"], fl_state["opt"], batches, site_ids)
+        else:
+            def per_site(params, opt, site_batches):
+                def body(carry, b):
+                    p, o = carry
+                    p, o, m = site_train_step(p, o, b, strat_ref)
+                    return (p, o), m
+                (params, opt), ms = jax.lax.scan(body, (params, opt),
+                                                 site_batches)
+                return params, opt, jax.tree.map(lambda x: x[-1], ms)
+
+            new_params, new_opt, metrics = jax.vmap(
+                per_site, in_axes=(0, 0, 0))(fl_state["params"],
+                                             fl_state["opt"], batches)
 
         if ctx.fed.dropout_scenario == "shutdown":
             # workstation off: inactive sites neither train nor update state

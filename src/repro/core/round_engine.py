@@ -69,7 +69,7 @@ from repro.core import stacking
 from repro.core.agg_engine import (get_engine, normalized_weights,
                                    per_site_nbytes)
 from repro.core.session import (BufferedScheduler, JobResult,
-                                check_engine_tag)
+                                check_engine_tag, check_privacy_tag)
 from repro.core.strategies import base as strat_base
 
 AUTO_CHUNK_ROUNDS = 32      # scan compiles its body once, so chunks are cheap
@@ -412,8 +412,9 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
     recorder = job.recorder(rounds, num_sites)
     start_round = 0
     if resume_round is not None:
-        check_engine_tag(recorder.store.meta("driver_state", resume_round),
-                         "sync-scan")
+        lmeta = recorder.store.meta("driver_state", resume_round)
+        check_engine_tag(lmeta, "sync-scan")
+        check_privacy_tag(lmeta, job.dp_tag())
         loaded, _ = recorder.store.load(
             "driver_state", resume_round, jax.tree.map(np.asarray, carry))
         carry = jax.tree.map(jnp.asarray, loaded)
@@ -457,7 +458,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
                 extra=extra)
         recorder.save_state(r0 + kc - 1,
                             lambda: jax.tree.map(np.asarray, carry),
-                            meta={"engine": "sync-scan"})
+                            meta={"engine": "sync-scan",
+                                  "dp": job.dp_tag()})
         r0 += kc
     all_masks = (np.concatenate(masks_seen) if masks_seen
                  else masks[start_round:])
@@ -476,7 +478,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
     return recorder.result(F.global_model(state, ctx), transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s,
-                           resumed_from=resume_round)
+                           resumed_from=resume_round,
+                           privacy=job.privacy_report(rounds))
 
 
 # ---------------------------------------------------------------------------
@@ -571,8 +574,9 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
     carry = (state, reference, residual)
     start_round = 0
     if resume_round is not None:
-        check_engine_tag(recorder.store.meta("driver_state", resume_round),
-                         "compressed-scan")
+        lmeta = recorder.store.meta("driver_state", resume_round)
+        check_engine_tag(lmeta, "compressed-scan")
+        check_privacy_tag(lmeta, job.dp_tag())
         loaded, _ = recorder.store.load(
             "driver_state", resume_round, jax.tree.map(np.asarray, carry))
         carry = jax.tree.map(jnp.asarray, loaded)
@@ -599,7 +603,8 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
                            int(masks[r0 + i].sum()) * round_enc[r0 + i]})
         recorder.save_state(r0 + kc - 1,
                             lambda: jax.tree.map(np.asarray, carry),
-                            meta={"engine": "compressed-scan"})
+                            meta={"engine": "compressed-scan",
+                                  "dp": job.dp_tag()})
         r0 += kc
     state, reference, _ = carry
     uploads = int(masks[start_round:].sum())
@@ -619,7 +624,8 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
     return recorder.result(reference, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s,
-                           resumed_from=resume_round)
+                           resumed_from=resume_round,
+                           privacy=job.privacy_report(rounds))
 
 
 # ---------------------------------------------------------------------------
@@ -752,8 +758,9 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
     recorder = job.recorder(rounds, num_sites)
     start_round = 0
     if resume_round is not None:
-        check_engine_tag(recorder.store.meta("driver_state", resume_round),
-                         "buffered-scan")
+        lmeta = recorder.store.meta("driver_state", resume_round)
+        check_engine_tag(lmeta, "buffered-scan")
+        check_privacy_tag(lmeta, job.dp_tag())
         loaded, _ = recorder.store.load(
             "driver_state", resume_round, jax.tree.map(np.asarray, carry))
         carry = jax.tree.map(jnp.asarray, loaded)
@@ -783,7 +790,8 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
                        "wall_s": step_s})
         recorder.save_state(r0 + kc - 1,
                             lambda: jax.tree.map(np.asarray, carry),
-                            meta={"engine": "buffered-scan"})
+                            meta={"engine": "buffered-scan",
+                                  "dp": job.dp_tag()})
         r0 += kc
     state = carry["state"]
     global_params = engine.unflatten(carry["gflat"], layout)
@@ -799,7 +807,8 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
     return recorder.result(global_params, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s,
-                           resumed_from=resume_round)
+                           resumed_from=resume_round,
+                           privacy=job.privacy_report(rounds))
 
 
 # ---------------------------------------------------------------------------

@@ -201,6 +201,10 @@ class JobResult:
     # (None = started at round 0); history then covers only the rounds
     # actually executed by this invocation
     resumed_from: Optional[int] = None
+    # privacy report (repro.privacy): the run's (ε, δ) from the Rényi
+    # accountant plus the DP-SGD / secure-aggregation settings; None
+    # when no privacy mechanism is on
+    privacy: Optional[Dict[str, Any]] = None
 
     @property
     def losses(self) -> List[float]:
@@ -219,7 +223,8 @@ class JobResult:
                 "wall_s": self.wall_s, "compile_s": self.compile_s,
                 "transport": self.transport,
                 "scheduler": self.scheduler, "comm": self.comm,
-                "resumed_from": self.resumed_from}
+                "resumed_from": self.resumed_from,
+                "privacy": self.privacy}
 
 
 def check_engine_tag(meta: Dict[str, Any], engine: str):
@@ -231,6 +236,21 @@ def check_engine_tag(meta: Dict[str, Any], engine: str):
             f"driver_state checkpoint was written by engine {saved!r} but "
             f"this run resolves to {engine!r}; resume with the same "
             "round_engine / compression / scheduler settings")
+
+
+def check_privacy_tag(meta: Dict[str, Any], dp_tag: Optional[List[Any]]):
+    """Guard a resume across DP settings: the noise stream is a pure
+    function of (seed, round, site, step) *given the DP config*, so
+    re-entering with different clip/σ/mode would silently splice two
+    different mechanisms into one trajectory (and void the accountant)."""
+    saved = meta.get("dp")
+    if saved is not None or dp_tag is not None:
+        if list(saved or []) != list(dp_tag or []):
+            raise ValueError(
+                f"driver_state checkpoint was written with DP settings "
+                f"{saved!r} but this run resolves to {dp_tag!r}; resume "
+                "with the same dp_clip / dp_noise_multiplier / dp_mode "
+                "/ seed")
 
 
 class RoundRecorder:
@@ -292,8 +312,10 @@ class RoundRecorder:
 
     def result(self, global_params, *, transport: str, scheduler: str,
                state=None, comm=None, compile_s: float = 0.0,
-               resumed_from: Optional[int] = None) -> JobResult:
+               resumed_from: Optional[int] = None,
+               privacy: Optional[Dict[str, Any]] = None) -> JobResult:
         return JobResult(history=self.history, global_params=global_params,
                          wall_s=time.time() - self._t0, transport=transport,
                          scheduler=scheduler, state=state, comm=comm,
-                         compile_s=compile_s, resumed_from=resumed_from)
+                         compile_s=compile_s, resumed_from=resumed_from,
+                         privacy=privacy)

@@ -58,7 +58,10 @@ def run(args) -> dict:
         transport=args.transport, scheduler=scheduler,
         topology=args.topology, pod_dropout=args.pod_dropout,
         compression=args.compression,
-        error_feedback=not args.no_error_feedback, seed=args.seed,
+        error_feedback=not args.no_error_feedback,
+        dp_clip=args.dp_clip, dp_noise_multiplier=args.dp_noise_multiplier,
+        dp_delta=args.dp_delta, dp_mode=args.dp_mode,
+        secure_agg=args.secure_agg, seed=args.seed,
         wire=wire, lease_ttl=args.lease_ttl,
         round_engine=args.round_engine, chunk_rounds=args.chunk_rounds,
         device_data=args.device_data,
@@ -84,6 +87,10 @@ def run(args) -> dict:
             "round_engine": job.round_engine,
             "chunk_rounds": job.chunk_rounds,
             "device_data": job.device_data,
+            "dp_clip": job.dp_clip,
+            "dp_noise_multiplier": job.dp_noise_multiplier,
+            "dp_delta": job.dp_delta, "dp_mode": job.dp_mode,
+            "secure_agg": job.secure_agg,
             "auth": job.wire.secret is not None,
             "tls": job.wire.tls,
             "max_message_size": job.wire.max_message_size,
@@ -139,6 +146,26 @@ def make_parser():
                     help="quantize uploads (error-feedback deltas); "
                          "topk-fixed = constant-shape top-k that compiles "
                          "under the scan engine")
+    ap.add_argument("--dp-clip", type=float, default=0.0, dest="dp_clip",
+                    metavar="C",
+                    help="DP-SGD: clip gradients to L2 norm C inside every "
+                         "site update (0 = off)")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    dest="dp_noise_multiplier", metavar="SIGMA",
+                    help="DP-SGD: Gaussian noise stddev as a multiple of "
+                         "the clip norm (needs --dp-clip > 0)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5, dest="dp_delta",
+                    help="DP-SGD: the delta the accountant reports "
+                         "epsilon at")
+    ap.add_argument("--dp-mode", default="per-site", dest="dp_mode",
+                    choices=["per-site", "per-example"],
+                    help="DP-SGD clipping unit (per-site protects a whole "
+                         "site's round contribution)")
+    ap.add_argument("--secure-agg", action="store_true", dest="secure_agg",
+                    help="mask uploads pairwise (fixed-point int64) so the "
+                         "aggregation server only sees their sum; "
+                         "thread/tcp transports, sync schedulers, "
+                         "compression=none")
     ap.add_argument("--no-error-feedback", action="store_true",
                     dest="no_error_feedback",
                     help="disable the client-side quantization residual")

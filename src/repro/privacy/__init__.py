@@ -1,0 +1,30 @@
+"""Privacy tier: traced DP-SGD + dropout-robust secure aggregation.
+
+Two composable mechanisms (threat model in ``docs/architecture.md``):
+
+  * :mod:`repro.privacy.dp` — per-site / per-example gradient clipping
+    + Gaussian noise inside the site update, traced so it compiles into
+    the multi-round scan engine; noise keys are a pure function of
+    (seed, round, site, step), so every transport and every resume
+    replays the same stream.
+  * :mod:`repro.privacy.accountant` — Rényi (moments) accounting of the
+    composed Gaussian mechanism, surfaced as ``JobResult.privacy``.
+  * :mod:`repro.privacy.secure_agg` — pairwise additive masks in
+    fixed-point int64 over the ``Peer`` wire (``__masked__`` payloads),
+    cancelling exactly in the server's integer fold, with seed-escrow
+    recovery for dropped/lease-expired sites at both tiers.
+"""
+from repro.privacy.accountant import (analytic_gaussian_epsilon,
+                                      gaussian_epsilon)
+from repro.privacy.dp import (DPConfig, dp_gradients, gaussian_noise_like,
+                              round_key, site_step_key)
+from repro.privacy.secure_agg import (FRAC_BITS, SecureAggClient,
+                                      SecureAggState, is_masked,
+                                      masked_values)
+
+__all__ = [
+    "DPConfig", "dp_gradients", "gaussian_noise_like", "round_key",
+    "site_step_key", "gaussian_epsilon", "analytic_gaussian_epsilon",
+    "FRAC_BITS", "SecureAggClient", "SecureAggState", "is_masked",
+    "masked_values",
+]

@@ -1,0 +1,215 @@
+"""Additive-mask secure aggregation in fixed-point integer arithmetic.
+
+Bonawitz-style pairwise masking over the existing ``Peer`` wire: every
+scheduled site ``i`` encodes its weighted upload in fixed point,
+
+    y_i = round(w_i · x_i · 2^F)            (int64, F = 32 frac bits)
+
+and adds, for every *other* scheduled participant ``j`` of the round,
+a pairwise mask stream ``m_ij`` (derived from a shared per-pair seed +
+the round index) with antisymmetric sign:
+
+    u_i = y_i + Σ_{j>i} m_ij − Σ_{j<i} m_ij      (mod 2^64)
+
+The server folds the ``u_i`` integers at weight 1 — an exact wraparound
+sum, so every mask cancels pairwise and the total equals
+``Σ w_i x_i · 2^F`` exactly; dividing by ``2^F · Σ w_i`` (the per-site
+weights ride the *metadata*, which is public) recovers the FedAvg
+global to fixed-point precision (~2⁻³² relative).  No individual
+``u_i`` is distinguishable from uniform without the pair seeds, so the
+server learns only the sum.
+
+**Dropout recovery** (the Algorithm-2 / lease-expiry path): masks only
+cancel if every scheduled site's upload arrives.  When the barrier
+closes with sites missing — churned out by the availability schedule's
+replay mismatch, crashed mid-upload, or lease-expired — the server
+reconstructs, per missing site ``d``, the net mask the *folded* sites
+applied against ``d`` and subtracts it:
+
+    Σ_folded u_i  −  Σ_{i folded} sign(i, d) · m_id   =   Σ_folded y_i
+
+This stands in for Bonawitz et al.'s threshold secret-sharing
+reconstruction: the per-pair seeds here are derived from the job's
+shared wire secret (seed escrow at the aggregation point) rather than
+Shamir shares — same recovery semantics, simpler key management, and
+the honest-but-curious server still never sees a plaintext model
+(it reconstructs mask *sums* for dropped pairs, not per-site models;
+a server colluding with the seed escrow can unmask, which is the
+documented trust boundary — see docs/architecture.md).
+
+The same construction runs at two tiers: flat / intra-pod (ids = site
+ids, participants = the round's scheduled sites in the pod) and
+cross-pod (ids = pod ids, participants = the round's active pods, the
+leaders masking their partials against the root).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Iterable, List, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.comms.codec import MaskedTensor
+
+#: Fixed-point fractional bits.  Headroom: |Σ w·x·2^32| stays far under
+#: 2^63 for normalized weights and O(1) parameters, and the round-trip
+#: quantization error (~2⁻³² relative) is well inside the fp32 noise of
+#: an unmasked fold.
+FRAC_BITS = 32
+
+_SCHEME = "pairwise-v1"
+
+
+def _pair_rng(secret: str, tier: str, a: int, b: int,
+              round_index: int) -> np.random.Generator:
+    """The (i, j) pair's per-round mask stream, derived from the shared
+    job secret.  Both endpoints (and the recovery path) regenerate it
+    bit-identically; the 128-bit Philox key comes from a hash over the
+    unordered pair + the ABSOLUTE round index, so no stream is ever
+    reused across rounds or pairs."""
+    lo, hi = (a, b) if a <= b else (b, a)
+    h = hashlib.sha256(
+        f"{_SCHEME}|{secret}|{tier}|{lo}|{hi}|{round_index}".encode()
+    ).digest()
+    return np.random.Generator(
+        np.random.Philox(key=int.from_bytes(h[:16], "little")))
+
+
+def _pair_stream(secret: str, tier: str, a: int, b: int, round_index: int,
+                 n: int) -> np.ndarray:
+    """``n`` uniform uint64 mask words for the pair (order-insensitive)."""
+    return _pair_rng(secret, tier, a, b, round_index).integers(
+        0, 2 ** 64 - 1, size=n, dtype=np.uint64, endpoint=True)
+
+
+def _net_mask(secret: str, tier: str, me: int, others: Iterable[int],
+              round_index: int, n: int) -> np.ndarray:
+    """The total mask site ``me`` adds: +m(me,j) for j > me, −m for j < me."""
+    total = np.zeros(n, np.uint64)
+    for j in others:
+        j = int(j)
+        if j == me:
+            continue
+        s = _pair_stream(secret, tier, me, j, round_index, n)
+        if me < j:
+            total += s
+        else:
+            total -= s
+    return total
+
+
+def _fixed_point(x: np.ndarray, weight: float) -> np.ndarray:
+    """``round(w · x · 2^F)`` as a flat uint64 word array (two's
+    complement: negatives wrap, the modular sum is still exact)."""
+    y = np.round(np.asarray(x, np.float64).reshape(-1)
+                 * (weight * float(2 ** FRAC_BITS)))
+    return y.astype(np.int64).astype(np.uint64)
+
+
+class SecureAggClient:
+    """Client-side masker for one participant at one tier."""
+
+    def __init__(self, secret: str, tier: str, my_id: int):
+        self.secret = str(secret)
+        self.tier = str(tier)
+        self.my_id = int(my_id)
+
+    def encode(self, tree: Any, weight: float,
+               participants: Sequence[int], round_index: int
+               ) -> Tuple[Any, Dict[str, Any]]:
+        """Masked fixed-point encoding of ``weight · tree`` against the
+        round's scheduled ``participants`` (which include ``my_id``).
+        Returns (tree of :class:`MaskedTensor`, upload meta)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        words = [_fixed_point(x, weight) for x in leaves]
+        mask = _net_mask(self.secret, self.tier, self.my_id, participants,
+                         int(round_index), sum(w.size for w in words))
+        out, off = [], 0
+        for x, w in zip(leaves, words):
+            w += mask[off:off + w.size]
+            off += w.size
+            out.append(MaskedTensor(
+                shape=tuple(np.shape(x)),
+                data={"v": w.view(np.int64).reshape(np.shape(x))}))
+        meta = {"masked": True, "scheme": _SCHEME, "tier": self.tier,
+                "weight": float(weight), "mask_round": int(round_index),
+                "frac_bits": FRAC_BITS}
+        return jax.tree.unflatten(treedef, out), meta
+
+
+def is_masked(meta: Dict[str, Any]) -> bool:
+    return bool(meta and meta.get("masked"))
+
+
+def masked_values(tree: Any) -> Any:
+    """A decoded ``__masked__`` upload as a tree of uint64 word arrays —
+    what the integer-exact :class:`StreamingAccumulator` fold consumes."""
+    def conv(mt: MaskedTensor) -> np.ndarray:
+        v = np.ascontiguousarray(mt.data["v"])
+        return v.view(np.uint64).reshape(mt.shape)
+    return jax.tree.map(conv, tree,
+                        is_leaf=lambda x: isinstance(x, MaskedTensor))
+
+
+@dataclasses.dataclass
+class SecureAggState:
+    """Server-side unmasking state for one aggregation point.
+
+    ``participant_masks`` is the [rounds, N] bool schedule of this
+    tier's participants (the Algorithm-2 replay restricted to this
+    pod's members, or the active-pod schedule at the root) — the same
+    schedule the clients mask against, so scheduled-but-missing ids are
+    exactly the pairs whose masks failed to cancel.
+    """
+
+    secret: str
+    tier: str
+    participant_masks: np.ndarray
+
+    def __post_init__(self):
+        self.participant_masks = np.asarray(self.participant_masks, bool)
+        self.recovered: List[Tuple[int, int]] = []   # (round, missing id)
+
+    def scheduled(self, round_index: int) -> Set[int]:
+        return set(np.flatnonzero(
+            self.participant_masks[int(round_index)]).tolist())
+
+    def unmask(self, int_tree: Any, round_index: int, folded: Set[int],
+               weight_total: float) -> Any:
+        """Recover the fp32 weighted mean from the integer fold.
+
+        ``folded`` is the set of participant ids actually summed; for
+        every scheduled-but-missing id the pairwise streams are
+        regenerated (seed escrow) and the net mask the folded sites
+        applied against it is subtracted — a crashed or lease-expired
+        site never corrupts the round."""
+        leaves, treedef = jax.tree.flatten(int_tree)
+        n = sum(int(x.size) for x in leaves)
+        folded = {int(i) for i in folded}
+        missing = sorted(self.scheduled(round_index) - folded)
+        if missing:
+            resid = np.zeros(n, np.uint64)
+            for d in missing:
+                for i in sorted(folded):
+                    s = _pair_stream(self.secret, self.tier, i, d,
+                                     int(round_index), n)
+                    if i < d:
+                        resid += s
+                    else:
+                        resid -= s
+                self.recovered.append((int(round_index), d))
+            off = 0
+            fixed = []
+            for x in leaves:
+                x = np.asarray(x, np.uint64).reshape(-1)
+                fixed.append(x - resid[off:off + x.size])
+                off += x.size
+            leaves = [f.reshape(o.shape) for f, o in zip(fixed, leaves)]
+        if weight_total <= 0:
+            raise ValueError("secure-agg finalize with zero folded weight")
+        inv = 1.0 / (float(2 ** FRAC_BITS) * float(weight_total))
+        out = [(np.asarray(x, np.uint64).view(np.int64).astype(np.float64)
+                * inv).astype(np.float32) for x in leaves]
+        return jax.tree.unflatten(treedef, out)

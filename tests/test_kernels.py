@@ -1,4 +1,6 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,13 @@ from repro.kernels import ops
 from repro.kernels.ref import fedagg_ref, flash_attention_ref, rwkv6_scan_ref
 
 KEY = jax.random.PRNGKey(7)
+
+# The federation kernels normally run under the auto-selected interpret
+# mode (the Pallas interpreter on this CPU container).  Setting
+# REPRO_PALLAS_COMPILED=1 additionally sweeps the compiled
+# interpret=False lowering — opt-in, for hardware that can lower it.
+INTERPRET_MODES = [None] + ([False] if os.environ.get(
+    "REPRO_PALLAS_COMPILED") == "1" else [])
 
 
 @pytest.mark.parametrize("b,hq,hkv,l,d", [
@@ -79,10 +88,11 @@ def test_rwkv6_scan_bf16():
 @pytest.mark.parametrize("s,n,block", [(4, 1024, 256), (8, 4096, 4096),
                                        (16, 512, 512), (2, 65536, 65536)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_fedagg_sweep(s, n, block, dtype):
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+def test_fedagg_sweep(s, n, block, dtype, interpret):
     x = jax.random.normal(KEY, (s, n), dtype)
     w = jax.nn.softmax(jax.random.normal(KEY, (s,)))
-    out = ops.fedagg(x, w, block_n=block)
+    out = ops.fedagg(x, w, block_n=block, interpret=interpret)
     ref = fedagg_ref(x, w)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -91,7 +101,8 @@ def test_fedagg_sweep(s, n, block, dtype):
 
 @pytest.mark.parametrize("s,c,chunk,block_c", [(3, 7, 256, 4), (4, 16, 128, 16),
                                                (2, 1, 128, 32)])
-def test_fedagg_dequant_fuses_decode_and_fold(s, c, chunk, block_c):
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+def test_fedagg_dequant_fuses_decode_and_fold(s, c, chunk, block_c, interpret):
     """The compressed round engine's one-pass server step: dequantize +
     Eq. 1 fold + error-feedback residual, vs the separate numpy codec."""
     from repro.comms.compression import MIN_SCALE
@@ -104,21 +115,23 @@ def test_fedagg_dequant_fuses_decode_and_fold(s, c, chunk, block_c):
     deq = q.astype(np.float32) * scale[..., None]
     g, r = ops.fedagg_dequant(jnp.asarray(q), jnp.asarray(scale),
                               jnp.asarray(u), jnp.asarray(w),
-                              block_c=block_c)
+                              block_c=block_c, interpret=interpret)
     np.testing.assert_allclose(np.asarray(g), np.einsum("s,sct->ct", w, deq),
                                rtol=1e-6, atol=1e-7)
     np.testing.assert_allclose(np.asarray(r), u - deq, rtol=1e-5, atol=1e-7)
 
 
-def test_fedagg_dequant_matches_jnp_quantize_path():
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+def test_fedagg_dequant_matches_jnp_quantize_path(interpret):
     """Kernel quantize → fused fold agrees with the traced jnp twin the
     CPU engine path uses (quantize_dequantize_ref + einsum fold)."""
     from repro.kernels.quantize import quantize_dequantize_ref
     rng = np.random.default_rng(8)
     u = jnp.asarray((rng.normal(size=(4, 5, 128)) * 0.02).astype(np.float32))
     w = jnp.asarray(rng.dirichlet(np.ones(4)).astype(np.float32))
-    q, sc = ops.quantize_int8(u.reshape(20, 128))
-    g, _ = ops.fedagg_dequant(q.reshape(4, 5, 128), sc.reshape(4, 5), u, w)
+    q, sc = ops.quantize_int8(u.reshape(20, 128), interpret=interpret)
+    g, _ = ops.fedagg_dequant(q.reshape(4, 5, 128), sc.reshape(4, 5), u, w,
+                              interpret=interpret)
     deq = quantize_dequantize_ref(u)
     np.testing.assert_allclose(np.asarray(g),
                                np.einsum("s,sct->ct", np.asarray(w),

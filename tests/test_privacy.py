@@ -1,0 +1,327 @@
+"""The privacy tier: DP-SGD + accountant + secure aggregation.
+
+Covers the subsystem's three contracts (the property-based mask
+cancellation suite lives in ``test_privacy_properties.py``):
+
+  * the Rényi accountant's grid ε matches the analytic Gaussian
+    composition closed form;
+  * DP-SGD noise streams are a pure function of (seed, round, site,
+    step) — scan ↔ loop ↔ socket trajectories match and crash-resume
+    replays rather than re-draws;
+  * masked runs reproduce plaintext runs over the real wire (thread and
+    tcp, flat and pods), the server never sees a plaintext upload, and
+    a lease-expired site is repaired by seed recovery.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FederatedJob, TaskConfig
+from repro.privacy import (DPConfig, SecureAggClient, SecureAggState,
+                           analytic_gaussian_epsilon, gaussian_epsilon,
+                           masked_values)
+
+
+def _job(**kw):
+    base = dict(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=3, batch=2,
+                        seq=16, seed=0),
+        strategy="fedavg", rounds=3, local_steps=2, lr=1e-3, seed=0,
+        verbose=False)
+    base.update(kw)
+    return FederatedJob(**base)
+
+
+def _assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Accountant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sigma,steps,delta", [
+    (0.5, 10, 1e-5), (0.8, 6, 1e-5), (1.1, 100, 1e-6), (2.0, 40, 1e-5),
+])
+def test_rdp_epsilon_matches_analytic(sigma, steps, delta):
+    """The order-grid minimum reproduces the closed-form optimum of the
+    Gaussian RDP→DP objective (the grid can only be ≥, and within 1%)."""
+    grid = gaussian_epsilon(sigma, steps, delta)
+    ref = analytic_gaussian_epsilon(sigma, steps, delta)
+    assert np.isfinite(grid)
+    assert grid >= ref - 1e-9
+    assert grid <= ref * 1.01
+
+
+def test_epsilon_edge_cases():
+    assert gaussian_epsilon(0.0, 10, 1e-5) == float("inf")
+    assert gaussian_epsilon(1.0, 0, 1e-5) == 0.0
+    assert gaussian_epsilon(2.0, 10, 1e-5) < gaussian_epsilon(1.0, 10, 1e-5)
+    with pytest.raises(ValueError):
+        gaussian_epsilon(1.0, 10, 0.0)
+
+
+def test_dp_config_validation():
+    with pytest.raises(ValueError, match="clip"):
+        DPConfig(clip=0.0, noise_multiplier=1.0)
+    with pytest.raises(ValueError, match="mode"):
+        DPConfig(clip=1.0, mode="per-batch")
+    # clip-only (σ=0) is valid: bounded sensitivity, no noise, ε = ∞
+    DPConfig(clip=1.0, noise_multiplier=0.0)
+
+
+def test_job_privacy_report_matches_analytic():
+    res = _job(dp_clip=0.5, dp_noise_multiplier=0.8).run()
+    p = res.privacy
+    assert p["mechanism"] == "dp-sgd"
+    assert p["steps"] == 3 * 2                    # rounds × local_steps
+    assert np.isfinite(p["epsilon"])
+    ref = analytic_gaussian_epsilon(0.8, 6, 1e-5)
+    assert ref - 1e-9 <= p["epsilon"] <= ref * 1.01
+    assert _job().run().privacy is None
+
+
+def test_noise_without_clip_rejected():
+    with pytest.raises(ValueError, match="clip"):
+        _job(dp_noise_multiplier=1.0).run()
+
+
+# ---------------------------------------------------------------------------
+# DP-SGD determinism across engines, transports, and resume
+# ---------------------------------------------------------------------------
+
+
+DP_KW = dict(dp_clip=0.5, dp_noise_multiplier=0.8)
+
+
+def test_dp_scan_runs_compiled_and_matches_loop():
+    """DP-SGD traces into the fused lax.scan — round_engine='scan'
+    raising would mean the noise injection fell back to the host — and
+    the streams (keyed off the carried round counter) make the two
+    engines trajectory-identical."""
+    scan = _job(**DP_KW, round_engine="scan").run()
+    loop = _job(**DP_KW, round_engine="loop").run()
+    np.testing.assert_allclose(scan.losses, loop.losses, rtol=1e-4)
+    _assert_trees_close(scan.global_params, loop.global_params)
+
+
+def test_dp_noise_actually_perturbs():
+    noisy = _job(**DP_KW).run()
+    clean = _job().run()
+    assert not np.allclose(noisy.losses, clean.losses, rtol=1e-6)
+
+
+def test_dp_clip_only_differs_from_noise():
+    clip_only = _job(dp_clip=0.5).run()
+    noisy = _job(**DP_KW).run()
+    assert clip_only.privacy["epsilon"] == float("inf")
+    assert not np.allclose(clip_only.losses, noisy.losses, rtol=1e-6)
+
+
+def test_dp_per_example_mode_runs():
+    res = _job(**DP_KW, dp_mode="per-example").run()
+    assert np.isfinite(res.losses).all()
+    assert res.privacy["mode"] == "per-example"
+    # a different clipping unit is a different mechanism
+    assert not np.allclose(res.losses, _job(**DP_KW).run().losses, rtol=1e-6)
+
+
+def test_dp_thread_transport_matches_stacked():
+    """Socket workers derive noise from GLOBAL site ids (dp_site_base),
+    so the 1-site-per-worker deployment draws the stacked twin's exact
+    streams."""
+    stacked = _job(**DP_KW).run()
+    threaded = _job(**DP_KW, transport="thread").run()
+    np.testing.assert_allclose(threaded.losses, stacked.losses, rtol=1e-4)
+    _assert_trees_close(stacked.global_params, threaded.global_params)
+
+
+@pytest.mark.parametrize("engine", ["scan", "loop"])
+def test_dp_resume_replays_noise_stream(tmp_path, engine):
+    """Same-seed DP runs are loss-trajectory-identical across --resume
+    re-entry: the noise key folds in the carried round counter, so a
+    resumed run replays the interrupted stream instead of re-drawing."""
+    kw = dict(**DP_KW, rounds=5, ckpt_every=2, round_engine=engine)
+    ref = _job(**kw).run()
+    job = _job(**kw, checkpoint_dir=str(tmp_path / engine))
+    job.run(rounds=3)
+    res = job.run(resume=True)
+    assert res.resumed_from == 2
+    np.testing.assert_allclose(res.losses, ref.losses[3:], rtol=1e-5)
+    _assert_trees_close(res.global_params, ref.global_params)
+
+
+def test_dp_resume_refuses_mechanism_change(tmp_path):
+    job = _job(**DP_KW, rounds=4, ckpt_every=2,
+               checkpoint_dir=str(tmp_path))
+    job.run(rounds=3)
+    with pytest.raises(ValueError, match="DP settings"):
+        job.replace(dp_noise_multiplier=0.3).run(resume=True)
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation on the wire
+# ---------------------------------------------------------------------------
+
+
+def test_masked_upload_is_uniform_words():
+    """A single masked upload carries no usable plaintext: its words
+    spread over the full 2^64 range and decorrelate from the model."""
+    x = {"w": np.linspace(-1, 1, 4096).astype(np.float32)}
+    enc, meta = SecureAggClient("k", "site", 0).encode(x, 1.0, [0, 1], 7)
+    assert meta["masked"] and meta["mask_round"] == 7
+    words = jax.tree.leaves(masked_values(enc))[0].astype(np.float64)
+    assert words.std() > 2 ** 61
+    c = np.corrcoef(words, x["w"].astype(np.float64))[0, 1]
+    assert abs(c) < 0.1
+
+
+def test_secure_agg_requires_socket_transport():
+    with pytest.raises(ValueError, match="stacked"):
+        _job(secure_agg=True).run()
+
+
+def test_secure_agg_rejects_compression_and_buffered():
+    with pytest.raises(ValueError, match="compression"):
+        _job(secure_agg=True, transport="thread", compression="int8").run()
+    with pytest.raises(ValueError, match="sync"):
+        _job(secure_agg=True, transport="thread", scheduler="buffered").run()
+
+
+def test_thread_secure_agg_matches_plain():
+    task = TaskConfig(kind="tokens", sites=4, batch=2, seq=16)
+    plain = _job(transport="thread", max_dropout=1, task=task).run()
+    masked = _job(transport="thread", max_dropout=1, secure_agg=True,
+                  task=task).run()
+    np.testing.assert_allclose(masked.losses, plain.losses, rtol=1e-4)
+    _assert_trees_close(plain.global_params, masked.global_params)
+    assert masked.privacy == {"secure_agg": True, "mechanism": "none"}
+
+
+def test_thread_secure_agg_pods_matches_plain():
+    kw = dict(transport="thread", topology="pods:2",
+              task=TaskConfig(kind="tokens", sites=4, batch=2, seq=16))
+    plain = _job(**kw).run()
+    masked = _job(**kw, secure_agg=True).run()
+    np.testing.assert_allclose(masked.losses, plain.losses, rtol=1e-4)
+    _assert_trees_close(plain.global_params, masked.global_params)
+    assert masked.comm["pods"] == 2
+
+
+def test_thread_secure_agg_with_dp_composes():
+    """DP-SGD inside the site update + masks on the wire: the masked
+    run's trajectory equals the unmasked DP run's (same noise stream,
+    fixed-point transport error only)."""
+    plain = _job(**DP_KW, transport="thread").run()
+    masked = _job(**DP_KW, transport="thread", secure_agg=True).run()
+    np.testing.assert_allclose(masked.losses, plain.losses, rtol=1e-4)
+    assert masked.privacy["secure_agg"] is True
+    assert masked.privacy["mechanism"] == "dp-sgd"
+
+
+def test_tcp_secure_agg_matches_plain():
+    kw = dict(transport="tcp", rounds=2,
+              task=TaskConfig(kind="tokens", sites=2, batch=2, seq=16))
+    plain = _job(**kw).run()
+    masked = _job(**kw, secure_agg=True).run()
+    np.testing.assert_allclose(masked.losses, plain.losses, rtol=1e-4)
+    _assert_trees_close(plain.global_params, masked.global_params)
+
+
+def test_tcp_secure_agg_pods_matches_plain():
+    kw = dict(transport="tcp", rounds=2, topology="pods:2",
+              task=TaskConfig(kind="tokens", sites=2, batch=2, seq=16))
+    plain = _job(**kw).run()
+    masked = _job(**kw, secure_agg=True).run()
+    np.testing.assert_allclose(masked.losses, plain.losses, rtol=1e-4)
+    _assert_trees_close(plain.global_params, masked.global_params)
+
+
+def test_no_plaintext_crosses_the_wire(monkeypatch):
+    """With secure_agg on, every 'upload' request the clients encode is
+    a MaskedTensor tree — no float payload leaf ever reaches
+    encode_message on the upload path (thread transport shares our
+    process, so the spy sees every site's wire encode)."""
+    from repro.comms import transport as transport_mod
+    from repro.comms.codec import MaskedTensor, encode_message
+    violations = []
+
+    def spy(kind, meta, tree):
+        if kind == "upload":
+            leaves = jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, MaskedTensor))
+            violations.extend(
+                x for x in leaves if not isinstance(x, MaskedTensor))
+        return encode_message(kind, meta, tree)
+
+    monkeypatch.setattr(transport_mod, "encode_message", spy)
+    res = _job(transport="thread", secure_agg=True).run()
+    assert np.isfinite(res.losses).all()
+    assert not violations
+
+
+def test_masked_dropout_mid_round_seed_recovery():
+    """A site that joins the round's schedule then dies mid-round
+    (lease expiry) leaves its pairwise masks uncancelled; the server
+    regenerates exactly those pair streams and the surviving sum is the
+    exact weighted mean of the sites that DID report."""
+    from repro.comms.coordinator import AggregationServer
+    from repro.comms.peer import Peer
+    rng = np.random.default_rng(0)
+    models = [{"w": rng.normal(size=(64,)).astype(np.float32)}
+              for _ in range(3)]
+    weights = [1.0, 2.0, 3.0]
+    sa = SecureAggState("s", "site", np.ones((1, 3), bool))
+    srv = AggregationServer("127.0.0.1", 0, num_sites=3,
+                            case_weights=weights, download_timeout=5.0,
+                            lease_ttl=0.3, secure_agg=sa)
+    peers = [Peer(i) for i in range(3)]
+    try:
+        for i in range(3):
+            peers[i].request(srv.addr, "join", {"site": i})
+        for i in (0, 2):          # site 1 dies after joining the schedule
+            enc, meta = SecureAggClient("s", "site", i).encode(
+                models[i], weights[i], [0, 1, 2], 0)
+            ack = peers[i].upload(srv.addr, enc, 1, active_sites=3,
+                                  meta_extra=meta)
+            assert not ack["stale"]
+        deadline = time.time() + 5.0
+        g = None
+        while time.time() < deadline:
+            try:
+                g, _ = peers[0].download(srv.addr, 1, with_meta=True)
+                break
+            except RuntimeError:
+                pass
+        assert g is not None, "lease expiry never unblocked the round"
+        expect = (weights[0] * models[0]["w"] + weights[2] * models[2]["w"]) \
+            / (weights[0] + weights[2])
+        np.testing.assert_allclose(g["w"], expect, rtol=1e-6, atol=1e-6)
+        assert sa.recovered == [(0, 1)]
+    finally:
+        for p in peers:
+            p.close()
+        srv.stop()
+
+
+def test_masked_upload_rejected_without_server_state():
+    """A masked payload hitting a server that has no SecureAggState
+    errors out instead of silently folding garbage."""
+    from repro.comms.coordinator import AggregationServer
+    from repro.comms.peer import Peer
+    srv = AggregationServer("127.0.0.1", 0, num_sites=2,
+                            download_timeout=2.0)
+    peer = Peer(0)
+    try:
+        enc, meta = SecureAggClient("s", "site", 0).encode(
+            {"w": np.ones(4, np.float32)}, 1.0, [0, 1], 0)
+        with pytest.raises(RuntimeError, match="secure aggregation"):
+            peer.upload(srv.addr, enc, 1, active_sites=2, meta_extra=meta)
+    finally:
+        peer.close()
+        srv.stop()

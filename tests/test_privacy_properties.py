@@ -1,0 +1,158 @@
+"""Property-based secure-aggregation suite (needs ``hypothesis``).
+
+The masking construction's core claim, checked over arbitrary inputs:
+for ANY participant subset, dropout pattern, fold order, pod
+assignment, and round index, the masked fixed-point integer fold —
+after seed recovery for scheduled-but-missing ids — equals the
+plaintext fixed-point sum BIT-EXACTLY.  Exactness matters: the masks
+live in modular uint64 arithmetic, so any off-by-one in the pair-stream
+bookkeeping corrupts whole words, not low bits.
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.privacy import (FRAC_BITS, SecureAggClient, SecureAggState,
+                           masked_values)  # noqa: E402
+from repro.privacy.secure_agg import _fixed_point  # noqa: E402
+
+
+def _decode(int_leaves, weight_total):
+    """The float decode SecureAggState applies to a recovered int sum."""
+    inv = 1.0 / (float(2 ** FRAC_BITS) * weight_total)
+    return [(x.view(np.int64).astype(np.float64) * inv).astype(np.float32)
+            for x in int_leaves]
+
+
+def _masked_sum(acc, enc):
+    ints = jax.tree.leaves(masked_values(enc))
+    return ints if acc is None else [a + x for a, x in zip(acc, ints)]
+
+
+@st.composite
+def _mask_cases(draw):
+    n = draw(st.integers(2, 6))
+    scheduled = sorted(draw(st.sets(st.integers(0, n - 1), min_size=2,
+                                    max_size=n)))
+    folded = sorted(draw(st.sets(st.sampled_from(scheduled), min_size=1)))
+    order = list(draw(st.permutations(folded)))
+    weights = [draw(st.floats(0.25, 4.0)) for _ in range(n)]
+    round_index = draw(st.integers(0, 50))
+    return n, scheduled, order, weights, round_index
+
+
+@settings(max_examples=60, deadline=None)
+@given(_mask_cases())
+def test_masked_sum_equals_unmasked_bit_exact(case):
+    """Arbitrary subsets / dropout orders / round indices: the unmasked
+    fold is the exact plaintext fixed-point sum of the sites that DID
+    fold, and dropout repair fires iff someone scheduled went missing."""
+    n, scheduled, order, weights, round_index = case
+    rng = np.random.default_rng(round_index + 17 * n)
+    models = {i: {"a": rng.normal(size=(4,)).astype(np.float32),
+                  "b": rng.normal(size=(3,)).astype(np.float32)}
+              for i in scheduled}
+    masks = np.zeros((round_index + 1, n), bool)
+    masks[round_index, scheduled] = True
+
+    acc = None
+    for i in order:
+        enc, meta = SecureAggClient("k", "site", i).encode(
+            models[i], weights[i], scheduled, round_index)
+        assert meta["masked"] and meta["mask_round"] == round_index
+        acc = _masked_sum(acc, enc)
+
+    state = SecureAggState("k", "site", masks)
+    w_total = sum(weights[i] for i in order)
+    tdef = jax.tree.structure(models[order[0]])
+    got = state.unmask(jax.tree.unflatten(tdef, acc), round_index,
+                       set(order), w_total)
+
+    ref_int = None
+    for i in order:
+        ints = [_fixed_point(x, weights[i])
+                for x in jax.tree.leaves(models[i])]
+        ref_int = ints if ref_int is None else [a + x for a, x
+                                                in zip(ref_int, ints)]
+    ref = _decode(ref_int, w_total)
+    for g, r in zip(jax.tree.leaves(got), ref):
+        assert np.array_equal(g.reshape(-1), r)  # bit-exact
+    missing = set(scheduled) - set(order)
+    assert state.recovered == [(round_index, d) for d in sorted(missing)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 3), st.integers(0, 20), st.data())
+def test_masked_two_tier_pods_equals_flat_mean(pods, per_pod, round_index,
+                                               data):
+    """Intra-pod masking + pod-tier masking of the partials composes to
+    the same global mean as one flat unmasked fold, for arbitrary pod
+    sizes and site weights."""
+    n = pods * per_pod
+    rng = np.random.default_rng(round_index + 1)
+    models = [rng.normal(size=(6,)).astype(np.float32) for _ in range(n)]
+    weights = [data.draw(st.floats(0.5, 2.0)) for _ in range(n)]
+    pod_of = np.repeat(np.arange(pods), per_pod)
+    site_masks = np.zeros((round_index + 1, n), bool)
+    site_masks[round_index] = True
+    pod_masks = np.zeros((round_index + 1, pods), bool)
+    pod_masks[round_index] = True
+
+    partials, pod_w = [], []
+    for p in range(pods):
+        members = [int(i) for i in np.flatnonzero(pod_of == p)]
+        acc = None
+        for i in members:
+            enc, _ = SecureAggClient("k", "site", i).encode(
+                {"m": models[i]}, weights[i], members, round_index)
+            acc = _masked_sum(acc, enc)
+        rows = site_masks & (pod_of == p)[None, :]
+        w = sum(weights[i] for i in members)
+        part = SecureAggState("k", "site", rows).unmask(
+            {"m": acc[0]}, round_index, set(members), w)
+        partials.append(part["m"])
+        pod_w.append(w)
+
+    acc = None
+    for p in range(pods):
+        enc, _ = SecureAggClient("k", "pod", p).encode(
+            {"m": partials[p]}, pod_w[p], list(range(pods)), round_index)
+        acc = _masked_sum(acc, enc)
+    glob = SecureAggState("k", "pod", pod_masks).unmask(
+        {"m": acc[0]}, round_index, set(range(pods)), sum(pod_w))["m"]
+
+    flat = sum(w * m for w, m in zip(weights, models)) / sum(weights)
+    np.testing.assert_allclose(glob, flat, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 30), st.data())
+def test_mid_round_lease_expiry_recovery_property(n, round_index, data):
+    """Seed recovery after mid-round expiry, generalized: every site
+    masks against the full schedule, an arbitrary nonempty strict
+    subset actually folds, and unmask still lands on the survivors'
+    exact weighted mean."""
+    scheduled = list(range(n))
+    folded = sorted(data.draw(
+        st.sets(st.integers(0, n - 1), min_size=1, max_size=n - 1)))
+    rng = np.random.default_rng(n * 31 + round_index)
+    models = [rng.normal(size=(8,)).astype(np.float32) for _ in range(n)]
+    weights = [data.draw(st.floats(0.5, 3.0)) for _ in range(n)]
+    masks = np.zeros((round_index + 1, n), bool)
+    masks[round_index] = True
+
+    acc = None
+    for i in folded:
+        enc, _ = SecureAggClient("k", "site", i).encode(
+            {"m": models[i]}, weights[i], scheduled, round_index)
+        acc = _masked_sum(acc, enc)
+    state = SecureAggState("k", "site", masks)
+    w = sum(weights[i] for i in folded)
+    got = state.unmask({"m": acc[0]}, round_index, set(folded), w)["m"]
+
+    expect = sum(weights[i] * models[i] for i in folded) / w
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+    assert {d for _, d in state.recovered} == set(scheduled) - set(folded)
