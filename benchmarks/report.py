@@ -129,6 +129,28 @@ def privacy_table() -> str:
     return "\n".join(out)
 
 
+def cross_device_table() -> str:
+    fn = ARTIFACTS / "BENCH_cross_device.json"
+    if not fn.exists():
+        return "_run benchmarks.parallel_scaling --cross-device first_"
+    rec = json.loads(fn.read_text())
+    out = [f"_{rec['rounds']}-round sharded stacked FedAvg at "
+           f"{rec['sampling']} sampling, {rec['task']}_\n",
+           "| sites | participants/round | step (s) | wall (s) | "
+           "compile (s) | upload (B) |",
+           "|---|---|---|---|---|---|"]
+    for s, r in sorted(rec["sites"].items(), key=lambda kv: int(kv[0])):
+        out.append(f"| {s} | {r['participants_per_round']} | "
+                   f"{r['step_s']:.3f} | {r['wall_s']:.1f} | "
+                   f"{r['compile_s']:.1f} | {r['upload_bytes']} |")
+    d = rec["dense_contrast"]
+    out.append(f"\nDense contrast at S={d['sites']}: every-site rounds cost "
+               f"{d['step_s']:.3f} s/round vs the sampled row above — round "
+               "cost follows the participant count, upload bytes per "
+               "participant are constant across the whole site axis.")
+    return "\n".join(out)
+
+
 def checks_table() -> str:
     out = ["| benchmark | check | pass |", "|---|---|---|"]
     for fn in sorted(ARTIFACTS.glob("*.json")):
@@ -189,6 +211,8 @@ if __name__ == "__main__":
     print(pod_scaling_table())
     print("\n## §Privacy tier (DP-SGD ε sweep + secure aggregation)\n")
     print(privacy_table())
+    print("\n## §Cross-device scaling (sampled + sharded stacked)\n")
+    print(cross_device_table())
     print("\n## §Perf hillclimb\n")
     print(hillclimb_table())
     print("\n## Paper-claim checks\n")

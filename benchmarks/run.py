@@ -36,6 +36,7 @@ def main() -> None:
         ("pod_scaling_two_tier", pod_scaling.run),
         ("privacy_tradeoff_eps", privacy_tradeoff.run),
         ("parallel_scaling_sec3a4", parallel_scaling.run),
+        ("cross_device_scaling", parallel_scaling.cross_device),
         ("roofline_dryrun", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -79,6 +79,8 @@ from repro.configs.base import FederationConfig, MeshConfig
 from repro.core import federation as F
 from repro.core import stacking
 from repro.core.agg_engine import StreamingAccumulator, per_site_nbytes
+from repro.core.sampling import (ClientSampler, compose_participation,
+                                 resolve_sampler)
 from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
                                 RoundScheduler, availability_masks,
                                 check_engine_tag, check_privacy_tag,
@@ -283,6 +285,12 @@ class FederatedJob:
     max_dropout: int = 0
     dropout_scenario: str = "disconnect"
     case_counts: Optional[Tuple[int, ...]] = None   # Eq. 1 m_i (None=uniform)
+    # cross-device client sampling (repro.core.sampling): "none" |
+    # "uniform:K" | "poisson:q" — which sites are *scheduled* each round,
+    # intersected with the Algorithm-2 availability masks; Eq. 1 weights
+    # are 1/π inclusion-probability reweighted (Horvitz–Thompson) so the
+    # sampled aggregate is unbiased for the dense one
+    sample: Union[str, "ClientSampler"] = "none"
     # execution
     transport: Union[str, "Transport"] = "stacked"
     scheduler: Union[str, RoundScheduler] = "sync"
@@ -325,6 +333,12 @@ class FederatedJob:
     round_engine: str = "auto"
     chunk_rounds: Optional[int] = None  # rounds per compiled chunk (None=auto)
     device_data: bool = False           # generate batches on-device (tokens)
+    # stacked transport: partition the [S, N] engine buffer and the
+    # vmapped site-update axis across a device mesh (shard_map), and
+    # materialize only the sampled rows per round (gather-by-index into
+    # a [K, N] working buffer) — the cross-device engine that lets a
+    # 10,000-site job at 1% sampling run on one box
+    shard_sites: bool = False
     # bookkeeping
     checkpoint_dir: Optional[str] = None
     ckpt_every: int = 10
@@ -390,22 +404,69 @@ class FederatedJob:
             "steps": steps, "accountant": "rdp-gaussian",
             "epsilon": gaussian_epsilon(dp.noise_multiplier, steps,
                                         dp.delta)})
+        # privacy amplification by subsampling: under poisson:q client
+        # sampling each site's round contribution is released only with
+        # probability q, so the accountant composes the subsampled
+        # Gaussian mechanism instead (ε_sub ≤ ε).  uniform:K is sampling
+        # WITHOUT replacement — the Poisson amplification theorem does
+        # not cover it, so it conservatively keeps the unsampled ε.
+        sampler = self.sampler
+        if sampler.kind == "poisson" and self.sampled:
+            q = sampler.inclusion_probability(self.task.sites)
+            rep.update({
+                "sampling_rate": q, "accountant": "rdp-sgm-poisson",
+                "epsilon": gaussian_epsilon(dp.noise_multiplier, steps,
+                                            dp.delta, sampling_rate=q)})
         return rep
 
     def replace(self, **kw) -> "FederatedJob":
         return dataclasses.replace(self, **kw)
 
-    def masks(self, rounds: int) -> np.ndarray:
-        """The run's [rounds, S] Algorithm-2 availability schedule —
-        site-tier churn composed with pod-tier churn (``pod_dropout``).
-        THE mask source for every transport, so distributed workers and
-        the driver replay one schedule."""
+    @property
+    def sampler(self) -> ClientSampler:
+        """The job's resolved :class:`~repro.core.sampling.ClientSampler`."""
+        return resolve_sampler(self.sample)
+
+    @property
+    def sampled(self) -> bool:
+        """True when client sampling actually thins participation
+        (``uniform:S`` and ``poisson:1.0`` are the dense run)."""
+        return not self.sampler.is_trivial(self.task.sites)
+
+    def participation(self, rounds: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``(participate, scale)`` for the run: the [rounds, S] bool
+        participation schedule (sampled ∩ available, with the
+        deterministic availability-precedence rule on empty rounds) and
+        the [rounds, S] float32 Horvitz–Thompson ``1/π`` weight scale.
+        Pure function of the job config, so every transport, engine and
+        distributed worker replays one schedule."""
         if self.pod_dropout and not self.topo.is_pods:
             raise ValueError("pod_dropout requires a pods topology "
                              "(--topology pods:K)")
-        return availability_masks(self.task.sites, self.max_dropout,
-                                  self.seed, rounds, topology=self.topo,
-                                  pod_dropout=self.pod_dropout)
+        if self.sampled and self.strategy == "pooled":
+            raise ValueError("client sampling is meaningless for the "
+                             "pooled centralized baseline; use sample="
+                             "'none'")
+        avail = availability_masks(self.task.sites, self.max_dropout,
+                                   self.seed, rounds, topology=self.topo,
+                                   pod_dropout=self.pod_dropout)
+        return compose_participation(self.sampler, avail, self.seed)
+
+    def masks(self, rounds: int) -> np.ndarray:
+        """The run's [rounds, S] participation schedule — Algorithm-2
+        availability (site-tier churn composed with ``pod_dropout``
+        pod-tier churn) intersected with the client-sampling schedule.
+        THE mask source for every transport, so distributed workers and
+        the driver replay one schedule.  Without sampling this is the
+        availability schedule verbatim."""
+        return self.participation(rounds)[0]
+
+    def weight_scale(self, rounds: int) -> np.ndarray:
+        """[rounds, S] float32 Eq. 1 inclusion-probability factors
+        (``1/π`` on sampled rows, ``1.0`` on fallback rounds); the
+        engines multiply this into ``normalized_weights`` only when
+        :attr:`sampled` is True, keeping unsampled runs bit-identical."""
+        return self.participation(rounds)[1]
 
     def tier_schedulers(self) -> Tuple[RoundScheduler, RoundScheduler]:
         """(intra-pod, cross-pod) schedulers: the topology's per-tier
@@ -573,11 +634,22 @@ class StackedTransport(Transport):
                 "compression on the stacked transport currently supports "
                 f"fedavg/fedprox only, not {job.strategy!r}; run gcml "
                 "compression on the thread/tcp transports")
+        if job.sampled and job.device_data:
+            raise ValueError(
+                "client sampling precomputes its schedule host-side (a "
+                "pure function of (seed, round)); device_data=True "
+                "regenerates availability on device and would ignore it — "
+                "run sampled jobs with host batches")
         bundle = job.task.build()
         if job.round_engine not in ("auto", "scan", "loop"):
             raise ValueError(f"unknown round_engine {job.round_engine!r}; "
                              "known: auto, scan, loop")
         resume_round = _driver_resume_round(job, resume)
+        if job.shard_sites:
+            from repro.core import round_engine
+            return round_engine.execute_sharded(job, bundle, scheduler,
+                                                codec, rounds,
+                                                resume_round=resume_round)
         if job.round_engine != "loop":
             from repro.core import round_engine
             res = round_engine.execute_stacked(job, bundle, scheduler, codec,
@@ -615,6 +687,10 @@ class StackedTransport(Transport):
         fl_step = None                  # AOT-compiled once, timed separately
         compile_s = 0.0
         masks = job.masks(rounds)
+        # client sampling: the [rounds, S] 1/π Eq. 1 factor — only
+        # threaded when sampling actually thins participation, so dense
+        # runs keep a bit-identical round_inputs structure
+        wscale = job.weight_scale(rounds) if job.sampled else None
         pair_rng = np.random.default_rng(job.seed)
         recorder = job.recorder(rounds, ctx.fed.num_sites)
         start_round = 0
@@ -636,6 +712,8 @@ class StackedTransport(Transport):
                                      pooled=(job.strategy == "pooled"))
             ri = F.make_round_inputs(ctx, rng=pair_rng, round_index=r,
                                      active=masks[r])
+            if wscale is not None:
+                ri["weight_scale"] = jnp.asarray(wscale[r])
             extra = {}
             if strategy.needs_val_batch:
                 ri["dcml_batch"] = jax.tree.map(lambda x: x[:, 0], b)
@@ -709,6 +787,7 @@ class StackedTransport(Transport):
         local_round = None
         compile_s = 0.0
         masks = job.masks(rounds)
+        wscale = job.weight_scale(rounds) if job.sampled else None
         case_w = np.asarray(job.federation().case_weights())
         comps = [UploadCompressor(codec, job.error_feedback)
                  for _ in range(num_sites)]
@@ -758,6 +837,8 @@ class StackedTransport(Transport):
                 enc, cmeta = comps[site].encode(params_site, reference)
                 round_bytes += tree_payload_nbytes(enc)
                 w = 1.0 if topo.intra == "uniform" else float(case_w[site])
+                if wscale is not None:     # Horvitz–Thompson 1/π factor
+                    w *= float(wscale[r, site])
                 pods[int(pod_of[site])].fold(
                     decode_upload(enc, cmeta, reference), w)
             for acc in pods:
@@ -1189,6 +1270,11 @@ class _SocketTransport(Transport):
         scheduler = resolve_scheduler(job.scheduler)
         strategy = strat_base.get_strategy(job.strategy)
         topo = job.topo
+        if job.shard_sites:
+            raise ValueError("shard_sites=True shards the stacked "
+                             "simulator's [S, N] buffer; socket transports "
+                             "distribute sites as processes already — use "
+                             "transport='stacked'")
         if job.strategy == "pooled":
             raise ValueError("pooled is a single-process baseline; "
                              "run it on the stacked transport")

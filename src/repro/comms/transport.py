@@ -248,7 +248,12 @@ class Server:
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind(self.addr)
         self.addr = self._sock.getsockname()       # resolve port 0
-        self._sock.listen(64)
+        # cross-device scale: hundreds of sites dial in within the same
+        # round tick (each Peer holds ONE pooled Channel per address, but
+        # all of them connect at job start) — a backlog of 64 refused the
+        # burst past ~64 concurrent connects.  The kernel clamps this to
+        # net.core.somaxconn, so asking high is safe everywhere.
+        self._sock.listen(1024)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._serve, daemon=True)
 

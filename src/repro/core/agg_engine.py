@@ -37,9 +37,19 @@ from repro.kernels.fedagg import fedagg as _fedagg_kernel
 _EPS = 1e-12
 
 
-def normalized_weights(case_weights: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
-    """m_i/m over the active subset; zero for inactive sites."""
+def normalized_weights(case_weights: jnp.ndarray, active: jnp.ndarray,
+                       scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """m_i/m over the active subset; zero for inactive sites.
+
+    ``scale`` is the optional per-site Horvitz–Thompson factor from
+    per-round client sampling (``repro.core.sampling``): each
+    participant's weight is multiplied by ``1/π`` before the
+    self-normalization, so the numerator and denominator are each
+    unbiased for their dense counterparts (the Hájek estimator).
+    ``None`` keeps the dense path bit-identical."""
     w = case_weights.astype(jnp.float32) * active.astype(jnp.float32)
+    if scale is not None:
+        w = w * scale.astype(jnp.float32)
     return w / (jnp.sum(w) + _EPS)
 
 
@@ -148,14 +158,18 @@ class AggregationEngine:
         return self.unflatten(self.reduce_flat(flat, weights), layout)
 
     def aggregate(self, params_stacked, case_weights: jnp.ndarray,
-                  active: Optional[jnp.ndarray] = None):
+                  active: Optional[jnp.ndarray] = None,
+                  scale: Optional[jnp.ndarray] = None):
         """Eq. 1.  Returns (new stacked params, global params): the global
         model broadcast to active sites; inactive sites keep their local
-        weights (the "disconnect" scenario)."""
+        weights (the "disconnect" scenario).  ``scale`` threads the
+        client-sampling inclusion-probability reweighting into the
+        weights (see :func:`normalized_weights`); the broadcast mask
+        stays the bool ``active``."""
         s = jax.tree.leaves(params_stacked)[0].shape[0]
         if active is None:
             active = jnp.ones((s,), bool)
-        w = normalized_weights(jnp.asarray(case_weights), active)
+        w = normalized_weights(jnp.asarray(case_weights), active, scale)
         global_params = self.global_mean(params_stacked, w)
         broadcast = broadcast_to_sites(global_params, s)
         return where_site(active, broadcast, params_stacked), global_params
@@ -163,7 +177,8 @@ class AggregationEngine:
     def reduce_pods_flat(self, flat: jnp.ndarray, case_weights: jnp.ndarray,
                          active: jnp.ndarray, pod_ids, num_pods: int,
                          intra: str = "fedavg",
-                         inter: str = "fedavg") -> jnp.ndarray:
+                         inter: str = "fedavg",
+                         scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         """Two-tier Eq. 1 on the flat buffer: segment-reduce the [S, N]
         rows by pod id into per-pod partial means (a dense one-hot [P, S]
         contraction, so the padded buffer and the kernel path stay
@@ -179,6 +194,11 @@ class AggregationEngine:
         w = case_weights.astype(jnp.float32) * act
         if intra == "uniform":
             w = act
+        if scale is not None:
+            # client sampling: each participant enters its pod's partial
+            # at the 1/π-scaled weight (the pod totals then carry the
+            # scaled mass up to the cross-pod combine)
+            w = w * scale.astype(jnp.float32)
         pod_ids = jnp.asarray(pod_ids)
         onehot = (pod_ids[None, :] == jnp.arange(num_pods)[:, None]
                   ).astype(jnp.float32)                       # [P, S]
@@ -195,7 +215,8 @@ class AggregationEngine:
     def aggregate_pods(self, params_stacked, case_weights: jnp.ndarray,
                        pod_ids, num_pods: int,
                        active: Optional[jnp.ndarray] = None,
-                       intra: str = "fedavg", inter: str = "fedavg"):
+                       intra: str = "fedavg", inter: str = "fedavg",
+                       scale: Optional[jnp.ndarray] = None):
         """Two-tier Eq. 1 for an arbitrary site→pod assignment: per-pod
         partial means → cross-pod combine, all through the same padded
         [S, N] buffer.  Returns (new stacked params, global params) with
@@ -207,7 +228,7 @@ class AggregationEngine:
         flat, layout = self.flatten(params_stacked)
         gflat = self.reduce_pods_flat(flat, jnp.asarray(case_weights),
                                       jnp.asarray(active), pod_ids, num_pods,
-                                      intra, inter)
+                                      intra, inter, scale=scale)
         global_params = self.unflatten(gflat, layout)
         broadcast = broadcast_to_sites(global_params, s)
         return where_site(active, broadcast, params_stacked), global_params
@@ -236,13 +257,18 @@ class AggregationEngine:
         — this replaced the old ``ctx.hierarchical`` bool) and returns
         (new stacked params, global params)."""
         active = round_inputs["active"]
+        # client sampling (repro.core.sampling): an optional [S] float
+        # Horvitz–Thompson 1/π factor riding the round inputs; absent on
+        # unsampled jobs so their trajectories stay bit-identical
+        scale = round_inputs.get("weight_scale")
         topo = ctx.topology
         if topo.is_pods:
             s = jax.tree.leaves(params_stacked)[0].shape[0]
             return self.aggregate_pods(
                 params_stacked, ctx.case_weights, topo.pod_of(s),
-                topo.num_pods, active, topo.intra, topo.inter)
-        return self.aggregate(params_stacked, ctx.case_weights, active)
+                topo.num_pods, active, topo.intra, topo.inter, scale=scale)
+        return self.aggregate(params_stacked, ctx.case_weights, active,
+                              scale=scale)
 
 
 _DEFAULT_ENGINE: Optional[AggregationEngine] = None

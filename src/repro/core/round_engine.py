@@ -361,6 +361,10 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
     device_data = bool(job.device_data)
 
     masks = job.masks(rounds)
+    # client sampling: the [rounds, S] 1/π Eq. 1 factor rides the chunk
+    # xs only when sampling thins participation — unsampled runs keep a
+    # bit-identical scan body and carry
+    wscale = job.weight_scale(rounds) if job.sampled else None
     if needs_pair and not device_data:
         partner, is_recv = _pairings(masks, job.seed)
     else:
@@ -402,6 +406,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
                 b = x["batches"]
                 ri = {"active": x["active"], "partner": x["partner"],
                       "is_receiver": x["is_receiver"]}
+                if "wscale" in x:
+                    ri["weight_scale"] = x["wscale"]
                 st, metrics = fl_round(st, b, add_val_batches(ri, b))
                 return st, {"loss": metrics["loss"]}
             return jax.lax.scan(body, carry, xs)
@@ -434,6 +440,8 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
                   "active": jnp.asarray(masks[r0:r0 + kc]),
                   "partner": jnp.asarray(partner[r0:r0 + kc]),
                   "is_receiver": jnp.asarray(is_recv[r0:r0 + kc])}
+            if wscale is not None:
+                xs["wscale"] = jnp.asarray(wscale[r0:r0 + kc])
         carry, ys, exec_s = runner.run(kc, carry, xs)
         state = carry[0] if device_data else carry
         losses = np.asarray(ys["loss"])
@@ -504,6 +512,7 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
     state = F.init_fl_state(ctx, bundle.init_fn, jax.random.PRNGKey(job.seed))
     fl_round = F.build_fl_round(ctx)
     masks = job.masks(rounds)
+    wscale = job.weight_scale(rounds) if job.sampled else None
     case_w = jnp.asarray(np.asarray(job.federation().case_weights()),
                          jnp.float32)
     engine = get_engine()
@@ -536,14 +545,15 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
             u = jax.tree.map(
                 lambda p, g, e: p.astype(jnp.float32) - g[None] + e,
                 st["params"], ref, res)
-            w = normalized_weights(case_w, active)
+            scale = x.get("wscale")
+            w = normalized_weights(case_w, active, scale)
             fold_tree = None
             if pod_ids is not None:
-                def fold_tree(deq, active=active):
+                def fold_tree(deq, active=active, scale=scale):
                     flat, layout = engine.flatten(deq)
                     g = engine.reduce_pods_flat(flat, case_w, active, pod_ids,
                                                 topo.num_pods, topo.intra,
-                                                topo.inter)
+                                                topo.inter, scale=scale)
                     return engine.unflatten(g, layout)
             gdelta, new_res = _compressed_fold(
                 u, w, codec.name, chunkw, align, accel, engine,
@@ -588,6 +598,8 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
         xs = {"batches": _chunk_batches(bundle, r0, kc, job.local_steps,
                                         False),
               "active": jnp.asarray(masks[r0:r0 + kc])}
+        if wscale is not None:
+            xs["wscale"] = jnp.asarray(wscale[r0:r0 + kc])
         if topk:
             xs["bootstrap"] = jnp.asarray(
                 [r == 0 for r in range(r0, r0 + kc)])
@@ -808,6 +820,339 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s,
                            resumed_from=resume_round,
+                           privacy=job.privacy_report(rounds))
+
+
+# ---------------------------------------------------------------------------
+# Sharded cross-device engine — the [S, …] site state partitioned over a mesh
+# ---------------------------------------------------------------------------
+
+
+def _pack_participants(participate: np.ndarray, weight: np.ndarray,
+                       pod_of: np.ndarray, s_loc: int, num_devices: int):
+    """Pack each round's participants into static per-device slots.
+
+    Sites live in contiguous blocks of ``s_loc`` rows per device, so a
+    participant never moves between devices: each device trains exactly
+    the sampled rows it already owns and only the O(N) fold crosses the
+    mesh.  Returns ``(lidx, valid, w, pod, gsite, k_cap)`` where every
+    array is [rounds, D, k_cap]; padded slots carry ``lidx == s_loc``
+    (out of range — gathers clip to a throwaway row, scatters drop) and
+    weight 0.
+    """
+    rounds = participate.shape[0]
+    dev_of = np.arange(participate.shape[1]) // s_loc
+    counts = [[int(np.sum(participate[r] & (dev_of == d)))
+               for d in range(num_devices)] for r in range(rounds)]
+    k_cap = max(1, max(max(c) for c in counts))
+    lidx = np.full((rounds, num_devices, k_cap), s_loc, np.int32)
+    valid = np.zeros((rounds, num_devices, k_cap), bool)
+    w = np.zeros((rounds, num_devices, k_cap), np.float32)
+    pod = np.zeros((rounds, num_devices, k_cap), np.int32)
+    gsite = np.zeros((rounds, num_devices, k_cap), np.int32)
+    for r in range(rounds):
+        for d in range(num_devices):
+            sites = np.flatnonzero(participate[r] & (dev_of == d))
+            k = len(sites)
+            lidx[r, d, :k] = sites - d * s_loc
+            valid[r, d, :k] = True
+            w[r, d, :k] = weight[r, sites]
+            pod[r, d, :k] = pod_of[sites]
+            gsite[r, d, :k] = sites
+    return lidx, valid, w, pod, gsite, k_cap
+
+
+def execute_sharded(job, bundle, scheduler, codec, rounds: int,
+                    resume_round: Optional[int] = None) -> JobResult:
+    """Cross-device scale: the stacked simulator with its per-site state
+    sharded over a ``("site",)`` device mesh and only the *sampled* rows
+    trained each round.
+
+    The dense engines materialize every site every round — [S, …] params
+    AND [S, …] batches AND an S-wide vmap — which caps S at what one
+    device holds and trains.  Here the persistent per-site state (params
+    + the stateful adamw moments, plus the int8 error-feedback residual)
+    stays resident as ``shard_map``-partitioned ``[S, …]`` blocks, and a
+    round touches exactly the ``participate = sampled ∩ available`` rows
+    (``repro.core.sampling``): each device gathers its own participants
+    into a static ``[k_cap, …]`` slab, trains them vmapped, folds Eq. 1
+    partial sums (Hájek 1/π-scaled weights) through a per-pod
+    segment-reduce + ``psum``, scatters the trained rows back and
+    broadcasts the new global to the participants only — so a
+    10,000-site job at 1% sampling costs ~100 sites of compute and one
+    O(N) collective per round.
+
+    Non-participants are frozen (neither train nor see the broadcast):
+    exactly ``dropout_scenario="shutdown"`` semantics, hence the gate.
+    Sampling schedules, weights and batches are pure functions of
+    (seed, round) shared with every other engine, so a full-participation
+    sharded run is the dense run (allclose; summation order differs
+    across device blocks).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch.mesh import make_site_mesh
+
+    if isinstance(scheduler, BufferedScheduler):
+        raise ValueError("shard_sites=True runs synchronous rounds only; "
+                         "buffered-async scheduling needs the dense engine")
+    if job.strategy not in ("fedavg", "fedprox"):
+        raise ValueError("shard_sites=True supports the centrally-"
+                         "aggregated strategies (fedavg/fedprox), not "
+                         f"{job.strategy!r}")
+    if codec.name not in ("none", "int8"):
+        raise ValueError("shard_sites=True supports compression 'none' or "
+                         f"'int8', not {codec.name!r}")
+    if job.device_data:
+        raise ValueError("shard_sites=True generates only the sampled "
+                         "rows' batches host-side; device_data=True would "
+                         "regenerate all S on device")
+    if job.dp is not None:
+        raise ValueError("shard_sites=True does not thread DP-SGD noise "
+                         "keys yet; run dp jobs on the dense engines")
+    if resume_round is not None:
+        raise ValueError("shard_sites=True does not checkpoint its "
+                         "sharded carry; resume dense jobs instead")
+    thinned = job.sampled or job.max_dropout or job.pod_dropout
+    if thinned and job.dropout_scenario != "shutdown":
+        raise ValueError(
+            "shard_sites=True freezes non-participants entirely (they "
+            "neither train nor receive the broadcast), which is the "
+            "'shutdown' scenario; run sampled/dropout sharded jobs with "
+            "dropout_scenario='shutdown'")
+
+    mesh = make_site_mesh()
+    num_devices = int(mesh.devices.size)
+    num_sites = job.task.sites
+    s_loc = -(-num_sites // num_devices)
+    s_pad = s_loc * num_devices
+
+    participate, wscale = job.participation(rounds)
+    case_w = np.asarray(job.federation().case_weights(), np.float32)
+    topo = job.topo
+    if topo.is_pods:
+        topo.validate(num_sites)
+        num_pods = topo.num_pods
+        pod_of = np.asarray(topo.pod_of(num_sites), np.int32)
+        intra, inter = topo.intra, topo.inter
+    else:
+        # the flat fold is the 1-pod special case of the segment-reduce
+        num_pods, pod_of = 1, np.zeros(num_sites, np.int32)
+        intra, inter = "fedavg", "fedavg"
+    base_w = np.ones(num_sites, np.float32) if intra == "uniform" else case_w
+    lidx_a, valid_a, w_a, pod_a, gsite_a, k_cap = _pack_participants(
+        participate, base_w[None] * wscale, pod_of, s_loc, num_devices)
+
+    quant = codec.name == "int8"
+    prox = job.strategy == "fedprox"
+    local_strategy = "fedprox-local" if prox else "individual"
+    ctx = job.context(bundle, strategy=local_strategy)
+    fl_round = F.build_fl_round(ctx)
+    engine = get_engine()
+    chunkw = int(getattr(codec, "chunk", 1024))
+    align = 128 if (_accel() and quant) else 1
+    error_feedback = bool(job.error_feedback)
+    identity_k = np.arange(k_cap)
+    no_recv_k = np.zeros(k_cap, bool)
+    steps = job.local_steps
+
+    one = bundle.init_fn(jax.random.PRNGKey(job.seed))
+    opt_one = ctx.optimizer.init(one)
+    # byte accounting up front: `one`'s buffers may be donated into the
+    # carry below (device_put aliases an already-placed array)
+    stacked_one = jax.tree.map(lambda x: np.asarray(x)[None], one)
+    dense_nbytes = per_site_nbytes(stacked_one)
+    row_shard = NamedSharding(mesh, PartitionSpec("site"))
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    def bcast_rows(t):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (s_pad,) + x.shape), t)
+
+    carry = dict(zip(
+        ("params", "opt"),
+        jax.jit(lambda p, o: (bcast_rows(p), bcast_rows(o)),
+                out_shardings=(row_shard, row_shard))(one, opt_one)))
+    carry["round"] = jax.device_put(jnp.zeros((), jnp.int32), repl)
+    if prox:
+        # dense FedProx anchors round 0 at the shared init (all rows equal)
+        carry["anchor"] = jax.device_put(one, repl)
+    if quant:
+        # compressed-path convention: reference zero, so round 0's delta
+        # IS the dense bootstrap upload
+        carry["ref"] = jax.device_put(
+            jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), one),
+            repl)
+        carry["ef"] = jax.jit(
+            lambda: jax.tree.map(
+                lambda x: jnp.zeros((s_pad,) + x.shape, jnp.float32), one),
+            out_shardings=row_shard)()
+
+    rows, rep = PartitionSpec("site"), PartitionSpec()
+    carry_specs = {"params": rows, "opt": rows, "round": rep}
+    if prox:
+        carry_specs["anchor"] = rep
+    if quant:
+        carry_specs.update(ref=rep, ef=rows)
+    xs_specs = {"batches": rows, "lidx": rows, "valid": rows, "w": rows,
+                "pod": rows}
+
+    def device_step(c, x):
+        lidx, valid = x["lidx"][0], x["valid"][0]
+        w, pod = x["w"][0], x["pod"][0]
+        batches = jax.tree.map(lambda b: b[0], x["batches"])
+        st = {"params": jax.tree.map(lambda a: a[lidx], c["params"]),
+              "opt": jax.tree.map(lambda a: a[lidx], c["opt"]),
+              "strategy": {"global": c["anchor"]} if prox else {},
+              "round": c["round"]}
+        st, metrics = fl_round(st, batches,
+                               {"active": jnp.ones((k_cap,), bool),
+                                "partner": identity_k,
+                                "is_receiver": no_recv_k})
+        new_p, new_o = st["params"], st["opt"]
+        if quant:
+            u = jax.tree.map(
+                lambda p, g, e: p.astype(jnp.float32) - g[None] + e[lidx],
+                new_p, c["ref"], c["ef"])
+            vals = _qdq_tree(u, chunkw, align, codec.name)
+        else:
+            vals = new_p
+
+        def mask_pad(v):
+            m = valid.reshape((-1,) + (1,) * (v.ndim - 1))
+            return jnp.where(m, v.astype(jnp.float32), 0.0)
+
+        # padded slots gather a clipped throwaway row — zero them so the
+        # fold (weight 0) can never be polluted by a non-finite garbage
+        # value (0 · nan = nan)
+        flat, layout = engine.flatten(jax.tree.map(mask_pad, vals))
+        wk = w * valid.astype(jnp.float32)                      # [K]
+        onehot = (pod[None, :] == jnp.arange(num_pods)[:, None]
+                  ).astype(jnp.float32)                         # [P, K]
+        wp = onehot * wk[None, :]
+        # per-device partial pod sums; ONE O(P·N) psum crosses the mesh
+        pod_num = jax.lax.psum(jnp.einsum("pk,kn->pn", wp, flat), "site")
+        pod_tot = jax.lax.psum(jnp.sum(wp, axis=1), "site")
+        pod_mean = pod_num / (pod_tot[:, None] + 1e-12)
+        pod_w = ((pod_tot > 0).astype(jnp.float32) if inter == "uniform"
+                 else pod_tot)
+        gflat = jnp.einsum("p,pn->n", pod_w / (jnp.sum(pod_w) + 1e-12),
+                           pod_mean)
+        gtree = engine.unflatten(gflat, layout)
+        c2 = {"round": c["round"] + 1}
+        if quant:
+            gbc = jax.tree.map(jnp.add, c["ref"], gtree)
+            c2["ref"] = gbc
+            if error_feedback:
+                c2["ef"] = jax.tree.map(
+                    lambda e, p_, d_: e.at[lidx].set(jnp.subtract(p_, d_),
+                                                     mode="drop"),
+                    c["ef"], u, vals)
+            else:
+                c2["ef"] = c["ef"]
+        else:
+            gbc = gtree
+        if prox:
+            c2["anchor"] = gbc
+        c2["params"] = jax.tree.map(
+            lambda a, g: a.at[lidx].set(
+                jnp.broadcast_to(g[None], (k_cap,) + g.shape).astype(a.dtype),
+                mode="drop"),
+            c["params"], gbc)
+        c2["opt"] = jax.tree.map(
+            lambda a, v: a.at[lidx].set(v, mode="drop"), c["opt"], new_o)
+        losses = jnp.full((s_loc,), jnp.nan, jnp.float32).at[lidx].set(
+            metrics["loss"].astype(jnp.float32), mode="drop")
+        return c2, losses
+
+    step = shard_map(device_step, mesh, in_specs=(carry_specs, xs_specs),
+                     out_specs=(carry_specs, rows), check_rep=False)
+
+    w_all = np.zeros(s_pad, np.float32)
+    w_all[:num_sites] = case_w / case_w.sum()
+    w_all_dev = jax.device_put(jnp.asarray(w_all), row_shard)
+
+    def _global_mean(params, w):
+        flat, layout = engine.flatten(params)
+        g = jax.lax.psum(jnp.einsum("s,sn->n", w, flat), "site")
+        return engine.unflatten(g, layout)
+
+    global_mean = jax.jit(shard_map(_global_mean, mesh,
+                                    in_specs=(rows, rows), out_specs=rep,
+                                    check_rep=False))
+
+    def site_rows(site: int, r: int):
+        ks = [bundle.sample(site, r * steps + k) for k in range(steps)]
+        return {key: np.stack([x[key] for x in ks]) for key in ks[0]}
+
+    def round_xs(r: int):
+        cache = {int(s): site_rows(int(s), r) for s in np.unique(gsite_a[r])}
+        keys = next(iter(cache.values())).keys()
+        batches = {key: np.stack([np.stack(
+            [cache[int(gsite_a[r, d, i])][key] for i in range(k_cap)])
+            for d in range(num_devices)]) for key in keys}
+        xs = {"batches": batches, "lidx": lidx_a[r], "valid": valid_a[r],
+              "w": w_a[r], "pod": pod_a[r]}
+        return jax.device_put(xs, row_shard)
+
+    recorder = job.recorder(rounds, num_sites)
+    xs0 = round_xs(0)
+    t0 = time.perf_counter()
+    compiled = jax.jit(step, donate_argnums=0).lower(carry, xs0).compile()
+    compile_s = time.perf_counter() - t0
+
+    for r in range(rounds):
+        xs = xs0 if r == 0 else round_xs(r)
+        t0 = time.perf_counter()
+        carry, losses_dev = compiled(carry, xs)
+        jax.block_until_ready(losses_dev)
+        step_s = time.perf_counter() - t0
+
+        def global_fn(c=carry):
+            return (c["ref"] if quant
+                    else global_mean(c["params"], w_all_dev))
+
+        on_grid = (recorder.store is not None
+                   and r % job.ckpt_every == 0) or r == rounds - 1
+        recorder.record(r, np.asarray(losses_dev)[:num_sites],
+                        participate[r],
+                        global_fn=global_fn if on_grid else None,
+                        extra={"step_s": step_s, "wall_s": step_s,
+                               "participants": int(participate[r].sum()),
+                               "k_cap": k_cap})
+
+    uploads = int(participate.sum())
+    if quant:
+        enc = _encoded_nbytes(stacked_one, chunkw, align)
+        comm = {"upload_bytes": uploads * enc,
+                "upload_raw_bytes": uploads * dense_nbytes,
+                "download_bytes": uploads * dense_nbytes,
+                "upload_count": uploads, "compression": codec.name,
+                "simulated": True}
+        if topo.is_pods:
+            from repro.core.topology import simulated_pods_comm
+            comm.update(simulated_pods_comm(topo, participate, dense_nbytes,
+                                            intra_upload_bytes=uploads * enc,
+                                            compression=codec.name))
+    elif topo.is_pods:
+        from repro.core.topology import simulated_pods_comm
+        comm = simulated_pods_comm(topo, participate, dense_nbytes)
+    else:
+        comm = {"upload_bytes": uploads * dense_nbytes,
+                "download_bytes": uploads * dense_nbytes,
+                "upload_count": uploads, "compression": "none",
+                "simulated": True}
+    comm.update({"sharded": True, "devices": num_devices, "k_cap": k_cap})
+
+    global_params = (carry["ref"] if quant
+                     else global_mean(carry["params"], w_all_dev))
+    state = {"params": jax.tree.map(lambda x: x[:num_sites], carry["params"]),
+             "opt": jax.tree.map(lambda x: x[:num_sites], carry["opt"]),
+             "strategy": {"global": carry["anchor"]} if prox else {},
+             "round": carry["round"]}
+    return recorder.result(global_params, transport="stacked",
+                           scheduler=scheduler.name, state=state, comm=comm,
+                           compile_s=compile_s,
                            privacy=job.privacy_report(rounds))
 
 

@@ -12,9 +12,29 @@ device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import MeshConfig
+
+
+def make_site_mesh(num_devices: int | None = None) -> Mesh:
+    """One-axis ``("site",)`` mesh over the process's devices — the
+    cross-device simulator's mesh (``FederatedJob(shard_sites=True)``).
+
+    Unlike :func:`make_production_mesh` this adapts to whatever devices
+    exist (1 CPU in tests, N chips in production): the sharded round
+    engine partitions its ``[S, …]`` per-site state over this axis, so
+    site capacity scales with device count instead of device memory.
+    ``num_devices`` takes a prefix of ``jax.devices()`` (tests pin 1).
+    """
+    devs = jax.devices()
+    if num_devices is not None:
+        if not 1 <= num_devices <= len(devs):
+            raise ValueError(f"num_devices={num_devices} outside "
+                             f"[1, {len(devs)}] available devices")
+        devs = devs[:num_devices]
+    return Mesh(np.array(devs), ("site",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

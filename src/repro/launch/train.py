@@ -41,6 +41,8 @@ def run(args) -> dict:
     task = TaskConfig(
         kind=args.task, arch=args.arch, reduced=args.reduced,
         sites=args.sites, batch=args.batch, seq=args.seq,
+        volume=(args.volume,) * 3, base_filters=args.base_filters,
+        num_levels=args.num_levels,
         heterogeneity=args.het, seed=args.seed)
     # tests may force-quiet a parsed namespace by setting args.verbose
     verbose = getattr(args, "verbose", None)
@@ -55,6 +57,7 @@ def run(args) -> dict:
         task=task, strategy=args.strategy, rounds=args.rounds,
         local_steps=args.local_steps, lr=args.lr, prox_mu=args.prox_mu,
         max_dropout=args.max_dropout, dropout_scenario=args.dropout_scenario,
+        sample=args.sample, shard_sites=args.shard_sites,
         transport=args.transport, scheduler=scheduler,
         topology=args.topology, pod_dropout=args.pod_dropout,
         compression=args.compression,
@@ -82,6 +85,8 @@ def run(args) -> dict:
             "scheduler": resolve_scheduler(job.scheduler).name,
             "topology": (f"pods:{topo.num_pods}" if topo.is_pods else "flat"),
             "pod_dropout": job.pod_dropout,
+            "sample": job.sampler.spec,
+            "shard_sites": job.shard_sites,
             "compression": resolve_codec(job.compression).name,
             "error_feedback": job.error_feedback,
             "round_engine": job.round_engine,
@@ -121,12 +126,32 @@ def make_parser():
     ap.add_argument("--local-steps", type=int, default=1, dest="local_steps")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--volume", type=int, default=16, metavar="D",
+                    help="volume tasks (dose/seg): cubic volume edge "
+                         "(D, D, D)")
+    ap.add_argument("--base-filters", type=int, default=8,
+                    dest="base_filters",
+                    help="volume tasks: SA-Net channel width (shrink for "
+                         "cross-device site counts)")
+    ap.add_argument("--num-levels", type=int, default=2, dest="num_levels",
+                    help="volume tasks: SA-Net encoder depth")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--prox-mu", type=float, default=0.01, dest="prox_mu")
     ap.add_argument("--het", type=float, default=0.0, help="non-IID heterogeneity")
     ap.add_argument("--max-dropout", type=int, default=0, dest="max_dropout")
     ap.add_argument("--dropout-scenario", default="disconnect",
                     choices=["disconnect", "shutdown"], dest="dropout_scenario")
+    ap.add_argument("--sample", default="none", metavar="none|uniform:K|poisson:q",
+                    help="cross-device client sampling: schedule only K "
+                         "sites (uniform:K) or each site with probability "
+                         "q (poisson:q) per round, Eq. 1 reweighted by "
+                         "inclusion probability; composes with "
+                         "--max-dropout by intersection")
+    ap.add_argument("--shard-sites", action="store_true", dest="shard_sites",
+                    help="stacked transport: shard the [S, N] site buffer "
+                         "across the device mesh and train only the "
+                         "sampled rows per round (cross-device scale; "
+                         "fedavg/fedprox, sync, compression none/int8)")
     ap.add_argument("--transport", default="stacked",
                     choices=["stacked", "thread", "tcp"])
     ap.add_argument("--scheduler", default="sync", choices=["sync", "buffered"])

@@ -15,7 +15,8 @@ Two composable mechanisms (threat model in ``docs/architecture.md``):
     recovery for dropped/lease-expired sites at both tiers.
 """
 from repro.privacy.accountant import (analytic_gaussian_epsilon,
-                                      gaussian_epsilon)
+                                      gaussian_epsilon,
+                                      rdp_subsampled_gaussian)
 from repro.privacy.dp import (DPConfig, dp_gradients, gaussian_noise_like,
                               round_key, site_step_key)
 from repro.privacy.secure_agg import (FRAC_BITS, SecureAggClient,
@@ -25,6 +26,7 @@ from repro.privacy.secure_agg import (FRAC_BITS, SecureAggClient,
 __all__ = [
     "DPConfig", "dp_gradients", "gaussian_noise_like", "round_key",
     "site_step_key", "gaussian_epsilon", "analytic_gaussian_epsilon",
+    "rdp_subsampled_gaussian",
     "FRAC_BITS", "SecureAggClient", "SecureAggState", "is_masked",
     "masked_values",
 ]

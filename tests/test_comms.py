@@ -245,6 +245,43 @@ def test_channel_connect_budget_exhausts_typed():
         Channel(("127.0.0.1", 1), timeout=0.3, wire=wire)   # nothing listens
 
 
+def test_many_sites_connect_burst_one_round():
+    """Cross-device regression: 128 sites dial the aggregation server in
+    one synchronized burst and all upload within a single round.  The
+    listen backlog (raised from 64) must absorb the SYN storm without
+    refusing anyone, and the fold must count every site exactly once."""
+    n = 128
+    agg = AggregationServer("127.0.0.1", 0, num_sites=n, download_timeout=60)
+    chans: list = [None] * n
+    errors: list = []
+    gate = threading.Barrier(n)
+
+    def site(i):
+        try:
+            gate.wait(timeout=30)                   # connect all at once
+            ch = Channel(agg.addr, timeout=60, identity=f"site:{i}")
+            chans[i] = ch
+            ch.request("upload", {"site": i, "round": 1},
+                       {"w": np.full(4, float(i), np.float32)})
+        except Exception as e:  # noqa: BLE001 — surfaced by the assert
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=site, args=(i,)) for i in range(n)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, f"refused/failed connections: {errors[:5]}"
+        _, _, g = chans[0].request("download", {"round": 1}, None)
+        np.testing.assert_allclose(g["w"], (n - 1) / 2.0, rtol=1e-6)
+    finally:
+        for ch in chans:
+            if ch is not None:
+                ch.close()
+        agg.stop()
+
+
 @pytest.mark.parametrize("transport", ["thread", "tcp"])
 def test_flaky_wire_job_matches_clean(transport):
     """End to end: a job over an injected-fault wire (drops + dups on

@@ -149,3 +149,22 @@ def test_train_microbatch_table_covers_all_archs():
             continue
         name = get_arch(aid).CONFIG.name
         assert name in TRAIN_MICROBATCH, name
+
+
+def test_make_site_mesh_defaults_to_all_devices():
+    from repro.launch.mesh import make_site_mesh
+    mesh = make_site_mesh()
+    assert mesh.axis_names == ("site",)
+    assert mesh.devices.ndim == 1
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_make_site_mesh_prefix_and_bounds():
+    from repro.launch.mesh import make_site_mesh
+    mesh = make_site_mesh(num_devices=1)          # tests pin one device
+    assert mesh.devices.size == 1
+    assert mesh.devices.flat[0] == jax.devices()[0]
+    with pytest.raises(ValueError, match="num_devices"):
+        make_site_mesh(num_devices=0)
+    with pytest.raises(ValueError, match="num_devices"):
+        make_site_mesh(num_devices=len(jax.devices()) + 1)

@@ -92,6 +92,65 @@ def test_noise_without_clip_rejected():
 
 
 # ---------------------------------------------------------------------------
+# Privacy amplification by Poisson client sampling
+# ---------------------------------------------------------------------------
+
+
+def test_subsampled_epsilon_never_exceeds_dense():
+    """ε under poisson:q must be ≤ the unsampled ε for every q — the
+    accountant takes the tighter of the subsampled integer-order bound
+    and the (always valid) dense bound, and q=1 reduces exactly."""
+    sigma, steps, delta = 0.8, 60, 1e-5
+    dense = gaussian_epsilon(sigma, steps, delta)
+    for q in (0.001, 0.01, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999):
+        sub = gaussian_epsilon(sigma, steps, delta, sampling_rate=q)
+        assert np.isfinite(sub) and sub > 0
+        assert sub <= dense + 1e-12, (q, sub, dense)
+    assert gaussian_epsilon(sigma, steps, delta, sampling_rate=1.0) == dense
+
+
+def test_subsampled_epsilon_monotone_in_rate():
+    """Sampling less often is never worse: ε(q) non-decreasing in q,
+    and strongly amplified at small rates (ε(0.01) ≪ ε(1))."""
+    sigma, steps, delta = 1.1, 100, 1e-6
+    qs = [0.01, 0.05, 0.1, 0.25, 0.5, 1.0]
+    eps = [gaussian_epsilon(sigma, steps, delta, sampling_rate=q)
+           for q in qs]
+    assert all(a <= b + 1e-9 for a, b in zip(eps, eps[1:]))
+    assert eps[0] < 0.5 * eps[-1]
+
+
+def test_subsampled_rdp_reduces_to_dense_at_q1():
+    """The Mironov–Talwar–Zhang bound collapses to α/(2σ²) exactly when
+    every site is sampled every round."""
+    from repro.privacy import rdp_subsampled_gaussian
+    from repro.privacy.accountant import SUBSAMPLED_ORDERS, rdp_gaussian
+    sub = rdp_subsampled_gaussian(1.0, 0.9, 12, SUBSAMPLED_ORDERS)
+    np.testing.assert_allclose(sub, rdp_gaussian(0.9, 12, SUBSAMPLED_ORDERS))
+    with pytest.raises(ValueError):
+        rdp_subsampled_gaussian(1.2, 0.9, 12, SUBSAMPLED_ORDERS)  # q > 1
+    with pytest.raises(ValueError):                     # fractional orders
+        rdp_subsampled_gaussian(0.5, 0.9, 12, np.array([1.5, 2.5]))
+
+
+def test_job_privacy_report_amplifies_under_poisson():
+    """End to end: a poisson-sampled DP job reports the subsampled
+    accountant and a strictly smaller ε; uniform:K (no amplification
+    theorem) conservatively keeps the dense accounting."""
+    dense = _job(dp_clip=0.5, dp_noise_multiplier=0.8).run().privacy
+    amp = _job(dp_clip=0.5, dp_noise_multiplier=0.8, sample="poisson:0.5",
+               dropout_scenario="shutdown").run().privacy
+    assert dense["accountant"] == "rdp-gaussian"
+    assert amp["accountant"] == "rdp-sgm-poisson"
+    assert amp["sampling_rate"] == 0.5
+    assert amp["epsilon"] <= dense["epsilon"]
+    uni = _job(dp_clip=0.5, dp_noise_multiplier=0.8, sample="uniform:2",
+               dropout_scenario="shutdown").run().privacy
+    assert uni["accountant"] == "rdp-gaussian"
+    assert uni["epsilon"] == dense["epsilon"]
+
+
+# ---------------------------------------------------------------------------
 # DP-SGD determinism across engines, transports, and resume
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,293 @@
+"""Cross-device client sampling: the :mod:`repro.core.sampling` seam.
+
+Pins the contracts the sharded simulator and the privacy accountant
+lean on: masks are a pure function of (seed, round); Horvitz–Thompson
+``1/π`` reweighting keeps the Eq. 1 estimator unbiased; composition
+with the Algorithm-2 dropout chain never produces an all-zero-weight
+round; and the trivial sampler ``uniform:S`` takes the dense code path
+bit for bit, on every engine and across a ``--resume`` re-entry.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FederatedJob, TaskConfig
+from repro.core.dropout import SiteAvailability
+from repro.core.sampling import (NONE_SAMPLER, ClientSampler,
+                                 compose_participation, resolve_sampler)
+
+# ---------------------------------------------------------------------------
+# Resolver + spec round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_resolver_specs_roundtrip():
+    assert resolve_sampler(None) is NONE_SAMPLER
+    assert resolve_sampler("none") is NONE_SAMPLER
+    s = resolve_sampler("uniform:3")
+    assert (s.kind, s.count) == ("uniform", 3) and s.spec == "uniform:3"
+    p = resolve_sampler("poisson:0.25")
+    assert (p.kind, p.rate) == ("poisson", 0.25) and p.spec == "poisson:0.25"
+    # a ClientSampler passes through untouched
+    assert resolve_sampler(s) is s
+
+
+@pytest.mark.parametrize("spec", [
+    "uniform:x", "uniform:0", "uniform:-2", "poisson:zero", "poisson:0",
+    "poisson:-0.5", "bernoulli:0.5",
+])
+def test_resolver_rejects_bad_specs(spec):
+    with pytest.raises(ValueError):
+        resolve_sampler(spec)
+
+
+def test_trivial_samplers_and_inclusion_probability():
+    assert NONE_SAMPLER.is_trivial(8)
+    assert resolve_sampler("uniform:8").is_trivial(8)       # K >= S
+    assert resolve_sampler("poisson:1").is_trivial(8)       # q >= 1
+    assert not resolve_sampler("uniform:3").is_trivial(8)
+    assert resolve_sampler("uniform:2").inclusion_probability(8) == 0.25
+    assert resolve_sampler("poisson:0.4").inclusion_probability(8) == 0.4
+    assert resolve_sampler("uniform:9").inclusion_probability(8) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Mask determinism: pure function of (seed, round)
+# ---------------------------------------------------------------------------
+
+
+def test_round_mask_is_pure_function_of_seed_and_round():
+    s = resolve_sampler("poisson:0.3")
+    a = s.round_mask(16, seed=7, round_index=5)
+    b = s.round_mask(16, seed=7, round_index=5)
+    np.testing.assert_array_equal(a, b)
+    # and masks() is literally the stack of round_mask calls, so a
+    # resumed job re-entering at round r replays the identical schedule
+    stacked = s.masks(16, seed=7, rounds=8)
+    np.testing.assert_array_equal(stacked[5], a)
+    # different rounds draw from disjoint streams
+    assert any(not np.array_equal(stacked[r], stacked[r + 1])
+               for r in range(7))
+
+
+def test_uniform_mask_exact_count_every_round():
+    s = resolve_sampler("uniform:3")
+    masks = s.masks(10, seed=0, rounds=50)
+    np.testing.assert_array_equal(masks.sum(axis=1), 3)
+
+
+def test_sampler_stream_disjoint_from_dropout_chain():
+    """The sampler draws from (seed + offset, round), not the Algorithm-2
+    chain's stream — same seed must not force correlated draws."""
+    avail = SiteAvailability(16, 4, seed=3)
+    chain = np.stack([avail.step() for _ in range(20)])
+    sched = resolve_sampler("poisson:0.5").masks(16, seed=3, rounds=20)
+    assert not np.array_equal(chain, sched)
+
+
+# ---------------------------------------------------------------------------
+# Horvitz–Thompson / Hájek unbiasedness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["uniform:4", "poisson:0.25"])
+def test_horvitz_thompson_sum_is_unbiased(spec):
+    """E[Σ_{i∈sampled} v_i/π] = Σ_i v_i — the numerator (and, with
+    v = case weights, the denominator) of the Hájek estimator."""
+    num_sites, rounds = 16, 4000
+    s = resolve_sampler(spec)
+    rng = np.random.default_rng(0)
+    v = rng.uniform(0.5, 2.0, num_sites)
+    inv_pi = 1.0 / s.inclusion_probability(num_sites)
+    masks = s.masks(num_sites, seed=1, rounds=rounds)
+    est = (masks * v[None]).sum(axis=1) * inv_pi
+    np.testing.assert_allclose(est.mean(), v.sum(), rtol=0.03)
+
+
+def test_hajek_mean_unbiased_under_uniform_sampling():
+    """With uniform case weights, uniform:K self-normalizes to the mean
+    of the K sampled values — exactly unbiased for the dense mean."""
+    num_sites, rounds = 12, 4000
+    s = resolve_sampler("uniform:3")
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=num_sites)
+    masks = s.masks(num_sites, seed=2, rounds=rounds)
+    w = masks / s.inclusion_probability(num_sites)       # HT weights
+    hajek = (w * v[None]).sum(axis=1) / w.sum(axis=1)    # self-normalized
+    np.testing.assert_allclose(hajek.mean(), v.mean(), atol=0.05)
+    # per-round the estimator is the plain mean of the sampled triple
+    r0 = masks[0].astype(bool)
+    np.testing.assert_allclose(hajek[0], v[r0].mean(), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Composition with the dropout chain
+# ---------------------------------------------------------------------------
+
+
+def _chain_masks(num_sites, max_dropout, seed, rounds):
+    chain = SiteAvailability(num_sites, max_dropout, seed)
+    return np.stack([chain.step() for _ in range(rounds)])
+
+
+def test_compose_trivial_sampler_is_availability():
+    avail = _chain_masks(8, 2, seed=0, rounds=10)
+    part, scale = compose_participation(NONE_SAMPLER, avail, seed=0)
+    np.testing.assert_array_equal(part, avail)
+    np.testing.assert_array_equal(scale, avail.astype(np.float32))
+
+
+def test_compose_intersection_and_scale():
+    avail = _chain_masks(16, 4, seed=5, rounds=40)
+    s = resolve_sampler("poisson:0.4")
+    part, scale = compose_participation(s, avail, seed=5)
+    sched = s.masks(16, seed=5, rounds=40)
+    inv_pi = 1.0 / s.inclusion_probability(16)
+    for r in range(40):
+        inter = sched[r] & avail[r]
+        if inter.any():                                 # normal round
+            np.testing.assert_array_equal(part[r], inter)
+            np.testing.assert_allclose(scale[r], inter * inv_pi)
+        else:                                           # fallback round
+            np.testing.assert_array_equal(part[r], avail[r])
+            np.testing.assert_allclose(scale[r],
+                                       avail[r].astype(np.float32))
+
+
+def test_compose_never_yields_zero_weight_round():
+    """Whatever the (sampler, dropout, seed) draw, every round keeps at
+    least one participant with positive scale — the sync barrier and
+    the Eq. 1 denominator both need one."""
+    for seed in range(20):
+        for spec in ("uniform:1", "poisson:0.05"):
+            avail = _chain_masks(6, 5, seed=seed, rounds=30)
+            part, scale = compose_participation(
+                resolve_sampler(spec), avail, seed=seed)
+            assert (part & avail).sum(axis=1).min() >= 1
+            assert (part <= avail).all()                # never a dead site
+            assert (scale > 0).sum(axis=1).min() >= 1
+            np.testing.assert_array_equal(scale > 0, part)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis battery (optional dev extra, mirrors test_properties.py).
+# Guarded with a conditional define — NOT a module-level importorskip —
+# so the deterministic battery above still runs without the extra.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _spec_strategy = st.one_of(
+        st.integers(1, 48).map(lambda k: f"uniform:{k}"),
+        st.floats(0.01, 1.5, allow_nan=False).map(lambda q: f"poisson:{q}"))
+
+    @settings(max_examples=40, deadline=None)
+    @given(num_sites=st.integers(2, 48), seed=st.integers(0, 500),
+           rounds=st.integers(1, 20), spec=_spec_strategy)
+    def test_masks_shape_determinism_and_bounds(num_sites, seed, rounds,
+                                                spec):
+        s = resolve_sampler(spec)
+        a = s.masks(num_sites, seed, rounds)
+        b = s.masks(num_sites, seed, rounds)
+        np.testing.assert_array_equal(a, b)             # deterministic
+        assert a.shape == (rounds, num_sites) and a.dtype == bool
+        if s.kind == "uniform":
+            np.testing.assert_array_equal(a.sum(axis=1),
+                                          min(s.count, num_sites))
+        if s.is_trivial(num_sites):
+            assert a.all()
+
+    @settings(max_examples=40, deadline=None)
+    @given(num_sites=st.integers(2, 24), max_dropout=st.integers(0, 6),
+           seed=st.integers(0, 500), rounds=st.integers(1, 30),
+           spec=st.one_of(
+               st.integers(1, 24).map(lambda k: f"uniform:{k}"),
+               st.floats(0.01, 1.0, exclude_max=True, allow_nan=False).map(
+                   lambda q: f"poisson:{q}")))
+    def test_composition_invariants(num_sites, max_dropout, seed, rounds,
+                                    spec):
+        """∀ draws: participate ⊆ available, ≥1 participant per round,
+        scale strictly positive exactly on participating rows, and the
+        non-fallback scale is the constant 1/π."""
+        max_dropout = min(max_dropout, num_sites - 1)
+        avail = _chain_masks(num_sites, max_dropout, seed, rounds)
+        s = resolve_sampler(spec)
+        part, scale = compose_participation(s, avail, seed)
+        assert part.shape == scale.shape == (rounds, num_sites)
+        assert (part <= avail).all()
+        assert part.any(axis=1).all()
+        np.testing.assert_array_equal(scale > 0, part)
+        inv_pi = 1.0 / s.inclusion_probability(num_sites)
+        assert np.all(np.isin(np.round(scale[part], 5),
+                              np.round([1.0, inv_pi], 5)))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: dense-path equivalence + engine/resume determinism
+# ---------------------------------------------------------------------------
+
+
+def _job(**kw):
+    base = dict(
+        task=TaskConfig(kind="tokens", arch="smollm-135m", sites=4, batch=2,
+                        seq=16, seed=0),
+        strategy="fedavg", rounds=4, lr=1e-3, seed=0)
+    base.update(kw)
+    return FederatedJob(**base)
+
+
+def _flat(tree):
+    return np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree.leaves(tree)])
+
+
+def test_uniform_full_count_bit_exact_vs_dense():
+    """uniform:S schedules everyone → the job takes the dense code path
+    verbatim: identical jaxprs, bit-identical global model and losses."""
+    dense = _job().run()
+    full = _job(sample="uniform:4").run()
+    assert np.array_equal(_flat(dense.global_params),
+                          _flat(full.global_params))
+    np.testing.assert_array_equal(dense.losses, full.losses)
+
+
+def test_sampled_scan_matches_loop():
+    """The compiled multi-round scan and the retired host loop replay
+    the identical sampled schedule and agree numerically."""
+    kw = dict(sample="uniform:2", max_dropout=1,
+              dropout_scenario="shutdown", rounds=5)
+    scan = _job(**kw).run()
+    loop = _job(round_engine="loop", **kw).run()
+    np.testing.assert_allclose(_flat(scan.global_params),
+                               _flat(loop.global_params),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(scan.losses, loop.losses, rtol=1e-5)
+
+
+def test_sampled_resume_replays_schedule(tmp_path):
+    """A --resume re-entry mid-job re-derives the same sampled masks
+    from (seed, round) and lands on the reference trajectory."""
+    kw = dict(sample="poisson:0.6", max_dropout=1,
+              dropout_scenario="shutdown", rounds=5, ckpt_every=2)
+    ref = _job(**kw).run()
+    job = _job(checkpoint_dir=str(tmp_path), **kw)
+    job.run(rounds=3)
+    res = job.run(rounds=5, resume=True)
+    assert res.resumed_from == 2
+    np.testing.assert_allclose(res.losses, ref.losses[3:], rtol=1e-5)
+    np.testing.assert_allclose(_flat(res.global_params),
+                               _flat(ref.global_params),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sampled_round_participants_recorded():
+    """history[r].active reflects the sampled∩available participants,
+    not the availability mask alone."""
+    res = _job(sample="uniform:2", rounds=4).run()
+    for rec in res.history:
+        assert rec["active"] == 2
