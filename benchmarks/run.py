@@ -24,8 +24,8 @@ def main() -> None:
 
     from benchmarks import (agg_engine, comm_bytes, dose_prediction,
                             gossip_robustness, parallel_scaling, pod_scaling,
-                            privacy_tradeoff, roofline, round_engine,
-                            strategy_compare)
+                            privacy_tradeoff, robust_agg, roofline,
+                            round_engine, strategy_compare)
     benches = [
         ("dose_prediction_fig7_8_9", dose_prediction.run),
         ("strategy_compare_fig11_12", strategy_compare.run),
@@ -35,6 +35,7 @@ def main() -> None:
         ("round_engine_scan", round_engine.run),
         ("pod_scaling_two_tier", pod_scaling.run),
         ("privacy_tradeoff_eps", privacy_tradeoff.run),
+        ("robust_agg_byzantine", robust_agg.run),
         ("parallel_scaling_sec3a4", parallel_scaling.run),
         ("cross_device_scaling", parallel_scaling.cross_device),
         ("roofline_dryrun", roofline.run),

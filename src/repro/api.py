@@ -78,13 +78,15 @@ from repro.comms.transport import WireConfig
 from repro.configs.base import FederationConfig, MeshConfig
 from repro.core import federation as F
 from repro.core import stacking
-from repro.core.agg_engine import StreamingAccumulator, per_site_nbytes
+from repro.core.adversary import parse_adversary
+from repro.core.agg_engine import (StreamingAccumulator, parse_aggregator,
+                                   per_site_nbytes)
 from repro.core.sampling import (ClientSampler, compose_participation,
                                  resolve_sampler)
 from repro.core.session import (BufferedScheduler, JobResult, RoundRecorder,
-                                RoundScheduler, availability_masks,
-                                check_engine_tag, check_privacy_tag,
-                                resolve_scheduler)
+                                RoundScheduler, SyncScheduler,
+                                availability_masks, check_engine_tag,
+                                check_privacy_tag, resolve_scheduler)
 from repro.core.strategies import base as strat_base
 from repro.core.topology import FLAT, Topology, resolve_topology
 from repro.optim import adamw
@@ -314,6 +316,25 @@ class FederatedJob:
     dp_delta: float = 1e-5
     dp_mode: str = "per-site"           # clipping unit: per-site | per-example
     secure_agg: bool = False
+    # Byzantine-robustness tier (repro.core.adversary + the robust
+    # combine seam on the aggregation engine).  ``aggregator`` selects
+    # the site→global rule applied to the round's active uploads:
+    # "fedavg" (Eq. 1 weighted mean) | "trimmed:f" (coordinate-wise
+    # trimmed mean, f per side) | "median" | "krum:f" (pick the upload
+    # with the smallest distance score) | "normclip:c" (per-upload L2
+    # clip to c before the weighted mean).  ``adversary`` injects a
+    # deterministic fault plan — "sign_flip:f" | "label_flip:f" |
+    # "scale:c:f" | "noise:s:f" — where f seeded sites perturb what they
+    # expose to aggregation, bit-identically on the stacked engines and
+    # the socket workers.  ``round_deadline_s`` bounds the socket
+    # transports' sync barrier (after the deadline the round proceeds
+    # with whoever folded; stragglers are acked stale).
+    # ``max_upload_norm`` rejects norm-outlier uploads at the server
+    # with a typed ack (non-finite uploads are always rejected).
+    aggregator: str = "fedavg"
+    adversary: Optional[str] = None
+    round_deadline_s: Optional[float] = None
+    max_upload_norm: Optional[float] = None
     seed: int = 0                       # init + dropout + pairing seed
     io_timeout: float = 120.0           # socket-transport exchange bound
     # deployable wire (socket transports): hello auth secret, optional
@@ -428,6 +449,17 @@ class FederatedJob:
         return resolve_sampler(self.sample)
 
     @property
+    def aggregator_spec(self):
+        """The job's parsed :class:`~repro.core.agg_engine.AggregatorSpec`."""
+        return parse_aggregator(self.aggregator)
+
+    @property
+    def adversary_plan(self):
+        """The job's parsed :class:`~repro.core.adversary.AdversaryPlan`,
+        or None when every site is honest."""
+        return parse_adversary(self.adversary, seed=self.seed)
+
+    @property
     def sampled(self) -> bool:
         """True when client sampling actually thins participation
         (``uniform:S`` and ``poisson:1.0`` are the dense run)."""
@@ -514,7 +546,14 @@ class FederatedJob:
             loss_fn=bundle.loss_fn, logits_fn=bundle.logits_fn,
             optimizer=adamw(self.lr, weight_decay=self.weight_decay),
             grad_clip=self.grad_clip, dcml_lr=self.dcml_lr or self.lr,
-            topology=topo, privacy=self.dp, dp_site_base=dp_site_base)
+            topology=topo, privacy=self.dp, dp_site_base=dp_site_base,
+            aggregator=self.aggregator_spec,
+            # in-round fault injection runs only on the full-federation
+            # stacked view; a worker's 1-site (or local-strategy resized)
+            # context stays honest — socket workers perturb their wire
+            # payload host-side at the same seam instead
+            adversary=(self.adversary_plan
+                       if num_sites is None and strategy is None else None))
 
     def recorder(self, rounds: int, num_sites: int) -> RoundRecorder:
         return RoundRecorder(rounds, verbose=self.verbose,
@@ -588,6 +627,78 @@ def _socket_resume_point(job: FederatedJob, num_sites: int):
     return rr, g
 
 
+def _validate_robustness(job: FederatedJob) -> None:
+    """Fail-loud composition guards for the robustness seams, shared by
+    every transport.  Robust rules need to SEE the round's individual
+    plaintext uploads side by side; compositions that hide, quantize or
+    stream them away are typed errors, never silent downgrades."""
+    spec = job.aggregator_spec          # raises on a malformed spec string
+    plan = job.adversary_plan           # raises on a malformed plan string
+    if (not spec.robust and plan is None and job.max_upload_norm is None
+            and job.round_deadline_s is None):
+        return
+    if job.strategy == "pooled":
+        raise ValueError("the pooled centralized baseline has no "
+                         "federation to attack or robustly aggregate")
+    sites = job.task.sites
+    if ((spec.robust or plan is not None)
+            and resolve_codec(job.compression).name != "none"):
+        raise ValueError(
+            "robust aggregation and the adversary harness operate on "
+            "plaintext fp32 uploads; delta-quantized uploads would fold "
+            "attacker-shaped residuals into honest error feedback — use "
+            "compression='none'")
+    if spec.robust and job.secure_agg:
+        raise ValueError(
+            "robust rules rank individual uploads; secure aggregation "
+            "masks every upload so only their sum is visible — the rule "
+            "would rank ciphertext.  Disable secure_agg or use "
+            "aggregator='fedavg'")
+    if job.max_upload_norm is not None and job.secure_agg:
+        raise ValueError(
+            "max_upload_norm inspects per-upload L2 norms; secure "
+            "aggregation uploads fixed-point ciphertext whose norm is "
+            "meaningless — disable one of them")
+    if (plan is not None or spec.robust) and job.shard_sites:
+        raise ValueError(
+            "the sharded engine folds partial sums per device shard and "
+            "runs local-strategy contexts — it has neither the full "
+            "[S, N] buffer a robust rule needs nor an in-round fault "
+            "seam; run robustness jobs with shard_sites=False")
+    if spec.rank_based:
+        if job.strategy not in ("fedavg", "fedprox"):
+            raise ValueError(
+                "rank-based robust rules (trimmed/median/krum) combine "
+                f"centrally-aggregated uploads; strategy {job.strategy!r} "
+                "has no central combine — use fedavg/fedprox (or "
+                "aggregator='normclip:c', which gossip honors too)")
+        intra_s, inter_s = job.tier_schedulers()
+        if (isinstance(intra_s, BufferedScheduler)
+                or isinstance(inter_s, BufferedScheduler)):
+            raise ValueError(
+                "rank-based robust rules need the round's uploads side "
+                "by side; a buffered scheduler folds each arrival into a "
+                "running sum and discards it — use scheduler='sync'")
+        if spec.name == "trimmed" and 2 * spec.f >= sites:
+            raise ValueError(
+                f"trimmed:{spec.f} discards 2f={2 * spec.f} of {sites} "
+                "uploads — the trim must leave a majority (2f < S)")
+        if spec.name == "krum" and spec.f > max(sites - 3, 0):
+            raise ValueError(
+                f"krum:{spec.f} scores each upload against its "
+                f"S−f−2 nearest neighbours and needs S ≥ f+3 (S={sites})")
+    if (spec.name == "normclip"
+            and job.strategy not in ("fedavg", "fedprox", "gcml")):
+        raise ValueError(
+            "normclip bounds uploads at a central fold (fedavg/fedprox) "
+            f"or incoming gossip deltas (gcml), not {job.strategy!r}")
+    if (job.round_deadline_s is not None
+            and resolve_scheduler(job.scheduler).name != "sync"):
+        raise ValueError(
+            "round_deadline_s bounds the sync barrier; scheduler "
+            f"{job.scheduler!r} has no barrier to bound")
+
+
 class StackedTransport(Transport):
     """Single-process vmapped simulator (all strategies, all schedulers).
 
@@ -606,6 +717,27 @@ class StackedTransport(Transport):
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
         buffered = isinstance(scheduler, BufferedScheduler)
+        _validate_robustness(job)
+        if job.round_deadline_s is not None:
+            raise ValueError(
+                "round_deadline_s bounds a real wall-clock barrier; the "
+                "stacked simulator has none — run on transport='thread' "
+                "or 'tcp'")
+        if job.max_upload_norm is not None:
+            raise ValueError(
+                "max_upload_norm is server-side upload sanitation; the "
+                "stacked simulator has no server — run on "
+                "transport='thread' or 'tcp'")
+        if job.adversary_plan is not None and buffered:
+            raise ValueError(
+                "the stacked buffered loop trains local-only contexts "
+                "with no in-round fault seam; run adversarial buffered "
+                "jobs on the thread/tcp transports")
+        if job.aggregator_spec.robust and buffered:
+            raise ValueError(
+                "the stacked buffered loop folds arrivals into a plain "
+                "running sum; robust buffered rounds (normclip) run on "
+                "the thread/tcp transports' server")
         if job.secure_agg:
             raise ValueError(
                 "secure_agg masks real uploads between distrusting "
@@ -1048,6 +1180,13 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
     losses: List[float] = []
     base_round = start_round  # server round of the global this site holds
     stale_uploads = 0
+    rejected_uploads = 0
+    # deterministic Byzantine harness: whether THIS worker is in the
+    # plan's seeded malicious set is a pure function of (seed, S), so
+    # every transport replays the same adversary without negotiation
+    plan = job.adversary_plan
+    malicious = plan is not None and plan.is_malicious(site_id,
+                                                       job.task.sites)
     # upload compression: one compressor per outgoing stream, so the
     # error-feedback residuals compensate the right channel
     codec = resolve_codec(job.compression)
@@ -1118,6 +1257,8 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
         for r in range(start_round, rounds):
             me_active = bool(masks[r, site_id])
             b = bundle.site_batches(site_id, r, job.local_steps)
+            if malicious and plan.flips_labels:
+                b = plan.perturb_batch(b)
             # -- decentralized pre-exchange: gossip + regional DCML ------
             if dcml_step is not None and me_active:
                 asg = peer.get_assignment(coord_addr, r + 1)
@@ -1127,6 +1268,9 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 if asg["is_sender"][site_id]:
                     target = recv_of[site_id]
                     wire_tree = _site_host_tree(state["params"])
+                    if malicious and plan.flips_params:
+                        # P2P: the pushed model is this site's "upload"
+                        wire_tree = plan.perturb_tree(wire_tree, site_id, r)
                     smeta = None
                     if peer_comp is not None:   # quantize the P2P push too
                         wire_tree, smeta = peer_comp.encode(wire_tree)
@@ -1162,6 +1306,12 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 # this site last pulled — the FedBuff staleness anchor
                 upload_round = base_round + 1 if buffered else r + 1
                 payload = _site_host_tree(state["params"])
+                if malicious and plan.flips_params:
+                    # same seam as the stacked engines: only the WIRE
+                    # payload at round r is perturbed — the site's own
+                    # state stays honest, matching the traced round body
+                    # where post_exchange overwrites the poisoned rows
+                    payload = plan.perturb_tree(payload, site_id, r)
                 cmeta = None
                 if sa is not None:
                     # mask against the round's *scheduled* barrier peers
@@ -1190,7 +1340,15 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 ack = peer.upload(agg_addr, payload, upload_round,
                                   active_sites=int(masks[r][pod_members].sum()),
                                   meta_extra=cmeta)
-                if ack.get("stale"):
+                if ack.get("rejected"):
+                    # server-side sanitation refused the fold.  Drop any
+                    # error-feedback residual: compensating next round
+                    # for an upload the server never folded would
+                    # re-inject the rejected content
+                    rejected_uploads += 1
+                    if comp is not None:
+                        comp.residual = None
+                elif ack.get("stale"):
                     # rejected as too stale: the resync below restores a
                     # small staleness for the next upload
                     stale_uploads += 1
@@ -1232,6 +1390,7 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                           and comp.residual is not None})
         streams = [c for c in (comp, peer_comp) if c is not None]
         return {"losses": losses, "stale_uploads": stale_uploads,
+                "rejected_uploads": rejected_uploads,
                 "params": _site_host_tree(state["params"]),
                 "upload_payload_bytes":
                     sum(c.encoded_bytes for c in streams) + sa_bytes,
@@ -1303,6 +1462,16 @@ class _SocketTransport(Transport):
                 raise ValueError(
                     "secure aggregation protects centrally-aggregated "
                     f"uploads (fedavg/fedprox), not {job.strategy!r}")
+        _validate_robustness(job)
+        if job.round_deadline_s is not None:
+            if topo.is_pods:
+                raise ValueError(
+                    "round_deadline_s bounds the flat star's sync "
+                    "barrier; per-tier pod deadlines are not wired — "
+                    "use topology='flat'")
+            # the deadline rides the scheduler so the server's watcher
+            # thread can read it off its own round policy
+            scheduler = SyncScheduler(round_deadline_s=job.round_deadline_s)
         fed = job.federation()
         num_sites = fed.num_sites
         start_round = 0
@@ -1337,6 +1506,8 @@ class _SocketTransport(Transport):
                     ckpt_every=job.ckpt_every,
                     codec=resolve_codec(job.compression),
                     error_feedback=job.error_feedback,
+                    aggregator=job.aggregator,
+                    max_upload_norm=job.max_upload_norm,
                     mask_secret=(job.mask_secret if job.secure_agg
                                  else None)).start()
                 servers.append(pod_stack)
@@ -1355,7 +1526,8 @@ class _SocketTransport(Transport):
                     lease_ttl=job.lease_ttl, initial_round=start_round,
                     initial_global=initial_global,
                     ckpt_store=recorder.store, ckpt_every=job.ckpt_every,
-                    secure_agg=sa_state)
+                    secure_agg=sa_state, aggregator=job.aggregator,
+                    max_upload_norm=job.max_upload_norm)
                 servers.append(agg)
                 agg_addr = agg.addr
             if strategy.needs_pairing:
@@ -1418,6 +1590,14 @@ class _SocketTransport(Transport):
                            for i in range(num_sites)])
         masks = job.masks(rounds)
         stale = [per_site[i].get("stale_uploads", 0) for i in range(num_sites)]
+        # server-authoritative sanitation count (covers decode failures a
+        # site never learned the reason for); sites report their own view
+        # in the per-site dicts for tests
+        rejected = 0
+        if pod_stack is not None:
+            rejected = pod_stack.rejected_uploads
+        elif agg is not None:
+            rejected = agg.rejected_uploads
         round_wall = recorder.elapsed / max(exec_rounds, 1)
         for ri, r in enumerate(range(start_round, rounds)):
             extra = {"wall_s": round_wall}
@@ -1440,6 +1620,7 @@ class _SocketTransport(Transport):
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, comm=comm,
                                resumed_from=resumed_from,
+                               rejected_uploads=rejected,
                                privacy=job.privacy_report(rounds))
 
     def _run_workers(self, job, num_sites, agg_addr, coord_addr, rounds,

@@ -13,6 +13,7 @@ assignment — the sites then exchange models directly peer-to-peer.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -21,7 +22,9 @@ from repro.comms import compression
 from repro.comms.codec import encode_message
 from repro.comms.membership import LeaseRegistry
 from repro.comms.transport import Server, WireConfig, WireStats
-from repro.core.agg_engine import StreamingAccumulator
+from repro.core.agg_engine import (StreamingAccumulator, clip_tree_norm,
+                                   parse_aggregator, robust_combine_trees,
+                                   tree_all_finite, tree_l2_norm)
 from repro.core.gossip import pair_sites
 from repro.core.session import RoundScheduler, SyncScheduler
 
@@ -63,8 +66,28 @@ class AggregationServer:
                  lease_ttl: Optional[float] = None,
                  initial_round: int = 0, initial_global: Any = None,
                  ckpt_store=None, ckpt_every: int = 10,
-                 secure_agg=None):
+                 secure_agg=None, aggregator=None,
+                 max_upload_norm: Optional[float] = None):
         self.num_sites = num_sites
+        # robust combine rule for the site→global reduction.  Rank-based
+        # rules (trimmed/median/krum) need the round's individual rows,
+        # so they trade the O(N) streaming fold for an O(S·N) row buffer
+        # — and they cannot see through secure-agg masks at all.
+        self.aggregator = parse_aggregator(aggregator)
+        if self.aggregator.rank_based and secure_agg is not None:
+            raise ValueError(
+                f"aggregator {self.aggregator.name!r} is rank-based: it "
+                "must inspect individual site updates, which secure "
+                "aggregation's pairwise masks hide by design — use "
+                "normclip or fedavg with secure_agg")
+        self._rows: Dict[int, Any] = {}
+        # upload sanitation: non-finite uploads always reject;
+        # max_upload_norm additionally rejects L2-norm outliers.  A
+        # rejected site leaves the round's barrier (like dropout), so
+        # sync rounds don't deadlock waiting on a poisoned upload.
+        self.max_upload_norm = max_upload_norm
+        self._rejected: Set[int] = set()
+        self.rejected_uploads = 0
         # secure aggregation (repro.privacy.SecureAggState): masked
         # uploads fold as raw uint64 modular sums; finalize decodes the
         # fixed point AFTER recovering the pair seeds of any scheduled
@@ -108,6 +131,19 @@ class AggregationServer:
         if self.registry is not None:
             self._reaper = threading.Thread(target=self._reap, daemon=True)
             self._reaper.start()
+        # sync round deadline (SyncScheduler.round_deadline_s): once the
+        # first upload of a round has folded and the deadline elapses,
+        # finalize with whoever reported — stragglers hit the ordinary
+        # stale-ack path next round
+        self.round_deadline_s = getattr(self.scheduler,
+                                        "round_deadline_s", None)
+        self._first_fold_t: Optional[float] = None
+        self._deadline_stop = threading.Event()
+        self._deadline_thread: Optional[threading.Thread] = None
+        if self.round_deadline_s:
+            self._deadline_thread = threading.Thread(
+                target=self._deadline_watch, daemon=True)
+            self._deadline_thread.start()
         # writable decode lets the accumulator scale fp32 uploads in place
         self.server = Server(host, port, self._handle, decode_writable=True,
                              stats=self.stats, wire=wire).start()
@@ -133,7 +169,9 @@ class AggregationServer:
         A masked round takes the integer path: the raw modular sum,
         repaired for scheduled-but-missing participants, then decoded
         from fixed point at the plaintext weight total the uploads'
-        meta carried."""
+        meta carried.  A rank-based aggregator instead combines the
+        round's row buffer (weight = the row count — rank rules are
+        unweighted over their inputs)."""
         if self._masked_round is not None:
             tree = self.secure_agg.unmask(
                 self._acc.finalize_int(), self._masked_round,
@@ -142,6 +180,10 @@ class AggregationServer:
             self._masked_weight = 0.0
             self._masked_round = None
             return tree, w
+        if self.aggregator.rank_based:
+            rows = [self._rows[s] for s in sorted(self._rows)]
+            self._rows = {}
+            return robust_combine_trees(rows, self.aggregator), float(len(rows))
         w = self._acc.weight_total
         return self._acc.finalize(), w
 
@@ -151,8 +193,14 @@ class AggregationServer:
         (:class:`repro.comms.pods.PodAggregationServer`) overrides this to
         finalize into a *partial* for its leader instead — the round only
         advances when the leader installs the root global."""
-        self._global, _ = self._finalize_buffer()
+        tree, _ = self._finalize_buffer()
+        if tree is not None:
+            self._global = tree
+        # (tree is None when every upload of the round was rejected —
+        # the current global is re-published and the round advances)
         self._folded = set()
+        self._rejected = set()
+        self._first_fold_t = None
         self._round += 1
         self._globals[self._round] = self._global
         for old in [k for k in self._globals
@@ -180,11 +228,20 @@ class AggregationServer:
             return int(scheduled)
         return self.registry.expected(int(scheduled))
 
+    def _barrier_expected(self) -> int:
+        """Lock held.  The barrier expectation after every shrink:
+        Algorithm-2 scheduled count, minus expired leases, minus the
+        sites whose upload this round was REJECTED by sanitation (a
+        rejected site cannot satisfy the barrier any more than a dead
+        one — waiting on it would deadlock the round)."""
+        return max(self._expected(self._last_scheduled)
+                   - len(self._rejected), 0)
+
     def _maybe_finalize(self):
         """Lock held.  Re-check the barrier after membership shrank —
         the uploads already folded may now be everyone we can expect."""
         if self._folded and self.scheduler.ready(
-                len(self._folded), self._expected(self._last_scheduled)):
+                len(self._folded), self._barrier_expected()):
             self._on_ready()
 
     def _reap(self):
@@ -197,6 +254,34 @@ class AggregationServer:
                         (self._round + 1, s) for s in dead)
                     self._maybe_finalize()
                     self._lock.notify_all()
+
+    def _deadline_watch(self):
+        period = max(float(self.round_deadline_s) / 4.0, 0.01)
+        while not self._deadline_stop.wait(period):
+            with self._lock:
+                if (self._folded and self._first_fold_t is not None
+                        and time.time() - self._first_fold_t
+                        >= self.round_deadline_s):
+                    self._on_ready()
+                    self._lock.notify_all()
+
+    def _reject_upload(self, site: int, reason: str) -> bytes:
+        """Record a sanitation rejection and re-check the barrier (the
+        rejected site just left the round's expectation — the uploads
+        already folded may now complete it; an all-rejected round
+        re-publishes the current global)."""
+        with self._lock:
+            if site not in self._folded and site not in self._rejected:
+                self._rejected.add(site)
+                self.rejected_uploads += 1
+                if self.scheduler.ready(len(self._folded),
+                                        self._barrier_expected()):
+                    self._on_ready()
+                self._lock.notify_all()
+            rnd = self._round
+        return encode_message(
+            "ack", {"round": rnd, "stale": False, "rejected": True,
+                    "reason": reason}, None)
 
     def _handle(self, kind, meta, tree):
         if kind == "upload":
@@ -230,7 +315,33 @@ class AggregationServer:
                     # and re-uploads against a fresh one (or dense)
                     return encode_message(
                         "ack", {"round": self._round, "stale": True}, None)
-                tree = compression.decode_upload(tree, meta, reference)
+                try:
+                    tree = compression.decode_upload(tree, meta, reference)
+                except Exception as exc:
+                    # undecodable payload (e.g. wire corruption that got
+                    # past the codec's framing) — rejected, not folded
+                    return self._reject_upload(site, f"decode: {exc}")
+            if not masked:
+                # upload sanitation, outside the lock (the norm scan is
+                # O(N)).  Only current-round-admissible uploads count as
+                # rejections — a stale poisoned upload is just stale —
+                # so pre-check staleness first; the fold re-checks it.
+                with self._lock:
+                    upload_round = int(meta.get("round", self._round + 1))
+                    self._wait_for_upload_round(upload_round)
+                    if self._discount(upload_round) is None:
+                        return encode_message(
+                            "ack", {"round": self._round, "stale": True},
+                            None)
+                if not tree_all_finite(tree):
+                    return self._reject_upload(site, "non_finite")
+                if self.max_upload_norm is not None and \
+                        tree_l2_norm(tree) > self.max_upload_norm:
+                    return self._reject_upload(site, "norm_outlier")
+                if self.aggregator.name == "normclip":
+                    # normclip stays streaming-compatible: clip the
+                    # upload's global L2 norm BEFORE it folds
+                    tree = clip_tree_norm(tree, self.aggregator.c)
             with self._lock:
                 upload_round = int(meta.get("round", self._round + 1))
                 self._wait_for_upload_round(upload_round)
@@ -254,6 +365,10 @@ class AggregationServer:
                             meta.get("weight", self.weights[site]))
                         self._masked_round = int(
                             meta.get("mask_round", upload_round - 1))
+                    elif self.aggregator.rank_based:
+                        # rank rules need the round's individual rows —
+                        # buffered, not streamed (weights don't apply)
+                        self._rows[site] = tree
                     else:
                         # a pod leader re-uploading a pod partial carries
                         # the pod's folded (active-member) weight in the
@@ -262,12 +377,14 @@ class AggregationServer:
                         w = float(meta.get("weight", self.weights[site]))
                         self._acc.fold(tree, w * discount)
                     self._folded.add(site)
+                    if self._first_fold_t is None:
+                        self._first_fold_t = time.time()
                 if self.registry is not None:       # an upload is a renewal
                     self.registry.renew(site)
                 self._last_scheduled = int(meta.get("active_sites",
                                                     self.num_sites))
-                expected = self._expected(self._last_scheduled)
-                if self.scheduler.ready(len(self._folded), expected):
+                if self.scheduler.ready(len(self._folded),
+                                        self._barrier_expected()):
                     self._on_ready()
             return encode_message("ack", {"round": self._round,
                                           "stale": False}, None)
@@ -285,8 +402,10 @@ class AggregationServer:
                         None)
                 return encode_message("global", {"round": self._round}, self._global)
         if kind == "status":
-            return encode_message("status", {"round": self._round,
-                                             "pending": len(self._folded)}, None)
+            return encode_message(
+                "status", {"round": self._round,
+                           "pending": len(self._folded),
+                           "rejected_uploads": self.rejected_uploads}, None)
         if kind == "join":
             # lease admission; the reply doubles as the late-joiner
             # bootstrap — current round + a dense copy of the current
@@ -317,8 +436,11 @@ class AggregationServer:
 
     def stop(self):
         self._reaper_stop.set()
+        self._deadline_stop.set()
         if self._reaper is not None:
             self._reaper.join(timeout=2)
+        if self._deadline_thread is not None:
+            self._deadline_thread.join(timeout=2)
         self.server.stop()
 
 

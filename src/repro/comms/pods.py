@@ -74,6 +74,8 @@ class PodAggregationServer(AggregationServer):
     def _on_ready(self):                     # lock held
         self._partial, self._partial_weight = self._finalize_buffer()
         self._folded = set()
+        self._rejected = set()
+        self._first_fold_t = None
         self._partial_round += 1
         self._lock.notify_all()
 
@@ -129,8 +131,16 @@ class PodTransport:
                  start_round: int = 0, initial_global: Any = None,
                  ckpt_store=None, ckpt_every: int = 10,
                  codec=None, error_feedback: bool = True,
-                 mask_secret: Optional[str] = None):
+                 mask_secret: Optional[str] = None,
+                 aggregator=None, max_upload_norm: Optional[float] = None):
         topology.validate(num_sites)
+        # robust combine applies at the INTRA tier — each pod defends
+        # against its own members (the Byzantine surface); the root
+        # combines already-sanitized pod partials with the plain
+        # weighted fold, matching the stacked engine's
+        # ``reduce_pods_robust`` (partials weighted by member count).
+        self.aggregator = aggregator
+        self.max_upload_norm = max_upload_norm
         # codec: leader→root partial re-uploads ride the same upload
         # compressor as site uploads (delta against the last pulled root
         # global, error-feedback residual per leader) — the WAN link
@@ -215,7 +225,9 @@ class PodTransport:
                                  wire=self.wire, lease_ttl=self.lease_ttl,
                                  initial_round=self.start_round,
                                  initial_global=self.initial_global,
-                                 secure_agg=self._pod_sa[i])
+                                 secure_agg=self._pod_sa[i],
+                                 aggregator=self.aggregator,
+                                 max_upload_norm=self.max_upload_norm)
             for i in range(p)]
         self._leaders = [threading.Thread(target=self._leader, args=(i,),
                                           daemon=True) for i in range(p)]
@@ -233,6 +245,15 @@ class PodTransport:
             s.stop()
         if self.root is not None:
             self.root.stop()
+
+    @property
+    def rejected_uploads(self) -> int:
+        """Sanitation rejections across both tiers (pod servers see the
+        site uploads; the root sees leader partials)."""
+        total = sum(s.rejected_uploads for s in self.pod_servers)
+        if self.root is not None:
+            total += self.root.rejected_uploads
+        return total
 
     def site_addr(self, site_id: int):
         """The aggregation address a site worker should use — its pod

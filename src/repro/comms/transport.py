@@ -97,9 +97,18 @@ class PeerClosed(WireError):
     code = "closed"
 
 
+class CorruptFrameError(WireError):
+    """A frame arrived but its payload would not decode (byte-level wire
+    corruption).  Retriable client-side: the sender's copy is intact, so
+    the request is simply resent — only an exhausted retry budget turns
+    corruption into a terminal :class:`ChannelError`."""
+
+    code = "corrupt"
+
+
 _ERROR_CODES = {cls.code: cls for cls in
                 (WireError, AuthError, ProtocolVersionError, ChannelError,
-                 PeerClosed)}
+                 PeerClosed, CorruptFrameError)}
 
 
 def raise_remote_error(addr: Address, rmeta: Dict[str, Any]):
@@ -135,8 +144,8 @@ class WireConfig:
                             attempts: ``backoff_base * 2**k``, at most
                             ``backoff_cap`` seconds).
     ``flaky``             — fault-injection spec for tests, e.g.
-                            ``"drop=0.2,dup=0.1,delay=0.005,seed=3"``
-                            (see :class:`FlakyChannel`).
+                            ``"drop=0.2,dup=0.1,delay=0.005,corrupt=0.02,
+                            seed=3"`` (see :class:`FlakyChannel`).
     """
 
     secret: Optional[str] = None
@@ -184,6 +193,18 @@ class WireConfig:
 def backoff_delay(attempt: int, base: float, cap: float) -> float:
     """Capped exponential backoff before reconnect ``attempt`` (1-based)."""
     return min(cap, base * (2.0 ** (attempt - 1)))
+
+
+def _decode_checked(data: bytes, writable: bool = False):
+    """Decode a frame, surfacing garbled bytes as the typed
+    :class:`CorruptFrameError` (its code rides the error reply, so the
+    client retries instead of treating the wire as dead — and a barrier
+    never hangs on an upload whose bytes were mangled in flight)."""
+    try:
+        return decode_message(data, writable=writable)
+    except Exception as e:  # noqa: BLE001 — any codec failure is corruption
+        raise CorruptFrameError(
+            f"undecodable frame ({len(data)} bytes): {e!r}") from e
 
 
 class WireStats:
@@ -305,7 +326,7 @@ class Server:
                     return
                 stat_kind, n_rpc = "?", 1
                 try:
-                    kind, meta, tree = decode_message(
+                    kind, meta, tree = _decode_checked(
                         data, writable=self.decode_writable)
                     stat_kind = kind
                     if kind == HELLO:
@@ -334,7 +355,7 @@ class Server:
                             raise WireError(
                                 f"stream reassembly mismatch: got "
                                 f"{len(whole)} bytes, expected {meta['total']}")
-                        ikind, imeta, itree = decode_message(
+                        ikind, imeta, itree = _decode_checked(
                             whole, writable=self.decode_writable)
                         reply = self.handler(ikind, imeta, itree)
                         if reply is None:
@@ -402,6 +423,9 @@ class Channel:
             try:
                 self._connect()
                 return
+            except CorruptFrameError as e:
+                last = e                       # garbled hello: resend it
+                self._close_sock()
             except WireError:
                 raise                          # auth/version: not retriable
             except (ConnectionError, OSError) as e:
@@ -457,15 +481,31 @@ class Channel:
                 ) -> Tuple[str, Dict[str, Any], Any]:
         data = encode_message(kind, meta, tree)
         mms = self.wire.max_message_size
-        with self._lock:
-            if mms is not None and len(data) > mms:
-                reply = self._roundtrip(self._stream_frames(kind, data, mms))
-            else:
-                reply = self._roundtrip([frame(data)])
-        rkind, rmeta, rtree = decode_message(reply)
-        if rkind == "error":
-            raise_remote_error(self.addr, rmeta)
-        return rkind, rmeta, rtree
+        last = None
+        # wire corruption of the FINAL frame surfaces here (the server's
+        # typed "corrupt" error reply); our copy of the request is
+        # intact, so resend it — like the reconnect replay, but without
+        # tearing down the connection
+        for attempt in range(self.wire.connect_retries + 1):
+            if attempt:
+                time.sleep(backoff_delay(attempt, self.wire.backoff_base,
+                                         self.wire.backoff_cap))
+            with self._lock:
+                if mms is not None and len(data) > mms:
+                    reply = self._roundtrip(
+                        self._stream_frames(kind, data, mms))
+                else:
+                    reply = self._roundtrip([frame(data)])
+            rkind, rmeta, rtree = decode_message(reply)
+            if rkind == "error":
+                if rmeta.get("code") == CorruptFrameError.code:
+                    last = rmeta.get("message")
+                    continue
+                raise_remote_error(self.addr, rmeta)
+            return rkind, rmeta, rtree
+        raise ChannelError(
+            f"request {kind!r} to {self.addr} still corrupt after "
+            f"{self.wire.connect_retries + 1} attempts: {last}")
 
     def _stream_frames(self, kind: str, data: bytes, mms: int) -> List[bytes]:
         """Cut one encoded message into begin/chunk/commit frames."""
@@ -501,6 +541,11 @@ class Channel:
                         if rkind == "error":
                             raise_remote_error(self.addr, rmeta)
                 return reply
+            except CorruptFrameError as e:
+                # a mid-stream frame was garbled on the wire: resend the
+                # whole sequence (STREAM_BEGIN resets the server buffer;
+                # the connection itself is healthy, so keep it)
+                last = e
             except WireError:
                 raise                          # typed rejections: terminal
             except (ConnectionError, OSError) as e:
@@ -516,21 +561,32 @@ class Channel:
 class FlakyChannel(Channel):
     """Fault-injection wrapper over :class:`Channel` for wire tests.
 
-    ``drop``  — probability a frame send kills the connection instead
-                (exercises reconnect + replay).
-    ``dup``   — probability a frame is sent twice (exercises server-side
-                dedup of replayed uploads / stream chunks; the duplicate
-                reply is drained so the stream stays in sync).
-    ``delay`` — uniform[0, delay) seconds of extra latency per send.
+    ``drop``    — probability a frame send kills the connection instead
+                  (exercises reconnect + replay).
+    ``dup``     — probability a frame is sent twice (exercises server-side
+                  dedup of replayed uploads / stream chunks; the duplicate
+                  reply is drained so the stream stays in sync).
+    ``delay``   — uniform[0, delay) seconds of extra latency per send.
+    ``corrupt`` — probability one payload byte of a frame is flipped in
+                  flight (the 8-byte length prefix stays intact, so the
+                  server reads a whole frame whose decode then fails —
+                  the typed ``corrupt`` reply drives the client's resend
+                  path).  A flip can land where the codec still decodes:
+                  a valid-but-wrong model that only the server-side
+                  upload sanitation catches — which is exactly the
+                  layering under test (wire-level corruption vs
+                  model-level attack).
 
     Deterministic per ``seed``; activated end-to-end via
-    ``WireConfig.flaky = "drop=0.2,dup=0.1,seed=3"`` (see
+    ``WireConfig.flaky = "drop=0.2,dup=0.1,corrupt=0.02,seed=3"`` (see
     :func:`make_channel`).
     """
 
     def __init__(self, addr: Address, *, drop: float = 0.0, dup: float = 0.0,
-                 delay: float = 0.0, seed: int = 0, **kw):
+                 delay: float = 0.0, corrupt: float = 0.0, seed: int = 0,
+                 **kw):
         self.drop, self.dup, self.delay = drop, dup, delay
+        self.corrupt = corrupt
         self._frng = np.random.default_rng(seed)
         self._dup_pending = 0
         super().__init__(addr, **kw)
@@ -557,6 +613,14 @@ class FlakyChannel(Channel):
         if self._frng.random() < self.drop:
             self._close_sock()
             raise ConnectionError("flaky wire: frame dropped")
+        if (self.corrupt and len(framed) > 9
+                and self._frng.random() < self.corrupt):
+            # flip one payload byte past the 8-byte length prefix: the
+            # frame still arrives whole, its contents are garbage
+            pos = int(self._frng.integers(8, len(framed)))
+            mangled = bytearray(framed)
+            mangled[pos] ^= 0xFF
+            framed = bytes(mangled)
         if self._frng.random() < self.dup:
             super()._send_frame(framed)
             self._dup_pending += 1

@@ -1,0 +1,223 @@
+"""Deterministic Byzantine adversary plans — the fault-injection half
+of the robustness tier.
+
+An :class:`AdversaryPlan` makes ``f`` of the job's sites malicious and
+perturbs their contribution at the SITE-UPDATE SEAM — the one point
+every transport shares: the params a site is about to expose to
+aggregation.  On the stacked simulator the perturbation is traced into
+the round body (malicious & active rows of the [S, N] state, between
+local training and ``post_exchange``); on socket workers the same
+perturbation is applied host-side to the upload payload in
+``_run_site``.  Because ``post_exchange`` overwrites every active row
+with the new global, a stacked perturbation never persists into the
+next round — exactly matching the socket path, where only the wire
+payload is perturbed and the site's local state is clean.
+
+Determinism is the point: which sites are malicious is a pure function
+of ``(seed, num_sites)`` (no RNG state threads through the round scan),
+and the noise attack's randomness is a counter-derived key chain
+``fold_in(fold_in(fold_in(key(seed), round), site), leaf)`` — so the
+same plan replays bit-identically across scan/loop/thread/tcp engines
+and across ``--resume`` restarts (tested in tests/test_robustness.py).
+
+Spec grammar (``--adversary`` on the train CLI; last field = f sites)::
+
+    sign_flip:f      f sites upload −params
+    scale:c:f        f sites upload c·params
+    noise:s:f        f sites upload params + s·N(0,1)
+    label_flip:f     f sites train on corrupted targets (floats negated,
+                     int targets reversed along the last axis — a pure
+                     permutation of examples would be a mean-loss no-op)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stacking import where_site
+
+# keys of a batch dict that count as training targets for label_flip
+TARGET_KEYS = ("dose", "labels", "tokens")
+
+_SELECT_SALT = 104729   # site-selection stream, disjoint from data/DP seeds
+_NOISE_SALT = 60013     # noise-attack key chain
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversaryPlan:
+    """Seeded selection of f malicious sites + the perturbation they apply."""
+    kind: str           # sign_flip | scale | noise | label_flip
+    f: int              # number of malicious sites
+    param: float = 0.0  # c for scale, s for noise
+    seed: int = 0
+
+    @property
+    def flips_labels(self) -> bool:
+        return self.kind == "label_flip"
+
+    @property
+    def flips_params(self) -> bool:
+        return self.kind in ("sign_flip", "scale", "noise")
+
+    # -- site selection (host, pure in (seed, num_sites)) -------------------
+
+    def malicious_mask(self, num_sites: int) -> np.ndarray:
+        """[S] bool — the fixed malicious set.  A pure function of
+        ``(seed, num_sites)`` so every worker process and every resume
+        derives the identical set with no coordination."""
+        mask = np.zeros((num_sites,), bool)
+        if self.f <= 0:
+            return mask
+        rng = np.random.default_rng((self.seed + _SELECT_SALT, num_sites))
+        idx = rng.choice(num_sites, size=min(self.f, num_sites),
+                         replace=False)
+        mask[idx] = True
+        return mask
+
+    def is_malicious(self, site_id: int, num_sites: int) -> bool:
+        return bool(self.malicious_mask(num_sites)[site_id])
+
+    # -- noise key chain (shared by traced and host paths) ------------------
+
+    def _round_key(self, rnd):
+        return jax.random.fold_in(
+            jax.random.PRNGKey(self.seed + _NOISE_SALT), rnd)
+
+    # -- traced seam (stacked engines) --------------------------------------
+
+    def perturb_stacked(self, params_stacked, mask, rnd):
+        """Perturb the masked rows of a site-stacked params pytree.
+
+        ``mask`` is [S] bool — the caller passes ``malicious & active``
+        so inactive malicious rows keep their clean local state (parity
+        with sockets, where a dropped site uploads nothing).  ``rnd``
+        may be traced (the scan's round counter).
+        """
+        if not self.flips_params:
+            return params_stacked
+        if self.kind == "sign_flip":
+            pert = jax.tree.map(lambda p: -p, params_stacked)
+        elif self.kind == "scale":
+            pert = jax.tree.map(
+                lambda p: p * jnp.asarray(self.param, p.dtype),
+                params_stacked)
+        else:  # noise
+            base = self._round_key(rnd)
+            leaves, treedef = jax.tree.flatten(params_stacked)
+            s = leaves[0].shape[0]
+            site_keys = jax.vmap(
+                lambda sid: jax.random.fold_in(base, sid))(jnp.arange(s))
+            out = []
+            for li, p in enumerate(leaves):
+                noise = jax.vmap(
+                    lambda k, sh=p.shape[1:], i=li: jax.random.normal(
+                        jax.random.fold_in(k, i), sh))(site_keys)
+                out.append((p.astype(jnp.float32)
+                            + jnp.float32(self.param) * noise).astype(p.dtype))
+            pert = jax.tree.unflatten(treedef, out)
+        return where_site(mask, pert, params_stacked)
+
+    def perturb_batches(self, batches, mask):
+        """label_flip on the masked rows of a site-stacked batch dict:
+        float targets negate, integer targets reverse along the example
+        axis.  Non-target keys and other attack kinds pass through."""
+        if not self.flips_labels or not isinstance(batches, dict):
+            return batches
+        out = dict(batches)
+        for key in TARGET_KEYS:
+            if key in out:
+                v = out[key]
+                out[key] = where_site(mask, _flip_target(v), v)
+        return out
+
+    # -- host seam (socket workers) -----------------------------------------
+
+    def perturb_tree(self, tree, site_id: int, rnd: int):
+        """Host twin of :meth:`perturb_stacked` for ONE site's upload
+        payload (numpy leaves).  Same key chain at the same unstacked
+        leaf shapes, so noise is bit-identical to the traced rows."""
+        if not self.flips_params:
+            return tree
+        if self.kind == "sign_flip":
+            return jax.tree.map(_neg_host, tree)
+        if self.kind == "scale":
+            return jax.tree.map(
+                lambda p: _scale_host(p, self.param), tree)
+        site_key = jax.random.fold_in(self._round_key(rnd), site_id)
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for li, p in enumerate(leaves):
+            a = np.asarray(p)
+            if not np.issubdtype(a.dtype, np.floating):
+                out.append(a)
+                continue
+            noise = np.asarray(jax.random.normal(
+                jax.random.fold_in(site_key, li), a.shape))
+            out.append((a.astype(np.float32)
+                        + np.float32(self.param) * noise).astype(a.dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def perturb_batch(self, batch):
+        """Host twin of :meth:`perturb_batches` for one malicious site's
+        (unstacked) batch dict."""
+        if not self.flips_labels or not isinstance(batch, dict):
+            return batch
+        out = dict(batch)
+        for key in TARGET_KEYS:
+            if key in out:
+                out[key] = _flip_target(out[key])
+        return out
+
+
+def _flip_target(v):
+    v = jnp.asarray(v)
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        return -v
+    return jnp.flip(v, axis=-1)
+
+
+def _neg_host(p):
+    a = np.asarray(p)
+    return -a if np.issubdtype(a.dtype, np.floating) else a
+
+
+def _scale_host(p, c):
+    a = np.asarray(p)
+    if not np.issubdtype(a.dtype, np.floating):
+        return a
+    return (a.astype(np.float32) * np.float32(c)).astype(a.dtype)
+
+
+def parse_adversary(spec, seed: int = 0) -> Optional[AdversaryPlan]:
+    """``sign_flip:f | label_flip:f | scale:c:f | noise:s:f`` → plan.
+
+    The LAST field is always the malicious-site count f; scale/noise
+    carry their magnitude in the middle.  ``None``/empty → no adversary.
+    Accepts an already-parsed plan (idempotent — the seed argument is
+    ignored then).
+    """
+    if spec is None or isinstance(spec, AdversaryPlan):
+        return spec
+    text = str(spec).strip()
+    if not text or text == "none":
+        return None
+    parts = text.split(":")
+    kind = parts[0].strip()
+    try:
+        if kind in ("sign_flip", "label_flip"):
+            if len(parts) != 2 or int(parts[1]) < 1:
+                raise ValueError
+            return AdversaryPlan(kind, f=int(parts[1]), seed=seed)
+        if kind in ("scale", "noise"):
+            if len(parts) != 3 or int(parts[2]) < 1:
+                raise ValueError
+            return AdversaryPlan(kind, f=int(parts[2]),
+                                 param=float(parts[1]), seed=seed)
+    except ValueError:
+        pass
+    raise ValueError(f"unknown adversary {text!r} (expected sign_flip:f | "
+                     "label_flip:f | scale:c:f | noise:s:f)")

@@ -59,6 +59,16 @@ class FLContext:
     # real site id), so every transport draws the same noise stream.
     privacy: Optional[Any] = None
     dp_site_base: int = 0
+    # robust site→global combine (repro.core.agg_engine.AggregatorSpec
+    # or its string form; None = fedavg).  Rides the context so the
+    # compiled scan body dispatches the rule on-device with no change
+    # to the round carry.
+    aggregator: Optional[Any] = None
+    # deterministic Byzantine fault injection
+    # (repro.core.adversary.AdversaryPlan or None).  Stacked engines
+    # apply it inside fl_round; socket workers get adversary=None here
+    # and perturb their upload payload host-side instead.
+    adversary: Optional[Any] = None
 
     def scalar_loss_fn(self, params, batch):
         return self.loss_fn(params, batch)[0]
@@ -239,11 +249,29 @@ def build_fl_round(ctx: FLContext, remat_local: bool = False):
             new_opt = stacking.where_site(active, new_opt, fl_state["opt"])
         return {**fl_state, "params": new_params, "opt": new_opt}, metrics
 
+    # Byzantine fault injection: the malicious set is a static pure
+    # function of (plan.seed, num_sites), baked at trace time — no RNG
+    # state threads through the scan carry
+    adv = ctx.adversary
+    adv_mask = (jnp.asarray(adv.malicious_mask(ctx.fed.num_sites))
+                if adv is not None else None)
+
     def fl_round(fl_state, batches, round_inputs):
         active = jnp.asarray(round_inputs["active"])
         ri = {**round_inputs, "active": active}
+        if adv is not None and adv.flips_labels:
+            batches = adv.perturb_batches(batches, adv_mask)
         fl_state = strategy.pre_exchange(fl_state, ri, ctx)
         fl_state, metrics = local_phase(fl_state, batches, active)
+        if adv is not None and adv.flips_params:
+            # perturb what malicious ACTIVE sites expose to aggregation
+            # (between local training and the exchange — the same seam
+            # where a socket worker perturbs its upload payload).
+            # post_exchange overwrites active rows with the new global,
+            # so the perturbation never persists into the site's state —
+            # matching sockets, where only the wire payload is dirty.
+            fl_state = {**fl_state, "params": adv.perturb_stacked(
+                fl_state["params"], adv_mask & active, fl_state["round"])}
         fl_state = strategy.post_exchange(fl_state, ri, ctx)
         fl_state = {**fl_state, "round": fl_state["round"] + 1}
         if "metrics" in fl_state:

@@ -69,8 +69,20 @@ class RoundScheduler:
         raise NotImplementedError
 
 
+@dataclass
 class SyncScheduler(RoundScheduler):
-    """Barrier semantics: current-round uploads only, wait for all."""
+    """Barrier semantics: current-round uploads only, wait for all.
+
+    ``round_deadline_s`` bounds how long the barrier waits on
+    stragglers: once at least one upload has folded and the deadline
+    has elapsed since it arrived, the aggregation server finalizes the
+    round with whoever reported (graceful degradation — late uploads
+    then hit the ordinary stale-ack path, reusing the Algorithm-2 mask
+    machinery).  ``None`` keeps the strict barrier.  Wall-clock is a
+    socket-transport concept; stacked engines ignore the deadline.
+    """
+
+    round_deadline_s: Optional[float] = None
 
     name = "sync"
 
@@ -205,6 +217,12 @@ class JobResult:
     # accountant plus the DP-SGD / secure-aggregation settings; None
     # when no privacy mechanism is on
     privacy: Optional[Dict[str, Any]] = None
+    # upload sanitation: how many uploads the aggregation point REJECTED
+    # (non-finite leaves, norm outliers, undecodable payloads) instead
+    # of folding into the global.  Server-authoritative on socket
+    # transports; 0 on the stacked simulator, whose rows never cross a
+    # wire.
+    rejected_uploads: int = 0
 
     @property
     def losses(self) -> List[float]:
@@ -224,7 +242,8 @@ class JobResult:
                 "transport": self.transport,
                 "scheduler": self.scheduler, "comm": self.comm,
                 "resumed_from": self.resumed_from,
-                "privacy": self.privacy}
+                "privacy": self.privacy,
+                "rejected_uploads": self.rejected_uploads}
 
 
 def check_engine_tag(meta: Dict[str, Any], engine: str):
@@ -313,9 +332,10 @@ class RoundRecorder:
     def result(self, global_params, *, transport: str, scheduler: str,
                state=None, comm=None, compile_s: float = 0.0,
                resumed_from: Optional[int] = None,
-               privacy: Optional[Dict[str, Any]] = None) -> JobResult:
+               privacy: Optional[Dict[str, Any]] = None,
+               rejected_uploads: int = 0) -> JobResult:
         return JobResult(history=self.history, global_params=global_params,
                          wall_s=time.time() - self._t0, transport=transport,
                          scheduler=scheduler, state=state, comm=comm,
                          compile_s=compile_s, resumed_from=resumed_from,
-                         privacy=privacy)
+                         privacy=privacy, rejected_uploads=rejected_uploads)

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.agg_engine import parse_aggregator
 from repro.core.dcml import dcml_losses, merge_by_validation
 from repro.core.stacking import gather_sites, where_site
 from repro.core.strategies.base import Strategy, register
@@ -26,12 +27,29 @@ def make_site_dcml(ctx):
     ``(merged_params, (l_r, l_s, v_r, v_s))``.  The stacked simulator
     vmaps it over the site axis; the socket transports jit it directly
     on the receiving site.
+
+    With ``aggregator="normclip:c"`` the incoming model's delta against
+    the receiver is L2-clipped to ``c`` before DCML — the serverless
+    twin of the central rule: a Byzantine push can steer a receiver by
+    at most ``c`` per round, whatever its magnitude.
     """
     lam = ctx.fed.gcml_lambda
     beta = ctx.fed.gcml_contrast_beta
     eta = ctx.dcml_lr
+    spec = parse_aggregator(getattr(ctx, "aggregator", None))
+    clip_c = spec.c if spec.name == "normclip" else 0.0
 
     def site_dcml(p_r, p_s, b, vb):
+        if clip_c:
+            delta = jax.tree.map(
+                lambda s, r: s.astype(jnp.float32) - r.astype(jnp.float32),
+                p_s, p_r)
+            nrm = jnp.sqrt(sum(jnp.sum(d * d)
+                               for d in jax.tree.leaves(delta)))
+            fac = jnp.minimum(1.0, clip_c / jnp.maximum(nrm, 1e-12))
+            p_s = jax.tree.map(
+                lambda r, d: (r.astype(jnp.float32) + fac * d).astype(r.dtype),
+                p_r, delta)
         def joint(pr, ps):
             l_r, l_s = dcml_losses(ctx.logits_fn, pr, ps, b,
                                    ctx.scalar_loss_fn, lam, beta)

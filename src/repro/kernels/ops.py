@@ -44,6 +44,25 @@ def fedagg(stacked_params, weights, *, block_n: int = 65536,
     return _fedagg(stacked_params, weights, block_n=block_n, interpret=interp)
 
 
+def trimmed_mean(stacked_params, active, f: int, *, block_n: int = 65536,
+                 interpret: Optional[bool] = None):
+    """Byzantine-robust coordinate-wise trimmed mean over the active
+    rows of a [S, N] stacked param matrix (see kernels/robust.py)."""
+    from repro.kernels.robust import trimmed_mean as _trimmed
+    interp = _default_interpret() if interpret is None else interpret
+    return _trimmed(stacked_params, active, f, block_n=block_n,
+                    interpret=interp)
+
+
+def masked_median(stacked_params, active, *, block_n: int = 65536,
+                  interpret: Optional[bool] = None):
+    """Coordinate-wise median over the active rows of [S, N] — the
+    trimmed mean at maximal trim depth."""
+    from repro.kernels.robust import masked_median as _median
+    interp = _default_interpret() if interpret is None else interpret
+    return _median(stacked_params, active, block_n=block_n, interpret=interp)
+
+
 _PYTREE_ENGINES = {}
 
 

@@ -1,0 +1,119 @@
+"""Pallas TPU kernels for Byzantine-robust coordinate-wise aggregation.
+
+Robust combine rules replace the Eq. 1 weighted mean when up to ``f`` of
+the stacked site rows may be adversarial (sign-flipped, rescaled, or
+noised uploads).  The coordinate-wise rules are rank statistics over the
+site axis, so the kernel's shape is the same streaming pass as
+``fedagg``: one [S, block_n] slab per grid cell, a per-coordinate sort
+over S (S is small — the site axis), and one [block_n] write.
+
+Masked-row awareness: rows with ``active == 0`` (Algorithm-2 dropout,
+client sampling) are pushed to +inf before the sort, so they fall past
+every active rank; the trim depth and the divisor use the *traced*
+active count, which is what lets the rule compile into the multi-round
+``lax.scan`` where the active mask changes per round.
+
+  trimmed mean  f  — drop the f smallest and f largest active values per
+                     coordinate (f clamps to ⌊(k−1)/2⌋ for k active
+                     rows, so the keep set is never empty), mean the
+                     rest.  UNWEIGHTED over the keep set: rank rules and
+                     case weights don't compose (a 100×-weighted
+                     adversary would defeat the trim).
+  median           — the trimmed mean at maximal trim depth: for k odd
+                     the middle rank, for k even the mean of the two
+                     middle ranks — exactly ``trimmed_mean(f=S)``.
+
+``_trim_block`` is the single op sequence both the kernel body and the
+jnp twin (``trimmed_mean_ref``) execute, so kernel-vs-twin parity is
+bit-exact by construction (tested in ``tests/test_kernels.py``).
+``interpret`` defaults to compiled on TPU/GPU and to the Pallas
+interpreter elsewhere, like every kernel in this package.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128   # TPU lane width — pad so compiled blocks tile cleanly
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _trim_block(x, a, f: int):
+    """Coordinate-wise trimmed mean of the active rows of one block.
+
+    x: [S, n] values; a: [S] active mask (float, >0.5 = active); f: trim
+    depth.  Inactive rows sort to +inf (past every active rank); the
+    where-before-sum keeps ``inf · 0`` out of the fold.
+    """
+    x = x.astype(jnp.float32)
+    act = a > 0.5
+    k = jnp.sum(act.astype(jnp.int32))
+    xs = jnp.sort(jnp.where(act[:, None], x, jnp.inf), axis=0)
+    r = jax.lax.broadcasted_iota(jnp.int32, xs.shape, 0)
+    fe = jnp.minimum(jnp.int32(f), jnp.maximum(k - 1, 0) // 2)
+    keep = (r >= fe) & (r < k - fe)
+    total = jnp.sum(jnp.where(keep, xs, 0.0), axis=0)
+    return total / jnp.maximum(k - 2 * fe, 1).astype(jnp.float32)
+
+
+def _trimmed_kernel(f, x_ref, a_ref, o_ref):
+    o_ref[...] = _trim_block(x_ref[...], a_ref[...], f).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("f", "block_n", "interpret"))
+def trimmed_mean(stacked, active, f: int, *, block_n: int = 65536,
+                 interpret: Optional[bool] = None):
+    """Coordinate-wise trimmed mean over the active rows of [S, N].
+
+    stacked: [S, N] flattened params; active: [S] mask; f: rows trimmed
+    from each end of the per-coordinate order.  Returns [N] fp32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    s, n = stacked.shape
+    active = jnp.asarray(active, jnp.float32)
+    block_n = min(block_n, _round_up(n, _LANE))
+    padded = _round_up(n, block_n)
+    if padded != n:
+        stacked = jnp.pad(stacked, ((0, 0), (0, padded - n)))
+    out = pl.pallas_call(
+        functools.partial(_trimmed_kernel, f),
+        grid=(padded // block_n,),
+        in_specs=[
+            pl.BlockSpec((s, block_n), lambda i: (0, i)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=interpret,
+    )(stacked, active)
+    return out[:n] if padded != n else out
+
+
+def masked_median(stacked, active, *, block_n: int = 65536,
+                  interpret: Optional[bool] = None):
+    """Coordinate-wise median over the active rows of [S, N] — the
+    trimmed mean at maximal trim depth (f = S clamps to ⌊(k−1)/2⌋)."""
+    return trimmed_mean(stacked, active, int(stacked.shape[0]),
+                        block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("f",))
+def trimmed_mean_ref(stacked, active, f: int):
+    """jnp twin of :func:`trimmed_mean` — the identical op sequence on
+    the whole [S, N] buffer (the CPU engine path; bit-exact vs the
+    kernel because both run :func:`_trim_block` elementwise over N)."""
+    return _trim_block(jnp.asarray(stacked),
+                       jnp.asarray(active, jnp.float32), f)
+
+
+def masked_median_ref(stacked, active):
+    """jnp twin of :func:`masked_median`."""
+    return trimmed_mean_ref(stacked, active, int(jnp.shape(stacked)[0]))

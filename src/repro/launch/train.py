@@ -65,6 +65,9 @@ def run(args) -> dict:
         dp_clip=args.dp_clip, dp_noise_multiplier=args.dp_noise_multiplier,
         dp_delta=args.dp_delta, dp_mode=args.dp_mode,
         secure_agg=args.secure_agg, seed=args.seed,
+        aggregator=args.aggregator, adversary=args.adversary,
+        round_deadline_s=args.round_deadline_s,
+        max_upload_norm=args.max_upload_norm,
         wire=wire, lease_ttl=args.lease_ttl,
         round_engine=args.round_engine, chunk_rounds=args.chunk_rounds,
         device_data=args.device_data,
@@ -96,6 +99,10 @@ def run(args) -> dict:
             "dp_noise_multiplier": job.dp_noise_multiplier,
             "dp_delta": job.dp_delta, "dp_mode": job.dp_mode,
             "secure_agg": job.secure_agg,
+            "aggregator": job.aggregator_spec.spec,
+            "adversary": job.adversary,
+            "round_deadline_s": job.round_deadline_s,
+            "max_upload_norm": job.max_upload_norm,
             "auth": job.wire.secret is not None,
             "tls": job.wire.tls,
             "max_message_size": job.wire.max_message_size,
@@ -191,6 +198,27 @@ def make_parser():
                          "aggregation server only sees their sum; "
                          "thread/tcp transports, sync schedulers, "
                          "compression=none")
+    ap.add_argument("--aggregator", default="fedavg",
+                    metavar="fedavg|trimmed:f|median|krum:f|normclip:c",
+                    help="robust site→global combine rule: coordinate-wise "
+                         "trimmed mean / median, krum selection, or "
+                         "per-upload L2 norm clipping (fedavg = Eq. 1 "
+                         "weighted mean)")
+    ap.add_argument("--adversary", default=None,
+                    metavar="sign_flip:f|label_flip:f|scale:c:f|noise:s:f",
+                    help="deterministic Byzantine harness: f seeded "
+                         "malicious sites perturb what they expose to "
+                         "aggregation (same sites and perturbations on "
+                         "every transport)")
+    ap.add_argument("--round-deadline-s", type=float, default=None,
+                    dest="round_deadline_s", metavar="SECONDS",
+                    help="socket transports: after this long with at least "
+                         "one upload folded, close the sync barrier with "
+                         "whoever arrived (stragglers are acked stale)")
+    ap.add_argument("--max-upload-norm", type=float, default=None,
+                    dest="max_upload_norm", metavar="C",
+                    help="socket transports: reject uploads with L2 norm "
+                         "above C (non-finite uploads are always rejected)")
     ap.add_argument("--no-error-feedback", action="store_true",
                     dest="no_error_feedback",
                     help="disable the client-side quantization residual")
