@@ -72,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comms.compression import (KEEP_GLOBALS_DEFAULT, Codec,
-                                     UploadCompressor, decode_upload,
+                                     DownlinkCompressor, UploadCompressor,
+                                     decode_download, decode_upload,
                                      resolve_codec, tree_payload_nbytes)
 from repro.comms.transport import WireConfig
 from repro.configs.base import FederationConfig, MeshConfig
@@ -303,6 +304,13 @@ class FederatedJob:
     pod_dropout: int = 0                # Algorithm-2 churn at the pod tier
     compression: Union[str, Codec] = "none"   # upload codec (comms seam)
     error_feedback: bool = True         # carry quantization residual
+    # download codec: the server keeps per-site error-feedback residual
+    # references and broadcasts each install as a quantized delta against
+    # that site's last-acknowledged global (dense bootstrap for new or
+    # evicted references — same rejoin rule as uploads).  fedavg/fedprox
+    # sync rounds only; secure_agg downloads stay dense (the masked sum
+    # is the only thing the server may materialize).
+    down_compression: Union[str, Codec] = "none"
     # privacy tier (repro.privacy).  DP-SGD is ON iff dp_clip > 0:
     # per-site/per-example gradient clipping + Gaussian noise inside
     # every site update (all transports, compiled into the scan engine),
@@ -627,6 +635,24 @@ def _socket_resume_point(job: FederatedJob, num_sites: int):
     return rr, g
 
 
+def _socket_down_refs(job: FederatedJob, rr: int, num_sites: int):
+    """Per-site downlink references the aggregation server persisted at
+    resume round ``rr`` (tags ``downref{sid}``) → the ``initial_down``
+    map a restarted server seeds its :class:`DownlinkCompressor` from.
+    Sites without a saved reference simply re-enter through a dense
+    bootstrap — resume never deadlocks on a missing tag."""
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(Path(job.checkpoint_dir))
+    like = job.task.build().init_fn(jax.random.PRNGKey(job.seed))
+    out = {}
+    for sid in range(num_sites):
+        tag = f"downref{sid}"
+        if rr in set(store.saved_rounds(tag)):
+            held, meta = store.load(tag, rr, like)
+            out[sid] = (held, int(meta["held_round"]))
+    return out or None
+
+
 def _validate_robustness(job: FederatedJob) -> None:
     """Fail-loud composition guards for the robustness seams, shared by
     every transport.  Robust rules need to SEE the round's individual
@@ -699,6 +725,48 @@ def _validate_robustness(job: FederatedJob) -> None:
             f"{job.scheduler!r} has no barrier to bound")
 
 
+def _validate_down(job: FederatedJob) -> None:
+    """Fail-loud composition guards for download compression
+    (``down_compression``), shared by every transport.  The download
+    codec needs a server that tracks one reference trajectory per site;
+    compositions without that server — or whose threat model forbids
+    it — are typed errors, never silent dense downgrades."""
+    if resolve_codec(job.down_compression).name == "none":
+        return
+    if job.strategy not in ("fedavg", "fedprox"):
+        raise ValueError(
+            "down_compression encodes the server's broadcast against "
+            "per-site held references; only the centrally-aggregated "
+            "strategies (fedavg/fedprox) have that broadcast, not "
+            f"{job.strategy!r}")
+    if job.secure_agg:
+        raise ValueError(
+            "secure_agg downloads stay dense: the masked protocol lets "
+            "the server materialize only the aggregate sum, while "
+            "down_compression requires it to track what each site holds "
+            "— disable one of them")
+    intra_s, inter_s = job.tier_schedulers()
+    if (isinstance(resolve_scheduler(job.scheduler), BufferedScheduler)
+            or isinstance(intra_s, BufferedScheduler)
+            or isinstance(inter_s, BufferedScheduler)):
+        raise ValueError(
+            "buffered-async sites pull whichever global version is "
+            "newest out of the keep_globals ring, not a per-site "
+            "residual stream; down_compression needs scheduler='sync'")
+    if job.aggregator_spec.robust or job.adversary_plan is not None:
+        raise ValueError(
+            "robust aggregation rules and the adversary harness rank "
+            "plaintext uploads against ONE shared broadcast; "
+            "down_compression gives every site a different decoded "
+            "install, so upload distances would mix honest quantization "
+            "drift with attacker signal — use down_compression='none'")
+    if job.shard_sites:
+        raise ValueError(
+            "shard_sites=True broadcasts the global through the mesh "
+            "collective, not the download codec; run down_compression "
+            "jobs with shard_sites=False")
+
+
 class StackedTransport(Transport):
     """Single-process vmapped simulator (all strategies, all schedulers).
 
@@ -716,8 +784,11 @@ class StackedTransport(Transport):
                 resume: bool = False) -> JobResult:
         scheduler = resolve_scheduler(job.scheduler)
         codec = resolve_codec(job.compression)
+        down_codec = resolve_codec(job.down_compression)
+        down = down_codec.name != "none"
         buffered = isinstance(scheduler, BufferedScheduler)
         _validate_robustness(job)
+        _validate_down(job)
         if job.round_deadline_s is not None:
             raise ValueError(
                 "round_deadline_s bounds a real wall-clock barrier; the "
@@ -784,9 +855,10 @@ class StackedTransport(Transport):
                                                 resume_round=resume_round)
         if job.round_engine != "loop":
             from repro.core import round_engine
-            res = round_engine.execute_stacked(job, bundle, scheduler, codec,
-                                               rounds,
-                                               resume_round=resume_round)
+            res = round_engine.execute_stacked(
+                job, bundle, scheduler, codec, rounds,
+                resume_round=resume_round,
+                down_codec=down_codec if down else None)
             if res is not None:
                 return res
             if job.round_engine == "scan":
@@ -804,9 +876,10 @@ class StackedTransport(Transport):
                     "the scan engine (round_engine='auto')")
             return self._execute_buffered(job, bundle, scheduler, rounds,
                                           codec)
-        if codec.name != "none":
-            return self._execute_compressed(job, bundle, scheduler, rounds,
-                                            codec, resume_round)
+        if codec.name != "none" or down:
+            return self._execute_compressed(
+                job, bundle, scheduler, rounds, codec, resume_round,
+                down_codec=down_codec if down else None)
         return self._execute_sync(job, bundle, scheduler, rounds,
                                   resume_round)
 
@@ -883,7 +956,9 @@ class StackedTransport(Transport):
                 uploads = int(masks[start_round:].sum())
                 comm = {"upload_bytes": uploads * nbytes,
                         "download_bytes": uploads * nbytes,
-                        "upload_count": uploads, "compression": "none",
+                        "total_bytes": 2 * uploads * nbytes,
+                        "upload_count": uploads, "download_count": uploads,
+                        "compression": "none", "down_compression": "none",
                         "simulated": True}
         return recorder.result(F.global_model(state, ctx),
                                transport=self.name, scheduler=scheduler.name,
@@ -892,7 +967,8 @@ class StackedTransport(Transport):
                                privacy=job.privacy_report(rounds))
 
     def _execute_compressed(self, job, bundle, scheduler, rounds,
-                            codec, resume_round=None) -> JobResult:
+                            codec, resume_round=None,
+                            down_codec=None) -> JobResult:
         """Sync rounds with the upload path routed through the codec:
         every active site's post-training weights are delta-encoded
         against the last broadcast global (error-feedback residual
@@ -902,6 +978,16 @@ class StackedTransport(Transport):
         ``AggregationServer``, simulated in process.  The first round
         uploads full (quantized) weights; deltas start once a global
         exists, mirroring a server that never saw the initialization.
+
+        With ``down_codec`` (bidirectional compression) the broadcast
+        rides the codec seam too: a :class:`DownlinkCompressor` tracks
+        each site's held reference server-side and every install is a
+        quantized delta decoded through :func:`decode_download`; the
+        site's next upload then anchors to its OWN decoded install, and
+        a site whose reference left the ``keep_globals`` window
+        bootstraps dense both ways (the rejoin rule).  The scan engine's
+        ``compressed-scan-bidir`` path is the compiled twin — byte
+        accounting is bit-identical on CPU.
 
         FedProx runs its local half (``fedprox-local``) with the
         proximal anchor re-pinned to each broadcast global; a pods
@@ -923,6 +1009,13 @@ class StackedTransport(Transport):
         case_w = np.asarray(job.federation().case_weights())
         comps = [UploadCompressor(codec, job.error_feedback)
                  for _ in range(num_sites)]
+        down = down_codec is not None and down_codec.name != "none"
+        keep = KEEP_GLOBALS_DEFAULT
+        engine_tag = "compressed-loop-bidir" if down else "compressed-loop"
+        server_down = DownlinkCompressor(down_codec) if down else None
+        site_refs: List[Any] = [None] * num_sites   # decoded installs
+        down_acked: List[Optional[int]] = [None] * num_sites
+        last_active = np.full(num_sites, -keep, np.int64)
         reference = None                     # last broadcast global (fp32)
         global_params = jax.tree.map(np.asarray, F.global_model(state, ctx))
         recorder = job.recorder(rounds, num_sites)
@@ -932,10 +1025,12 @@ class StackedTransport(Transport):
         start_round = 0
         if resume_round is not None:
             lmeta = recorder.store.meta("driver_state", resume_round)
-            check_engine_tag(lmeta, "compressed-loop")
+            check_engine_tag(lmeta, engine_tag)
             check_privacy_tag(lmeta, job.dp_tag())
             like = {"fl_state": state, "reference": site_zero,
                     "residuals": [site_zero for _ in range(num_sites)]}
+            if down:
+                like["down_refs"] = [site_zero for _ in range(num_sites)]
             loaded, _ = recorder.store.load("driver_state", resume_round,
                                             like)
             state = jax.tree.map(jnp.asarray, loaded["fl_state"])
@@ -945,7 +1040,19 @@ class StackedTransport(Transport):
                                               [False] * num_sites)):
                 if has:
                     comps[i].residual = loaded["residuals"][i]
+            if down:
+                for i, acked in enumerate(lmeta.get("down_acked",
+                                                    [None] * num_sites)):
+                    if acked is not None:
+                        site_refs[i] = jax.tree.map(np.asarray,
+                                                    loaded["down_refs"][i])
+                        down_acked[i] = int(acked)
+                        server_down.restore(i, site_refs[i], int(acked))
             start_round = resume_round + 1
+            # the bootstrap schedule is a pure function of the masks:
+            # replay participation so rejoin gaps survive the restart
+            for rr in range(start_round):
+                last_active[masks[rr]] = rr
         for r in range(start_round, rounds):
             b = bundle.round_batches(r, job.local_steps)
             ri = F.make_round_inputs(ctx, active=masks[r])
@@ -963,16 +1070,25 @@ class StackedTransport(Transport):
             pods = [StreamingAccumulator() for _ in range(topo.num_pods)]
             root = StreamingAccumulator()
             round_bytes = 0
+            round_down_bytes = 0
             for site in active_idx:
                 params_site = jax.tree.map(
                     lambda x: np.asarray(x[site], np.float32), state["params"])
-                enc, cmeta = comps[site].encode(params_site, reference)
+                if down:
+                    # bidirectional: the upload anchors to the site's OWN
+                    # decoded install; past the keep window both ends
+                    # bootstrap dense (matches _bootstrap_masks exactly)
+                    up_ref = (None if r - int(last_active[site]) >= keep
+                              else site_refs[site])
+                else:
+                    up_ref = reference
+                enc, cmeta = comps[site].encode(params_site, up_ref)
                 round_bytes += tree_payload_nbytes(enc)
                 w = 1.0 if topo.intra == "uniform" else float(case_w[site])
                 if wscale is not None:     # Horvitz–Thompson 1/π factor
                     w *= float(wscale[r, site])
                 pods[int(pod_of[site])].fold(
-                    decode_upload(enc, cmeta, reference), w)
+                    decode_upload(enc, cmeta, up_ref), w)
             for acc in pods:
                 if acc.count:
                     pw = 1.0 if topo.inter == "uniform" else acc.weight_total
@@ -980,35 +1096,67 @@ class StackedTransport(Transport):
             if root.count:
                 global_params = root.finalize()
                 reference = global_params
-                state = _set_param_sites(state, active_idx, global_params)
-                if local_strategy == "fedprox-local":   # Eq. 2 anchor
+                if down:
+                    # socket ordering: advance the round clock, evict
+                    # stale references, THEN serve this round's downloads
+                    server_down.evict_stale(r + 1, keep)
+                    installs = []
+                    for site in active_idx:
+                        payload, dmeta = server_down.encode(
+                            site, global_params, r + 1,
+                            acked_round=down_acked[site])
+                        round_down_bytes += tree_payload_nbytes(payload)
+                        inst = decode_download(payload, dmeta,
+                                               site_refs[site])
+                        site_refs[site] = inst
+                        down_acked[site] = r + 1
+                        installs.append(inst)
+                    state = _set_param_rows(state, active_idx, installs)
+                else:
+                    state = _set_param_sites(state, active_idx, global_params)
+                if local_strategy == "fedprox-local":   # Eq. 2 anchor —
+                    # the exact global even under down compression (the
+                    # scan's vmapped body broadcasts ONE anchor; parity)
                     state = {**state, "strategy": {"global": jax.tree.map(
                         lambda g: jnp.asarray(g, jnp.float32),
                         global_params)}}
+            last_active[masks[r]] = r
+            extra = {"step_s": time.time() - t_step,
+                     "upload_bytes": round_bytes}
+            if down:
+                extra["download_bytes"] = round_down_bytes
             recorder.record(r, np.asarray(metrics["loss"]), masks[r],
-                            global_fn=lambda: global_params,
-                            extra={"step_s": time.time() - t_step,
-                                   "upload_bytes": round_bytes})
+                            global_fn=lambda: global_params, extra=extra)
 
-            def _ckpt_tree(state=state, reference=reference):
-                return {"fl_state": jax.tree.map(np.asarray, state),
-                        "reference": (reference if reference is not None
-                                      else site_zero),
-                        "residuals": [c.residual if c.residual is not None
-                                      else site_zero for c in comps]}
-            recorder.save_state(
-                r, _ckpt_tree,
-                meta={"engine": "compressed-loop", "dp": job.dp_tag(),
-                      "has_residual": [c.residual is not None
-                                       for c in comps]})
+            def _ckpt_tree(state=state, reference=reference,
+                           refs=tuple(site_refs)):
+                t = {"fl_state": jax.tree.map(np.asarray, state),
+                     "reference": (reference if reference is not None
+                                   else site_zero),
+                     "residuals": [c.residual if c.residual is not None
+                                   else site_zero for c in comps]}
+                if down:
+                    t["down_refs"] = [rf if rf is not None else site_zero
+                                      for rf in refs]
+                return t
+            meta = {"engine": engine_tag, "dp": job.dp_tag(),
+                    "has_residual": [c.residual is not None for c in comps]}
+            if down:
+                meta["down_acked"] = list(down_acked)
+            recorder.save_state(r, _ckpt_tree, meta=meta)
         comm = _compressor_comm(comps, codec,
-                                per_site_nbytes(state["params"]))
+                                per_site_nbytes(state["params"]),
+                                down=server_down,
+                                down_name=down_codec.name if down else "none")
         if topo.is_pods:
             from repro.core.topology import simulated_pods_comm
             comm.update(simulated_pods_comm(
                 topo, masks[start_round:], per_site_nbytes(state["params"]),
                 intra_upload_bytes=comm["upload_bytes"],
-                compression=codec.name))
+                intra_download_bytes=(comm["download_bytes"] if down
+                                      else None),
+                compression=codec.name,
+                down_compression=down_codec.name if down else "none"))
         return recorder.result(global_params, transport=self.name,
                                scheduler=scheduler.name, state=state,
                                comm=comm, compile_s=compile_s,
@@ -1107,15 +1255,28 @@ class StackedTransport(Transport):
 
 
 def _compressor_comm(comps: List[UploadCompressor], codec: Codec,
-                     download_nbytes: int) -> Dict[str, Any]:
-    """Aggregate client-side compressor counters into the JobResult comm
-    dict (stacked simulator: payload bytes, no framing/header overhead;
-    downloads stay uncompressed fp32)."""
+                     download_nbytes: int,
+                     down: Optional[DownlinkCompressor] = None,
+                     down_name: str = "none") -> Dict[str, Any]:
+    """Aggregate compressor counters into the JobResult comm dict
+    (stacked simulator: payload bytes, no framing/header overhead).
+    Without a :class:`DownlinkCompressor` downloads are uncompressed
+    fp32 (one dense global per upload)."""
     uploads = sum(c.encodes for c in comps)
-    return {"upload_bytes": sum(c.encoded_bytes for c in comps),
+    up_bytes = sum(c.encoded_bytes for c in comps)
+    if down is not None:
+        down_bytes, down_raw = down.encoded_bytes, down.raw_bytes
+        down_count = down.encodes
+    else:
+        down_bytes = down_raw = uploads * download_nbytes
+        down_count = uploads
+    return {"upload_bytes": up_bytes,
             "upload_raw_bytes": sum(c.raw_bytes for c in comps),
-            "download_bytes": uploads * download_nbytes,
-            "upload_count": uploads, "compression": codec.name,
+            "download_bytes": down_bytes,
+            "download_raw_bytes": down_raw,
+            "total_bytes": up_bytes + down_bytes,
+            "upload_count": uploads, "download_count": down_count,
+            "compression": codec.name, "down_compression": down_name,
             "simulated": True}
 
 
@@ -1126,6 +1287,21 @@ def _set_param_sites(fl_state, sites: List[int], global_tree):
     new_params = jax.tree.map(
         lambda x, g: x.at[idx].set(jnp.asarray(np.asarray(g)).astype(x.dtype)),
         fl_state["params"], global_tree)
+    return {**fl_state, "params": new_params}
+
+
+def _set_param_rows(fl_state, sites: List[int], trees: List[Any]):
+    """Overwrite the given site rows of the stacked params with per-site
+    (unstacked) model trees — the bidirectional-compression install,
+    where every site decodes a different model."""
+    if not sites:
+        return fl_state
+    idx = jnp.asarray(sites)
+    stacked = jax.tree.map(
+        lambda *xs: np.stack([np.asarray(x, np.float32) for x in xs]), *trees)
+    new_params = jax.tree.map(
+        lambda x, g: x.at[idx].set(jnp.asarray(g).astype(x.dtype)),
+        fl_state["params"], stacked)
     return {**fl_state, "params": new_params}
 
 
@@ -1194,6 +1370,13 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
             if codec.name != "none" else None)
     peer_comp = (UploadCompressor(codec, job.error_feedback)
                  if codec.name != "none" and strategy.needs_pairing else None)
+    # download compression: the server streams per-site quantized deltas
+    # against the global this site last acknowledged (meta carries the
+    # ack); the decoded install doubles as the upload/prox anchor, which
+    # is bit-equal to the server's held copy by construction
+    down = resolve_codec(job.down_compression).name != "none"
+    down_ref = None         # last decoded install (the delta base)
+    down_acked: Optional[int] = None
     reference = None        # last pulled global (fp32) — the delta anchor
     sa = None               # secure aggregation: pairwise upload masker
     sa_bytes = sa_raw = sa_count = 0
@@ -1218,6 +1401,8 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
             if comp is not None:
                 like["reference"] = site_zero
                 like["residual"] = site_zero
+            if down:
+                like["down_ref"] = site_zero
             loaded, lmeta = site_store.load("state", start_round - 1, like)
             state = jax.tree.map(jnp.asarray, loaded["fl_state"])
             base_round = int(lmeta.get("base_round", start_round))
@@ -1227,6 +1412,13 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 if lmeta.get("has_residual"):
                     comp.residual = jax.tree.map(np.asarray,
                                                  loaded["residual"])
+            if down and lmeta.get("has_down_ref"):
+                # re-enter the server's residual stream exactly where the
+                # killed site left it (the server restored the matching
+                # held copy from its own checkpoint)
+                down_ref = jax.tree.map(np.asarray, loaded["down_ref"])
+                acked = lmeta.get("down_acked")
+                down_acked = int(acked) if acked is not None else None
         if job.lease_ttl and agg_addr is not None:
             from repro.comms.membership import HeartbeatClient
             hb = HeartbeatClient(
@@ -1357,8 +1549,17 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                 # sites which already finished their rounds may never fill;
                 # sync keeps the round-(r+1) barrier
                 want = 0 if buffered else r + 1
-                g, dmeta = peer.download(agg_addr, want, with_meta=True)
+                g, dmeta = peer.download(agg_addr, want, with_meta=True,
+                                         down=down, acked_round=down_acked)
                 if g is not None:        # None only if no buffer finalized yet
+                    if down:
+                        # delta broadcast: decode against the held install;
+                        # dense (bootstrap / ack mismatch) decodes are
+                        # reference-free and restart the stream
+                        g = decode_download(g, dmeta, down_ref)
+                        down_ref = jax.tree.map(
+                            lambda x: np.asarray(x, np.float32), g)
+                        down_acked = int(dmeta["round"])
                     base_round = int(dmeta["round"])
                     if comp is not None:     # next delta anchors to this pull
                         reference = jax.tree.map(
@@ -1381,13 +1582,18 @@ def _run_site(job: FederatedJob, site_id: int, agg_addr, coord_addr,
                     tree["residual"] = (comp.residual
                                         if comp.residual is not None
                                         else site_zero)
+                if down:
+                    tree["down_ref"] = (down_ref if down_ref is not None
+                                        else site_zero)
                 site_store.save(
                     "state", r, tree,
                     meta={"base_round": base_round,
                           "has_reference": comp is not None
                           and reference is not None,
                           "has_residual": comp is not None
-                          and comp.residual is not None})
+                          and comp.residual is not None,
+                          "has_down_ref": down and down_ref is not None,
+                          "down_acked": down_acked})
         streams = [c for c in (comp, peer_comp) if c is not None]
         return {"losses": losses, "stale_uploads": stale_uploads,
                 "rejected_uploads": rejected_uploads,
@@ -1463,6 +1669,7 @@ class _SocketTransport(Transport):
                     "secure aggregation protects centrally-aggregated "
                     f"uploads (fedavg/fedprox), not {job.strategy!r}")
         _validate_robustness(job)
+        _validate_down(job)
         if job.round_deadline_s is not None:
             if topo.is_pods:
                 raise ValueError(
@@ -1484,6 +1691,13 @@ class _SocketTransport(Transport):
                                                                 num_sites)
             if resumed_from is not None:
                 start_round = resumed_from + 1
+        down_codec = resolve_codec(job.down_compression)
+        down = down_codec.name != "none"
+        initial_down = None
+        if down and resumed_from is not None:
+            # the resumed server must encode deltas against exactly what
+            # each resumed site holds, or trajectories diverge
+            initial_down = _socket_down_refs(job, resumed_from, num_sites)
         # construct before the workers run so wall_s spans the actual run
         recorder = job.recorder(rounds, num_sites)
         from repro.comms.coordinator import (AggregationServer,
@@ -1508,6 +1722,8 @@ class _SocketTransport(Transport):
                     error_feedback=job.error_feedback,
                     aggregator=job.aggregator,
                     max_upload_norm=job.max_upload_norm,
+                    down_codec=down_codec if down else None,
+                    initial_down=initial_down,
                     mask_secret=(job.mask_secret if job.secure_agg
                                  else None)).start()
                 servers.append(pod_stack)
@@ -1527,7 +1743,9 @@ class _SocketTransport(Transport):
                     initial_global=initial_global,
                     ckpt_store=recorder.store, ckpt_every=job.ckpt_every,
                     secure_agg=sa_state, aggregator=job.aggregator,
-                    max_upload_norm=job.max_upload_norm)
+                    max_upload_norm=job.max_upload_norm,
+                    down_compression=down_codec if down else None,
+                    initial_down=initial_down)
                 servers.append(agg)
                 agg_addr = agg.addr
             if strategy.needs_pairing:
@@ -1567,23 +1785,35 @@ class _SocketTransport(Transport):
         site_count = sum(p.get("upload_count", 0) for p in per_site.values())
         comm = None
         if pod_stack is not None:            # two-tier: per-tier byte split
-            comm = {**pod_stack.comm(codec.name),
+            comm = {**pod_stack.comm(codec.name, down_codec.name),
                     "site_payload_bytes": site_payload,
                     "upload_raw_bytes": site_raw}
         elif agg is not None:
             snap = agg.stats.snapshot()
-            comm = {"upload_bytes": snap.get("upload", {}).get("in_bytes", 0),
-                    "download_bytes":
-                        snap.get("download", {}).get("out_bytes", 0),
+            up_b = snap.get("upload", {}).get("in_bytes", 0)
+            down_b = snap.get("download", {}).get("out_bytes", 0)
+            comm = {"upload_bytes": up_b,
+                    "download_bytes": down_b,
+                    "total_bytes": up_b + down_b,
                     "upload_count": snap.get("upload", {}).get("count", 0),
+                    "download_count":
+                        snap.get("download", {}).get("count", 0),
                     "site_payload_bytes": site_payload,
                     "upload_raw_bytes": site_raw,
-                    "compression": codec.name, "simulated": False}
+                    "compression": codec.name,
+                    "down_compression": down_codec.name, "simulated": False}
+            down_counters = agg.down_counters
+            if down_counters is not None:
+                # payload-level split for the ratio math (out_bytes above
+                # additionally includes wire framing)
+                comm["download_payload_bytes"] = down_counters["encoded"]
+                comm["download_raw_bytes"] = down_counters["raw"]
         elif site_count:                     # gossip P2P, compressed
             comm = {"upload_bytes": site_payload,
                     "upload_raw_bytes": site_raw, "download_bytes": 0,
-                    "upload_count": site_count,
-                    "compression": codec.name, "simulated": False}
+                    "total_bytes": site_payload, "upload_count": site_count,
+                    "download_count": 0, "compression": codec.name,
+                    "down_compression": "none", "simulated": False}
         exec_rounds = rounds - start_round
         nan_row = [float("nan")] * exec_rounds
         losses = np.stack([per_site[i].get("losses", nan_row)

@@ -38,6 +38,12 @@ encoded as full weights (``delta=False``).  The server side is
 :func:`decode_upload`, called by ``AggregationServer._handle("upload")``
 before the :class:`~repro.core.agg_engine.StreamingAccumulator` fold —
 the fp32 fold already handles mixed upload payloads.
+
+The *download* direction rides the same codec seam in reverse:
+:class:`DownlinkCompressor` keeps a per-site error-feedback reference on
+the server and encodes every broadcast as a quantized delta against the
+global that site last acknowledged (dense bootstrap for new or evicted
+references), decoded site-side by :func:`decode_download`.
 """
 from __future__ import annotations
 
@@ -332,6 +338,10 @@ class UploadCompressor:
         (``compression``/``delta``) must ride the wire so the server can
         route the payload through :func:`decode_upload`."""
         if self.codec.name == "none":
+            nb = tree_payload_nbytes(params_tree)
+            self.raw_bytes += nb
+            self.encoded_bytes += nb
+            self.encodes += 1
             return params_tree, {"compression": "none", "delta": False}
         u = _tree_map(lambda x: np.asarray(x, np.float32), params_tree)
         delta = reference is not None
@@ -372,6 +382,119 @@ def decode_upload(tree: Any, meta: Dict[str, Any], reference: Any = None
         if reference is None:
             raise ValueError("delta upload but no reference global to "
                              "decode against")
+        tree = _tree_map(lambda d, g: d + np.asarray(g, np.float32),
+                         tree, reference)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Server-side download path: per-site reference tracking + codec
+# ---------------------------------------------------------------------------
+
+
+class DownlinkCompressor:
+    """Server-side download encoder: per-site error-feedback residuals
+    for the broadcast direction, expressed as *reference tracking*.
+
+    For every site the server keeps ``held`` — its record of the global
+    the site actually holds after decoding everything sent so far — and
+    encodes each download as ``Q(g − held)``.  After encoding it
+    advances ``held += deQ(Q(g − held))``, i.e. to exactly what the site
+    will decode, so next round's delta ``g' − held`` automatically
+    contains this round's quantization error: the residual is implicit
+    and telescopes, the downlink twin of :class:`UploadCompressor`'s
+    ``e_t`` (``error_feedback=False`` instead pretends the site received
+    ``g`` exactly, so per-round errors accumulate — kept only to
+    demonstrate the divergence).
+
+    Dense bootstrap mirrors the upload path's rejoin rule: a site with
+    no server-side reference (new/joined), an evicted reference
+    (:meth:`evict_stale`, the ``keep_globals`` window), or an
+    ``acked_round`` that disagrees with the server record (lost reply,
+    restarted site) gets the full fp32 global, which re-synchronizes
+    both ends — stale references can never deadlock or corrupt a
+    trajectory, they just cost one dense send.
+    """
+
+    def __init__(self, codec: Codec, error_feedback: bool = True):
+        self.codec = codec
+        self.error_feedback = error_feedback
+        self._held: Dict[Any, list] = {}        # site -> [held_tree, round]
+        self.raw_bytes = 0
+        self.encoded_bytes = 0
+        self.encodes = 0
+        self.dense_sends = 0
+
+    def encode(self, site: Any, global_tree: Any, round_index: int,
+               acked_round: Optional[int] = None
+               ) -> Tuple[Any, Dict[str, Any]]:
+        """Encode the current global for ``site``; returns
+        ``(payload_tree, meta)``.  ``acked_round`` is the round of the
+        last download the *site* says it decoded (rides the download
+        request) — any disagreement with the server record forces a
+        dense re-sync."""
+        g = _tree_map(lambda x: np.asarray(x, np.float32), global_tree)
+        if self.codec.name == "none":
+            self._held[site] = [g, int(round_index)]
+            return g, {"compression": "none", "delta": False}
+        st = self._held.get(site)
+        dense = (st is None or acked_round is None
+                 or int(acked_round) != st[1])
+        raw = tree_payload_nbytes(g)
+        if dense:
+            self._held[site] = [g, int(round_index)]
+            self.raw_bytes += raw
+            self.encoded_bytes += raw
+            self.encodes += 1
+            self.dense_sends += 1
+            return g, {"compression": "none", "delta": False}
+        held = st[0]
+        delta = _tree_map(np.subtract, g, held)
+        enc = self.codec.encode_tree(delta)
+        new_held = (_tree_map(np.add, held, decode_tree(enc))
+                    if self.error_feedback else g)
+        self._held[site] = [new_held, int(round_index)]
+        self.raw_bytes += raw
+        self.encoded_bytes += tree_payload_nbytes(enc)
+        self.encodes += 1
+        return enc, {"compression": self.codec.name, "delta": True}
+
+    def evict_stale(self, current_round: int, keep: int) -> None:
+        """Drop held references of sites that have not downloaded within
+        the ``keep`` most recent rounds — the same bounded-window rule as
+        the upload path's ``keep_globals`` ring.  An evicted site's next
+        download is a dense bootstrap (never a deadlock)."""
+        cutoff = int(current_round) - int(keep)
+        for sid in [s for s, (_, hr) in self._held.items() if hr <= cutoff]:
+            del self._held[sid]
+
+    # -- checkpoint persistence hooks (crash-resumable jobs) ---------------
+
+    def held_sites(self):
+        return sorted(self._held)
+
+    def held_state(self, site):
+        """``[held_tree, held_round]`` for ``site`` (or None)."""
+        return self._held.get(site)
+
+    def restore(self, site, held_tree, held_round: int) -> None:
+        self._held[site] = [
+            _tree_map(lambda x: np.asarray(x, np.float32), held_tree),
+            int(held_round)]
+
+
+def decode_download(tree: Any, meta: Dict[str, Any], reference: Any = None
+                    ) -> Any:
+    """Site side of :meth:`DownlinkCompressor.encode`: dequantize the
+    payload (tag dispatch — Pallas dequantize on accelerators) and, for
+    delta downloads, rebuild the full global against the site's held
+    copy of its last decoded download."""
+    if is_compressed(meta):
+        tree = decode_tree(tree)
+    if meta.get("delta"):
+        if reference is None:
+            raise ValueError("delta download but no held global to decode "
+                             "against")
         tree = _tree_map(lambda d, g: d + np.asarray(g, np.float32),
                          tree, reference)
     return tree

@@ -67,7 +67,8 @@ class AggregationServer:
                  initial_round: int = 0, initial_global: Any = None,
                  ckpt_store=None, ckpt_every: int = 10,
                  secure_agg=None, aggregator=None,
-                 max_upload_norm: Optional[float] = None):
+                 max_upload_norm: Optional[float] = None,
+                 down_compression=None, initial_down=None):
         self.num_sites = num_sites
         # robust combine rule for the site→global reduction.  Rank-based
         # rules (trimmed/median/krum) need the round's individual rows,
@@ -116,6 +117,19 @@ class AggregationServer:
         self._globals: Dict[int, Any] = {}
         if initial_global is not None:
             self._globals[self._round] = initial_global
+        # downlink compression: per-site error-feedback references so
+        # every broadcast is a quantized delta against the global that
+        # site last acknowledged (dense bootstrap on join/evict/ack
+        # mismatch); sites opt in per download request with meta["down"]
+        down_codec = compression.resolve_codec(down_compression)
+        self._down = (compression.DownlinkCompressor(down_codec)
+                      if down_codec.name != "none" else None)
+        if self._down is not None and initial_down:
+            # crash resume: per-site held references persisted alongside
+            # the global — a resumed server serves the same delta stream
+            # the killed one would have (loss-identical trajectories)
+            for sid, (held, held_round) in initial_down.items():
+                self._down.restore(int(sid), held, held_round)
         # crash-resume hook: checkpoint the global server-side as rounds
         # complete (the driver only sees the FINAL global on the socket
         # transports, so mid-job persistence has to happen here)
@@ -148,6 +162,18 @@ class AggregationServer:
         self.server = Server(host, port, self._handle, decode_writable=True,
                              stats=self.stats, wire=wire).start()
         self.addr = self.server.addr
+
+    @property
+    def down_counters(self) -> Optional[dict]:
+        """Payload-level downlink codec counters, or None when downloads
+        ride dense (``raw`` vs ``encoded`` bytes exclude wire framing —
+        the ratio the benchmarks report)."""
+        if self._down is None:
+            return None
+        return {"raw": self._down.raw_bytes,
+                "encoded": self._down.encoded_bytes,
+                "encodes": self._down.encodes,
+                "dense_sends": self._down.dense_sends}
 
     def _discount(self, upload_round: int) -> Optional[float]:
         """Lock held.  The round currently being collected is
@@ -206,6 +232,11 @@ class AggregationServer:
         for old in [k for k in self._globals
                     if k <= self._round - self.keep_globals]:
             del self._globals[old]
+        if self._down is not None:
+            # bound the per-site download references with the same
+            # window as the upload ring: a site silent past it gets a
+            # dense bootstrap on its next download, never a deadlock
+            self._down.evict_stale(self._round, self.keep_globals)
         self._checkpoint_global()
         self._lock.notify_all()
 
@@ -217,6 +248,15 @@ class AggregationServer:
         if self._ckpt_store is not None and round_index % self._ckpt_every == 0:
             self._ckpt_store.save("global", round_index, self._global,
                                   meta={"server_round": self._round})
+            if self._down is not None:
+                # the per-site held references ride the same grid: a
+                # resumed server must encode deltas against exactly what
+                # each resumed site holds, or trajectories diverge
+                for sid in self._down.held_sites():
+                    held, held_round = self._down.held_state(sid)
+                    self._ckpt_store.save(
+                        f"downref{sid}", round_index, held,
+                        meta={"held_round": int(held_round)})
 
     # -- elastic membership -------------------------------------------------
 
@@ -309,7 +349,18 @@ class AggregationServer:
                     if self._discount(upload_round) is None:
                         return encode_message(
                             "ack", {"round": self._round, "stale": True}, None)
-                    reference = self._globals.get(int(meta.get("base_round", 0)))
+                    base_round = int(meta.get("base_round", 0))
+                    reference = None
+                    if self._down is not None:
+                        # under downlink compression the site anchored its
+                        # delta to the *decoded* download it holds, not the
+                        # exact global — decode against the server's held
+                        # copy (bit-equal to the site's by construction)
+                        st = self._down.held_state(site)
+                        if st is not None and st[1] == base_round:
+                            reference = st[0]
+                    if reference is None:
+                        reference = self._globals.get(base_round)
                 if meta.get("delta") and reference is None:
                     # reference global already evicted: the site resyncs
                     # and re-uploads against a fresh one (or dense)
@@ -400,6 +451,13 @@ class AggregationServer:
                                     f"(server at round {self._round}, "
                                     f"{len(self._folded)} uploads folded)"},
                         None)
+                if self._down is not None and meta.get("down"):
+                    site = int(meta["site"])
+                    payload, dmeta = self._down.encode(
+                        site, self._global, self._round,
+                        acked_round=meta.get("acked_round"))
+                    return encode_message(
+                        "global", {"round": self._round, **dmeta}, payload)
                 return encode_message("global", {"round": self._round}, self._global)
         if kind == "status":
             return encode_message(

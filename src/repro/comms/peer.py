@@ -114,13 +114,28 @@ class Peer:
         return ack
 
     def download(self, server_addr: Address, round_index: int,
-                 with_meta: bool = False) -> Any:
+                 with_meta: bool = False, down: bool = False,
+                 acked_round: Optional[int] = None) -> Any:
         """Block until the server completes ``round_index`` and return the
         global model; ``with_meta=True`` also returns the reply metadata
         (``meta["round"]`` = the server round actually served — under a
-        buffered scheduler it may be ahead of the requested one)."""
+        buffered scheduler it may be ahead of the requested one).
+
+        ``down=True`` opts into compressed downloads: the request then
+        carries this site's identity and ``acked_round`` — the round of
+        the last download it decoded — so a down-compressing server can
+        serve a quantized delta against the site's held global (any
+        disagreement, or ``acked_round=None``, gets a dense bootstrap
+        reply; see ``compression.DownlinkCompressor``).  The reply meta
+        then carries ``compression``/``delta`` tags for
+        ``decode_download``."""
+        meta: Dict[str, Any] = {"round": round_index, "site": self.site_id}
+        if down:
+            meta["down"] = True
+            if acked_round is not None:
+                meta["acked_round"] = int(acked_round)
         _, meta, tree = self._channel(server_addr).request(
-            "download", {"round": round_index}, None)
+            "download", meta, None)
         return (tree, meta) if with_meta else tree
 
     def register(self, coord_addr: Address):

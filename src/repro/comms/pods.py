@@ -106,6 +106,10 @@ class PodAggregationServer(AggregationServer):
                 for old in [k for k in self._globals
                             if k <= self._round - self.keep_globals]:
                     del self._globals[old]
+                if self._down is not None:
+                    # pod rounds advance here, not in _on_ready — the
+                    # per-site download references age on the same clock
+                    self._down.evict_stale(self._round, self.keep_globals)
                 self._lock.notify_all()
             return encode_message("ack", {"round": self._round}, None)
         return super()._handle(kind, meta, tree)
@@ -131,8 +135,10 @@ class PodTransport:
                  start_round: int = 0, initial_global: Any = None,
                  ckpt_store=None, ckpt_every: int = 10,
                  codec=None, error_feedback: bool = True,
+                 down_codec=None,
                  mask_secret: Optional[str] = None,
-                 aggregator=None, max_upload_norm: Optional[float] = None):
+                 aggregator=None, max_upload_norm: Optional[float] = None,
+                 initial_down=None):
         topology.validate(num_sites)
         # robust combine applies at the INTRA tier — each pod defends
         # against its own members (the Byzantine surface); the root
@@ -148,6 +154,14 @@ class PodTransport:
         self.codec = codec if codec is not None and codec.name != "none" \
             else None
         self.error_feedback = error_feedback
+        # down_codec: BOTH install hops compress — the root encodes each
+        # leader's download as a per-leader delta (cross-pod/WAN link),
+        # and every pod server encodes its sites' downloads as per-site
+        # deltas (intra-pod link); leaders decode then install the dense
+        # global into their pod server locally.
+        self.down_codec = down_codec \
+            if down_codec is not None and down_codec.name != "none" else None
+        self.initial_down = initial_down
         # mask_secret: secure aggregation at BOTH tiers — sites mask
         # against their pod's scheduled members, leaders mask partials
         # against the round's active pods, so neither the pod servers
@@ -210,7 +224,8 @@ class PodTransport:
             initial_round=self.start_round,
             initial_global=self.initial_global,
             ckpt_store=self.ckpt_store, ckpt_every=self.ckpt_every,
-            secure_agg=root_sa)
+            secure_agg=root_sa, down_compression=self.down_codec,
+            initial_down=self.initial_down)
         # pod servers keep GLOBAL site ids (uploads carry them), so they
         # take the full case-weight table; `expected` comes from each
         # upload's pod-local active_sites count.  intra="uniform" folds
@@ -227,7 +242,8 @@ class PodTransport:
                                  initial_global=self.initial_global,
                                  secure_agg=self._pod_sa[i],
                                  aggregator=self.aggregator,
-                                 max_upload_norm=self.max_upload_norm)
+                                 max_upload_norm=self.max_upload_norm,
+                                 down_compression=self.down_codec)
             for i in range(p)]
         self._leaders = [threading.Thread(target=self._leader, args=(i,),
                                           daemon=True) for i in range(p)]
@@ -293,6 +309,13 @@ class PodTransport:
             from repro.comms.compression import (KEEP_GLOBALS_DEFAULT,
                                                  UploadCompressor)
             comp = UploadCompressor(self.codec, self.error_feedback)
+        # compressed downloads: the leader holds its own copy of the last
+        # decoded root global and acks its round, entering the root's
+        # per-leader residual stream (first pull is a dense bootstrap)
+        down = self.down_codec is not None
+        down_ref = down_acked = None
+        if down:
+            from repro.comms.compression import decode_download
         if self.mask_secret is not None:
             from repro.privacy import SecureAggClient
             sa = SecureAggClient(self.mask_secret, "pod", pod_id)
@@ -333,7 +356,12 @@ class PodTransport:
                                 active_sites=self._active_pods(r),
                                 meta_extra=xmeta)
                 want = 0 if buffered else r + 1
-                g, dmeta = peer.download(self.root.addr, want, with_meta=True)
+                g, dmeta = peer.download(self.root.addr, want, with_meta=True,
+                                         down=down, acked_round=down_acked)
+                if g is not None and down:
+                    g = decode_download(g, dmeta, down_ref)
+                    down_ref = g
+                    down_acked = int(dmeta["round"])
                 if g is not None:
                     base_round = int(dmeta["round"])
                     if comp is not None:   # next delta anchors to this pull
@@ -355,24 +383,29 @@ class PodTransport:
 
     # -- byte accounting ----------------------------------------------------
 
-    def comm(self, compression: str = "none") -> Dict[str, Any]:
+    def comm(self, compression: str = "none",
+             down_compression: str = "none") -> Dict[str, Any]:
         """Per-tier wire-byte split: intra = site↔pod-server traffic
         summed over pods, cross = leader↔root traffic (the WAN link)."""
-        intra_up = intra_down = intra_count = 0
+        intra_up = intra_down = intra_count = down_count = 0
         for s in self.pod_servers:
             snap = s.stats.snapshot()
             intra_up += snap.get("upload", {}).get("in_bytes", 0)
             intra_down += snap.get("download", {}).get("out_bytes", 0)
             intra_count += snap.get("upload", {}).get("count", 0)
+            down_count += snap.get("download", {}).get("count", 0)
         rsnap = self.root.stats.snapshot() if self.root else {}
         cross_up = rsnap.get("upload", {}).get("in_bytes", 0)
         cross_down = rsnap.get("download", {}).get("out_bytes", 0)
         return {"upload_bytes": intra_up + cross_up,
                 "download_bytes": intra_down + cross_down,
+                "total_bytes": intra_up + cross_up + intra_down + cross_down,
                 "intra_pod_upload_bytes": intra_up,
                 "intra_pod_download_bytes": intra_down,
                 "cross_pod_upload_bytes": cross_up,
                 "cross_pod_download_bytes": cross_down,
                 "upload_count": intra_count,
+                "download_count": down_count,
                 "pods": self.topology.num_pods,
-                "compression": compression, "simulated": False}
+                "compression": compression,
+                "down_compression": down_compression, "simulated": False}

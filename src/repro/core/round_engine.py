@@ -312,9 +312,15 @@ def _compressed_fold(u, w, codec_name: str, chunkw: int, align: int,
     else:
         deq = _qdq_tree(u, chunkw, align, codec_name)
     if dense is not None:
-        deq = jax.tree.map(
-            lambda full, q: jnp.where(dense, full.astype(jnp.float32), q),
-            u, deq)
+        # `dense` is either a per-round scalar (the top-k sparsifier's
+        # round-0 bootstrap) or a per-site [S] mask (bidirectional
+        # compression: each site bootstraps on ITS OWN rejoin schedule)
+        def _sel(full, q):
+            d = dense
+            if getattr(d, "ndim", 0) == 1:
+                d = d.reshape((-1,) + (1,) * (full.ndim - 1))
+            return jnp.where(d, full.astype(jnp.float32), q)
+        deq = jax.tree.map(_sel, u, deq)
     if fold_tree is not None:
         gdelta = fold_tree(deq)
     else:
@@ -333,6 +339,54 @@ def _encoded_nbytes(params_stacked, chunkw: int, align: int) -> int:
         rows, c = _chunk_geom(n, chunkw, align)
         total += rows * c + rows * 4
     return total
+
+
+def _down_install_tree(gref, down_ref, codec_name: str, chunkw: int,
+                       align: int, accel: bool, fraction: float):
+    """Traced per-site compressed install: each site's new model is its
+    held download reference plus the quantized (or top-k sparsified)
+    delta of the fresh global against that reference — the device twin
+    of ``DownlinkCompressor.encode`` + ``decode_download``.  Feeding the
+    result back as the next round's reference IS the downlink error-
+    feedback recurrence (``held ← held + deQ(Q(g − held))``), so
+    quantization errors telescope across rounds.  On accelerators the
+    int8 path runs the fused ``dequant_install`` Pallas kernel, so the
+    dense per-site deltas never materialize in HBM."""
+    delta = jax.tree.map(lambda g, h: g[None] - h, gref, down_ref)
+    if accel and codec_name == "int8":
+        from repro.kernels import ops
+
+        def one(d, h):
+            mat, n = _to_chunks(d, chunkw, align)
+            s, rows, c = mat.shape
+            q, sc = ops.quantize_int8(mat.reshape(s * rows, c))
+            hmat, _ = _to_chunks(h, chunkw, align)
+            inst = ops.dequant_install(q.reshape(s, rows, c),
+                                       sc.reshape(s, rows), hmat)
+            return _from_chunks(inst, d.shape[1:], n)
+        return jax.tree.map(one, delta, down_ref)
+    if codec_name == "topk-fixed":
+        qd = _topk_tree(delta, fraction)
+    else:
+        qd = _qdq_tree(delta, chunkw, align, codec_name)
+    return jax.tree.map(jnp.add, down_ref, qd)
+
+
+def _bootstrap_masks(masks: np.ndarray, keep: int) -> np.ndarray:
+    """[rounds, S] — which (round, site) exchanges bootstrap dense under
+    bidirectional compression: the site's previous participation is
+    ``keep`` or more rounds back (its upload reference left the server's
+    ``keep_globals`` window and its download reference was evicted on
+    the same clock), or it never participated.  A pure function of the
+    participation masks, so a resumed run replays the identical
+    schedule."""
+    rounds, s = masks.shape
+    last = np.full(s, -keep, np.int64)          # "never": forces bootstrap
+    boot = np.zeros((rounds, s), bool)
+    for r in range(rounds):
+        boot[r] = masks[r] & (r - last >= keep)
+        last[masks[r]] = r
+    return boot
 
 
 def _accel() -> bool:
@@ -481,7 +535,9 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
             uploads = int(all_masks.sum())
             comm = {"upload_bytes": uploads * nbytes,
                     "download_bytes": uploads * nbytes,
-                    "upload_count": uploads, "compression": "none",
+                    "total_bytes": 2 * uploads * nbytes,
+                    "upload_count": uploads, "download_count": uploads,
+                    "compression": "none", "down_compression": "none",
                     "simulated": True}
     return recorder.result(F.global_model(state, ctx), transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
@@ -496,14 +552,29 @@ def _run_sync_scan(job, bundle, scheduler, rounds: int,
 
 
 def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
-                         resume_round: Optional[int] = None) -> JobResult:
+                         resume_round: Optional[int] = None,
+                         down_codec=None) -> JobResult:
     """Compressed sync rounds on device.  Local training runs under the
     strategy's *site half* — ``individual`` for FedAvg, ``fedprox-local``
     for FedProx (the Eq. 2 proximal pull, re-anchored to every broadcast
     global inside the scan) — and the simulated server fold goes through
     the codec's device twin: int8/fp8 quantize→dequantize or the
     ``topk-fixed`` exact-k sparsifier (dense on the bootstrap round).  A
-    pods topology swaps the flat fold for the two-tier segment-reduce."""
+    pods topology swaps the flat fold for the two-tier segment-reduce.
+
+    With ``down_codec`` (bidirectional compression) the broadcast rides
+    the codec seam too: per-site download references become additional
+    ``[S, …]`` scan carry, every install is a quantized delta against
+    that site's held reference (``_down_install_tree`` — the fused
+    ``dequant_install`` kernel on accelerators), uploads anchor to the
+    site's OWN install instead of the shared global, and the fold becomes
+    ``g = Σ wₛ(anchorₛ + deQ(uₛ))`` — exactly the socket server's
+    per-site decode.  Sites whose reference left the ``keep_globals``
+    window bootstrap dense both ways on a host-precomputed
+    ``_bootstrap_masks`` schedule.  Engines anchor FedProx's Eq. 2 at
+    the exact global (the vmapped round body broadcasts ONE anchor);
+    socket sites anchor at their decoded install — the difference is the
+    downlink quantization error, which the EF recurrence telescopes."""
     local_strategy = ("fedprox-local" if job.strategy == "fedprox"
                       else "individual")
     prox = local_strategy == "fedprox-local"
@@ -521,6 +592,12 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
     align = 128 if (accel and codec.name == "int8") else 1
     fraction = float(getattr(codec, "fraction", 0.1))
     topk = codec.name == "topk-fixed"
+    up = codec.name != "none"
+    down = down_codec is not None and down_codec.name != "none"
+    d_chunkw = int(getattr(down_codec, "chunk", 1024)) if down else chunkw
+    d_align = 128 if (accel and down and down_codec.name == "int8") else 1
+    d_fraction = (float(getattr(down_codec, "fraction", 0.1)) if down
+                  else fraction)
     error_feedback = bool(job.error_feedback)
     identity = np.arange(num_sites)
     no_recv = np.zeros(num_sites, bool)
@@ -533,6 +610,18 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
                              state["params"])
     residual = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
                             state["params"])
+
+    def fold_plain(tree, w, active, scale):
+        """Σ wₛ · treeₛ over a stacked [S, …] tree — the flat Eq. 1
+        reduce, or the two-tier segment-reduce under a pods topology."""
+        flat, layout = engine.flatten(tree)
+        if pod_ids is not None:
+            g = engine.reduce_pods_flat(flat, case_w, active, pod_ids,
+                                        topo.num_pods, topo.intra,
+                                        topo.inter, scale=scale)
+        else:
+            g = engine.reduce_flat(flat, w)
+        return engine.unflatten(g, layout)
 
     def chunk_fn(carry, xs):
         def body(c, x):
@@ -550,11 +639,7 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
             fold_tree = None
             if pod_ids is not None:
                 def fold_tree(deq, active=active, scale=scale):
-                    flat, layout = engine.flatten(deq)
-                    g = engine.reduce_pods_flat(flat, case_w, active, pod_ids,
-                                                topo.num_pods, topo.intra,
-                                                topo.inter, scale=scale)
-                    return engine.unflatten(g, layout)
+                    return fold_plain(deq, None, active, scale)
             gdelta, new_res = _compressed_fold(
                 u, w, codec.name, chunkw, align, accel, engine,
                 fold_tree=fold_tree,
@@ -572,20 +657,107 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
             return (st, ref, res), {"loss": metrics["loss"]}
         return jax.lax.scan(body, carry, xs)
 
-    runner = _ChunkRunner(chunk_fn)
+    def chunk_fn_bidir(carry, xs):
+        def body(c, x):
+            st, gref, dref, res = c
+            active = x["active"]
+            boot = x["bootstrap"]                       # [S] bool
+            st, metrics = fl_round(st, x["batches"],
+                                   {"active": active, "partner": identity,
+                                    "is_receiver": no_recv})
+            scale = x.get("wscale")
+            w = normalized_weights(case_w, active, scale)
+
+            def rowsel(a, b):
+                # per-site select on the stacked axis
+                return jax.tree.map(
+                    lambda aa, bb: jnp.where(
+                        boot.reshape((-1,) + (1,) * (aa.ndim - 1)), aa, bb),
+                    a, b)
+            # upload anchor: the site's OWN held install; a site whose
+            # reference left the server window uploads dense (anchor 0)
+            anchor = rowsel(jax.tree.map(jnp.zeros_like, dref), dref)
+            if up:
+                u = jax.tree.map(
+                    lambda p, a, e: p.astype(jnp.float32) - a + e,
+                    st["params"], anchor, res)
+                fold_tree = None
+                if pod_ids is not None:
+                    def fold_tree(deq, active=active, scale=scale):
+                        return fold_plain(deq, None, active, scale)
+                gdelta, new_res = _compressed_fold(
+                    u, w, codec.name, chunkw, align, accel, engine,
+                    fold_tree=fold_tree, dense=boot if topk else None,
+                    fraction=fraction)
+                if error_feedback:
+                    res = stacking.where_site(active, new_res, res)
+                # per-site decode: g = Σ wₛ(anchorₛ + deQ(uₛ)) — the
+                # anchors differ per site, so the fold carries them too
+                gref = jax.tree.map(
+                    jnp.add, fold_plain(anchor, w, active, scale), gdelta)
+            else:
+                # down-only compression: uploads ride dense fp32
+                gref = fold_plain(
+                    jax.tree.map(lambda p: p.astype(jnp.float32),
+                                 st["params"]), w, active, scale)
+            # downlink: quantized delta against each site's held
+            # reference; bootstrap rows (new/evicted) get the dense global
+            inst = _down_install_tree(gref, dref, down_codec.name, d_chunkw,
+                                      d_align, accel, d_fraction)
+            inst = rowsel(jax.tree.map(
+                lambda g, q: jnp.broadcast_to(g[None], q.shape), gref, inst),
+                inst)
+            dref = stacking.where_site(active, inst, dref)
+            bcast = jax.tree.map(lambda i_, p: i_.astype(p.dtype),
+                                 inst, st["params"])
+            st = {**st, "params": stacking.where_site(active, bcast,
+                                                      st["params"])}
+            if prox:        # engines broadcast ONE Eq. 2 anchor (exact
+                            # global); socket sites anchor at their install
+                st = {**st, "strategy": {"global": gref}}
+            return (st, gref, dref, res), {"loss": metrics["loss"]}
+        return jax.lax.scan(body, carry, xs)
+
+    engine_tag = "compressed-scan-bidir" if down else "compressed-scan"
+    runner = _ChunkRunner(chunk_fn_bidir if down else chunk_fn)
     recorder = job.recorder(rounds, num_sites)
     dense_nbytes = per_site_nbytes(state["params"])
-    enc_nbytes = (_topk_nbytes(state["params"], fraction) if topk
+    enc_nbytes = (dense_nbytes if not up
+                  else _topk_nbytes(state["params"], fraction) if topk
                   else _encoded_nbytes(state["params"], chunkw, align))
-    # the wire codec's dense_bootstrap rule: round 0 (no reference global
-    # yet) rides dense; sparsity starts once deltas exist
-    round_enc = [dense_nbytes if (topk and r == 0) else enc_nbytes
-                 for r in range(rounds)]
-    carry = (state, reference, residual)
+    # host-precomputed per-round wire bytes — bit-identical to the loop
+    # twin's tree_payload_nbytes counters.  Dense bootstrap uploads still
+    # ride the codec (quantized dense) except under top-k, whose
+    # dense_bootstrap rule ships raw fp32; dense bootstrap downloads
+    # always ship raw fp32 (the DownlinkCompressor's "none" reply).
+    if down:
+        boot_mask = _bootstrap_masks(masks, KEEP_GLOBALS_DEFAULT)
+        down_enc = (_topk_nbytes(state["params"], d_fraction)
+                    if down_codec.name == "topk-fixed"
+                    else _encoded_nbytes(state["params"], d_chunkw, d_align))
+        per_up = (np.where(boot_mask, dense_nbytes, enc_nbytes) if topk
+                  else np.full(masks.shape, enc_nbytes, np.int64))
+        round_up_bytes = np.where(masks, per_up, 0).sum(axis=1)
+        round_down_bytes = np.where(
+            masks, np.where(boot_mask, dense_nbytes, down_enc), 0).sum(axis=1)
+    else:
+        # the wire codec's dense_bootstrap rule: round 0 (no reference
+        # global yet) rides dense; sparsity starts once deltas exist
+        round_up_bytes = np.asarray(
+            [int(masks[r].sum()) * (dense_nbytes if (topk and r == 0)
+                                    else enc_nbytes)
+             for r in range(rounds)], np.int64)
+        round_down_bytes = masks.sum(axis=1).astype(np.int64) * dense_nbytes
+    if down:
+        down_ref0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                 state["params"])
+        carry = (state, reference, down_ref0, residual)
+    else:
+        carry = (state, reference, residual)
     start_round = 0
     if resume_round is not None:
         lmeta = recorder.store.meta("driver_state", resume_round)
-        check_engine_tag(lmeta, "compressed-scan")
+        check_engine_tag(lmeta, engine_tag)
         check_privacy_tag(lmeta, job.dp_tag())
         loaded, _ = recorder.store.load(
             "driver_state", resume_round, jax.tree.map(np.asarray, carry))
@@ -600,39 +772,49 @@ def _run_compressed_scan(job, bundle, scheduler, rounds: int, codec,
               "active": jnp.asarray(masks[r0:r0 + kc])}
         if wscale is not None:
             xs["wscale"] = jnp.asarray(wscale[r0:r0 + kc])
-        if topk:
+        if down:
+            xs["bootstrap"] = jnp.asarray(boot_mask[r0:r0 + kc])
+        elif topk:
             xs["bootstrap"] = jnp.asarray(
                 [r == 0 for r in range(r0, r0 + kc)])
         carry, ys, exec_s = runner.run(kc, carry, xs)
         losses = np.asarray(ys["loss"])
         step_s = exec_s / kc
         for i in range(kc):
+            extra = {"step_s": step_s, "wall_s": step_s,
+                     "upload_bytes": int(round_up_bytes[r0 + i])}
+            if down:
+                extra["download_bytes"] = int(round_down_bytes[r0 + i])
             recorder.record(
                 r0 + i, losses[i], masks[r0 + i],
                 global_fn=(lambda c=carry: c[1]) if i == kc - 1 else None,
-                extra={"step_s": step_s, "wall_s": step_s,
-                       "upload_bytes":
-                           int(masks[r0 + i].sum()) * round_enc[r0 + i]})
+                extra=extra)
         recorder.save_state(r0 + kc - 1,
                             lambda: jax.tree.map(np.asarray, carry),
-                            meta={"engine": "compressed-scan",
+                            meta={"engine": engine_tag,
                                   "dp": job.dp_tag()})
         r0 += kc
-    state, reference, _ = carry
+    state, reference = carry[0], carry[1]
     uploads = int(masks[start_round:].sum())
-    upload_bytes = int(sum(int(masks[r].sum()) * round_enc[r]
-                           for r in range(start_round, rounds)))
+    upload_bytes = int(round_up_bytes[start_round:].sum())
+    download_bytes = int(round_down_bytes[start_round:].sum())
     comm = {"upload_bytes": upload_bytes,
             "upload_raw_bytes": uploads * dense_nbytes,
-            "download_bytes": uploads * dense_nbytes,
-            "upload_count": uploads, "compression": codec.name,
+            "download_bytes": download_bytes,
+            "download_raw_bytes": uploads * dense_nbytes,
+            "total_bytes": upload_bytes + download_bytes,
+            "upload_count": uploads, "download_count": uploads,
+            "compression": codec.name,
+            "down_compression": down_codec.name if down else "none",
             "simulated": True}
     if topo.is_pods:
         from repro.core.topology import simulated_pods_comm
-        comm.update(simulated_pods_comm(topo, masks[start_round:],
-                                        dense_nbytes,
-                                        intra_upload_bytes=upload_bytes,
-                                        compression=codec.name))
+        comm.update(simulated_pods_comm(
+            topo, masks[start_round:], dense_nbytes,
+            intra_upload_bytes=upload_bytes,
+            intra_download_bytes=download_bytes if down else None,
+            compression=codec.name,
+            down_compression=down_codec.name if down else "none"))
     return recorder.result(reference, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
                            compile_s=runner.compile_s,
@@ -810,11 +992,13 @@ def _run_buffered_scan(job, bundle, scheduler, rounds: int, codec,
     comm = None
     if compress:
         enc = rows_f * c_f + rows_f * 4          # flat-layout payload bytes
+        down_b = total_folds * per_site_nbytes(state["params"])
         comm = {"upload_bytes": total_folds * enc,
                 "upload_raw_bytes": total_folds * n * 4,
-                "download_bytes":
-                    total_folds * per_site_nbytes(state["params"]),
-                "upload_count": total_folds, "compression": codec.name,
+                "download_bytes": down_b,
+                "total_bytes": total_folds * enc + down_b,
+                "upload_count": total_folds, "download_count": total_folds,
+                "compression": codec.name, "down_compression": "none",
                 "simulated": True}
     return recorder.result(global_params, transport="stacked",
                            scheduler=scheduler.name, state=state, comm=comm,
@@ -903,6 +1087,11 @@ def execute_sharded(job, bundle, scheduler, codec, rounds: int,
     if codec.name not in ("none", "int8"):
         raise ValueError("shard_sites=True supports compression 'none' or "
                          f"'int8', not {codec.name!r}")
+    from repro.comms.compression import resolve_codec
+    if resolve_codec(getattr(job, "down_compression", "none")).name != "none":
+        raise ValueError("shard_sites=True broadcasts the global through "
+                         "the mesh collective, not the download codec; run "
+                         "down_compression jobs on the dense engines")
     if job.device_data:
         raise ValueError("shard_sites=True generates only the sampled "
                          "rows' batches host-side; device_data=True would "
@@ -1127,7 +1316,9 @@ def execute_sharded(job, bundle, scheduler, codec, rounds: int,
         comm = {"upload_bytes": uploads * enc,
                 "upload_raw_bytes": uploads * dense_nbytes,
                 "download_bytes": uploads * dense_nbytes,
-                "upload_count": uploads, "compression": codec.name,
+                "total_bytes": uploads * (enc + dense_nbytes),
+                "upload_count": uploads, "download_count": uploads,
+                "compression": codec.name, "down_compression": "none",
                 "simulated": True}
         if topo.is_pods:
             from repro.core.topology import simulated_pods_comm
@@ -1140,7 +1331,9 @@ def execute_sharded(job, bundle, scheduler, codec, rounds: int,
     else:
         comm = {"upload_bytes": uploads * dense_nbytes,
                 "download_bytes": uploads * dense_nbytes,
-                "upload_count": uploads, "compression": "none",
+                "total_bytes": 2 * uploads * dense_nbytes,
+                "upload_count": uploads, "download_count": uploads,
+                "compression": "none", "down_compression": "none",
                 "simulated": True}
     comm.update({"sharded": True, "devices": num_devices, "k_cap": k_cap})
 
@@ -1162,8 +1355,8 @@ def execute_sharded(job, bundle, scheduler, codec, rounds: int,
 
 
 def execute_stacked(job, bundle, scheduler, codec, rounds: int,
-                    resume_round: Optional[int] = None
-                    ) -> Optional[JobResult]:
+                    resume_round: Optional[int] = None,
+                    down_codec=None) -> Optional[JobResult]:
     """Run ``job`` on the compiled scan engine, or return ``None`` when
     the engine cannot replicate the job's semantics (the caller falls
     back to the retired per-round loop):
@@ -1171,21 +1364,25 @@ def execute_stacked(job, bundle, scheduler, codec, rounds: int,
       * ``topk-sparse`` uploads (data-dependent index payloads — the
         fixed-k ``topk-fixed`` variant compiles),
       * buffered runs whose ``max_staleness`` reaches past the
-        ``keep_globals`` decode-reference ring.
+        ``keep_globals`` decode-reference ring,
+      * ``topk-sparse`` downloads under bidirectional compression.
 
     ``device_data=True`` is an explicit request for on-device batch
     generation (token tasks AND the jnp dose/seg generators) and raises
     when the combination doesn't support it.
     """
     buffered = isinstance(scheduler, BufferedScheduler)
+    down = down_codec is not None and down_codec.name != "none"
     if job.device_data:
-        if (buffered or codec.name != "none" or job.strategy == "pooled"
+        if (buffered or codec.name != "none" or down
+                or job.strategy == "pooled"
                 or getattr(bundle, "traced_stacked", None) is None):
             raise ValueError(
                 "device_data=True (on-device batch generation) currently "
                 "supports sync uncompressed jobs whose task has a traced "
                 "generator (tokens, and dose/seg without site_pools); use "
-                "host batches for buffered scheduling or compressed uploads")
+                "host batches for buffered scheduling or compressed "
+                "uploads/downloads")
         if job.pod_dropout:
             raise ValueError(
                 "device_data=True runs the Algorithm-2 chain on device, "
@@ -1193,14 +1390,17 @@ def execute_stacked(job, bundle, scheduler, codec, rounds: int,
                 "host-precomputed schedule (device_data=False)")
     if codec.name not in ("none", "int8", "fp8", "topk-fixed"):
         return None
+    if down and down_codec.name not in ("int8", "fp8", "topk-fixed"):
+        return None
     if buffered:
         if compress_past_ring(scheduler, codec) or codec.name == "topk-fixed":
             return None        # flat-chunk qdq only; top-k buffers host-side
         return _run_buffered_scan(job, bundle, scheduler, rounds, codec,
                                   resume_round)
-    if codec.name != "none":
+    if codec.name != "none" or down:
         return _run_compressed_scan(job, bundle, scheduler, rounds, codec,
-                                    resume_round)
+                                    resume_round,
+                                    down_codec=down_codec if down else None)
     return _run_sync_scan(job, bundle, scheduler, rounds, resume_round)
 
 

@@ -173,25 +173,32 @@ def active_pod_counts(topology: Topology, masks: np.ndarray) -> np.ndarray:
 
 def simulated_pods_comm(topology: Topology, masks: np.ndarray, nbytes: int,
                         intra_upload_bytes: Optional[int] = None,
-                        compression: str = "none") -> dict:
+                        intra_download_bytes: Optional[int] = None,
+                        compression: str = "none",
+                        down_compression: str = "none") -> dict:
     """The stacked simulator's per-tier byte split for a pods run (the
     socket transports report measured ``WireStats`` with the same keys):
     intra-pod = one upload + one broadcast per active site per round,
     cross-pod = one fp32 partial up + one global down per *active pod*
     per round.  ``intra_upload_bytes`` overrides the site-upload total
     with the codec's accumulated payload bytes (compressed runs);
-    partials and broadcasts ride dense fp32."""
+    ``intra_download_bytes`` does the same for the broadcasts under
+    bidirectional compression.  Partials and uncompressed broadcasts
+    ride dense fp32."""
     uploads = int(masks.sum())
     cross_count = int(active_pod_counts(topology, masks).sum())
     intra_up = int(intra_upload_bytes if intra_upload_bytes is not None
                    else uploads * nbytes)
-    intra_down = uploads * nbytes
+    intra_down = int(intra_download_bytes if intra_download_bytes is not None
+                     else uploads * nbytes)
     cross = cross_count * nbytes
     return {"upload_bytes": intra_up + cross,
             "download_bytes": intra_down + cross,
+            "total_bytes": intra_up + intra_down + 2 * cross,
             "intra_pod_upload_bytes": intra_up,
             "intra_pod_download_bytes": intra_down,
             "cross_pod_upload_bytes": cross,
             "cross_pod_download_bytes": cross,
             "upload_count": uploads, "pods": topology.num_pods,
-            "compression": compression, "simulated": True}
+            "compression": compression,
+            "down_compression": down_compression, "simulated": True}

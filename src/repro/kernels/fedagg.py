@@ -99,6 +99,53 @@ def fedagg_dequant(q, scales, u, weights, *, block_c: int = 32,
     return (g[:c], r[:, :c]) if padded != c else (g, r)
 
 
+def _dequant_install_kernel(q_ref, s_ref, b_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # [S, block_c, chunk]
+    deq = q * s_ref[...][..., None]               # scales [S, block_c]
+    o_ref[...] = b_ref[...] + deq                 # install = held + deQ(delta)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def dequant_install(q, scales, base, *, block_c: int = 32,
+                    interpret: Optional[bool] = None):
+    """Fused dequantize + per-site install for quantized downloads.
+
+    The downlink mirror of :func:`fedagg_dequant`: each site's int8
+    broadcast delta (``q`` [S, C, chunk] with per-chunk fp32 ``scales``
+    [S, C]) is dequantized and added onto that site's held reference
+    ``base`` [S, C, chunk] in ONE pass — the dense fp32 per-site deltas
+    never exist in HBM.  Returns the installed models [S, C, chunk];
+    installing this result back as the next round's ``base`` is exactly
+    the server-side error-feedback recurrence ``held ← held + deQ(Q(g −
+    held))``, so downlink quantization errors telescope instead of
+    accumulating.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    s, c, chunk = q.shape
+    if c == 0:
+        return jnp.zeros((s, 0, chunk), jnp.float32)
+    block_c = min(block_c, c)
+    padded = _round_up(c, block_c)
+    if padded != c:
+        q = jnp.pad(q, ((0, 0), (0, padded - c), (0, 0)))
+        scales = jnp.pad(scales, ((0, 0), (0, padded - c)))
+        base = jnp.pad(base, ((0, 0), (0, padded - c), (0, 0)))
+    out = pl.pallas_call(
+        _dequant_install_kernel,
+        grid=(padded // block_c,),
+        in_specs=[
+            pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, block_c), lambda i: (0, i)),
+            pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, block_c, chunk), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, padded, chunk), jnp.float32),
+        interpret=interpret,
+    )(q, scales, base)
+    return out[:, :c] if padded != c else out
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def fedagg(stacked, weights, *, block_n: int = 65536,
            interpret: Optional[bool] = None):

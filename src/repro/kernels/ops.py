@@ -90,6 +90,18 @@ def fedagg_dequant(q, scales, u, weights, *, block_c: int = 32,
     return _fused(q, scales, u, weights, block_c=block_c, interpret=interp)
 
 
+def dequant_install(q, scales, base, *, block_c: int = 32,
+                    interpret: Optional[bool] = None):
+    """Fused dequantize + install for quantized broadcast deltas
+    ([S, C, chunk] int8 values + [S, C] scales + [S, C, chunk] held
+    references) → the per-site installed models ``base + deQ(q)`` — the
+    downlink mirror of :func:`fedagg_dequant` (see
+    ``repro.core.round_engine``'s bidirectional compressed scan)."""
+    from repro.kernels.fedagg import dequant_install as _install
+    interp = _default_interpret() if interpret is None else interpret
+    return _install(q, scales, base, block_c=block_c, interpret=interp)
+
+
 def quantize_int8(x2d, *, block_c: int = 256, interpret: Optional[bool] = None):
     """Per-chunk int8 quantization: [C, chunk] fp32 → (int8 [C, chunk],
     fp32 scales [C]).  The upload-compression hot path (see

@@ -22,6 +22,9 @@ Examples:
       --scheduler buffered --buffer-k 4    # async: aggregate after 4 of 8
   PYTHONPATH=src python -m repro.launch.train --sites 4 --rounds 10 \
       --transport tcp --compression int8   # quantized delta uploads
+  PYTHONPATH=src python -m repro.launch.train --sites 4 --rounds 10 \
+      --compression int8 --down-compression int8
+                                           # quantize BOTH directions
   PYTHONPATH=src python -m repro.launch.train --sites 8 --rounds 40 \
       --chunk-rounds 20 --device-data      # compiled scan chunks with
                                            # on-device batch generation
@@ -61,6 +64,7 @@ def run(args) -> dict:
         transport=args.transport, scheduler=scheduler,
         topology=args.topology, pod_dropout=args.pod_dropout,
         compression=args.compression,
+        down_compression=args.down_compression,
         error_feedback=not args.no_error_feedback,
         dp_clip=args.dp_clip, dp_noise_multiplier=args.dp_noise_multiplier,
         dp_delta=args.dp_delta, dp_mode=args.dp_mode,
@@ -91,6 +95,7 @@ def run(args) -> dict:
             "sample": job.sampler.spec,
             "shard_sites": job.shard_sites,
             "compression": resolve_codec(job.compression).name,
+            "down_compression": resolve_codec(job.down_compression).name,
             "error_feedback": job.error_feedback,
             "round_engine": job.round_engine,
             "chunk_rounds": job.chunk_rounds,
@@ -178,6 +183,14 @@ def make_parser():
                     help="quantize uploads (error-feedback deltas); "
                          "topk-fixed = constant-shape top-k that compiles "
                          "under the scan engine")
+    ap.add_argument("--down-compression", default="none",
+                    dest="down_compression",
+                    choices=["none", "int8", "fp8", "topk-fixed"],
+                    help="quantize downloads too: the server keeps per-site "
+                         "error-feedback references and broadcasts each "
+                         "global as a delta against what that site last "
+                         "acknowledged (dense bootstrap on join/evict); "
+                         "fedavg/fedprox, sync scheduler")
     ap.add_argument("--dp-clip", type=float, default=0.0, dest="dp_clip",
                     metavar="C",
                     help="DP-SGD: clip gradients to L2 norm C inside every "

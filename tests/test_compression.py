@@ -364,3 +364,186 @@ def test_job_result_reports_comm():
     res = _token_job(rounds=2).run()
     assert res.comm is not None and res.comm["simulated"] is True
     assert res.to_dict()["comm"]["upload_count"] == res.comm["upload_count"]
+
+
+# ---------------------------------------------------------------------------
+# Downlink compression (PR 10): DownlinkCompressor + decode_download units,
+# the bidirectional wire end to end, and the typed-error composition matrix
+# ---------------------------------------------------------------------------
+
+
+def _downlink_run(error_feedback: bool, rounds: int = 30):
+    """Drive one site through a moving global; return per-round install
+    errors |decoded − true global|."""
+    rng = np.random.default_rng(10)
+    down = C.DownlinkCompressor(C.Int8Codec(chunk=256),
+                                error_feedback=error_feedback)
+    g = _tree(rng)
+    site_ref = acked = None
+    errs = []
+    for r in range(1, rounds + 1):
+        payload, meta = down.encode(0, g, r, acked_round=acked)
+        site_ref = C.decode_download(payload, meta, site_ref)
+        acked = r
+        errs.append(_max_err(site_ref, g))
+        if error_feedback:
+            # reference tracking: the server's held copy IS the site's
+            # decode, bit for bit — that is what makes EF implicit
+            assert _max_err(down.held_state(0)[0], site_ref) == 0.0
+        g = jax.tree.map(
+            lambda x: x + (rng.normal(size=x.shape) * 0.01
+                           ).astype(np.float32), g)
+    return errs
+
+
+def test_downlink_error_feedback_telescopes():
+    """held += deQ(Q(delta)) folds each round's quantization error into
+    the next delta, so the install error stays at the ONE-step bound
+    however long the stream runs (the downlink twin of
+    test_error_feedback_telescopes)."""
+    errs = _downlink_run(error_feedback=True)
+    assert errs[0] == 0.0                      # bootstrap rides dense
+    assert max(errs[1:]) < 3e-4                # one-step int8 bound
+    # no trend: the late errors look like the early ones
+    assert max(errs[-5:]) <= 2.0 * max(errs[1:6])
+
+
+def test_downlink_without_error_feedback_diverges():
+    """held ← g pretends the site decoded exactly, so per-round errors
+    random-walk instead of telescoping — kept only to demonstrate why
+    reference tracking is load-bearing."""
+    ef = _downlink_run(error_feedback=True)
+    noef = _downlink_run(error_feedback=False)
+    assert noef[-1] > 3.0 * ef[-1]
+    assert max(noef) > 3.0 * max(ef[1:])
+
+
+def test_downlink_dense_on_ack_mismatch():
+    """A lost reply (acked_round=None or disagreeing with the server
+    record) forces a dense re-sync that restarts the delta stream."""
+    rng = np.random.default_rng(11)
+    down = C.DownlinkCompressor(C.Int8Codec(chunk=256))
+    g = _tree(rng)
+    _, m1 = down.encode(0, g, 1, acked_round=None)
+    assert m1["delta"] is False and down.dense_sends == 1
+    _, m2 = down.encode(0, g, 2, acked_round=1)
+    assert m2["delta"] is True
+    # site restarted and never acked round 2 -> dense again
+    payload, m3 = down.encode(0, g, 3, acked_round=1)
+    assert m3["delta"] is False and down.dense_sends == 2
+    dec = C.decode_download(payload, m3)       # dense needs no reference
+    assert _max_err(dec, g) == 0.0
+    # and the dense send reset the reference: the stream resumes
+    _, m4 = down.encode(0, g, 4, acked_round=3)
+    assert m4["delta"] is True
+
+
+def test_downlink_evict_forces_dense_bootstrap():
+    """Regression for the reference-window bound: a site silent past
+    ``keep`` rounds is evicted and its next download bootstraps dense —
+    never a KeyError, never a delta against a dropped reference."""
+    rng = np.random.default_rng(12)
+    down = C.DownlinkCompressor(C.Int8Codec(chunk=256))
+    g = _tree(rng)
+    down.encode(0, g, 1, acked_round=None)
+    down.encode(1, g, 1, acked_round=None)
+    keep = C.KEEP_GLOBALS_DEFAULT
+    # site 1 keeps downloading; site 0 goes silent
+    for r in range(2, keep + 3):
+        down.encode(1, g, r, acked_round=r - 1)
+        down.evict_stale(r, keep)
+    assert down.held_state(0) is None          # evicted
+    assert down.held_state(1) is not None      # active site survives
+    payload, meta = down.encode(0, g, keep + 3, acked_round=1)
+    assert meta["delta"] is False              # dense fallback
+    assert _max_err(C.decode_download(payload, meta), g) == 0.0
+
+
+def test_decode_download_delta_without_reference_raises():
+    rng = np.random.default_rng(13)
+    down = C.DownlinkCompressor(C.Int8Codec(chunk=256))
+    g = _tree(rng)
+    down.encode(0, g, 1, acked_round=None)
+    payload, meta = down.encode(0, g, 2, acked_round=1)
+    assert meta["delta"] is True
+    with pytest.raises(ValueError, match="no held global"):
+        C.decode_download(payload, meta)
+
+
+def test_bidirectional_thread_matches_stacked_with_byte_split():
+    """int8 BOTH ways: the threaded socket stack and the stacked scan
+    engine agree on the model (within wire fold-order noise) and on the
+    payload-level byte split exactly."""
+    stacked = _token_job(compression="int8", down_compression="int8").run()
+    thread = _token_job(compression="int8", down_compression="int8",
+                        transport="thread").run()
+    for res in (stacked, thread):
+        c = res.comm
+        assert c["down_compression"] == "int8"
+        assert c["download_count"] == c["upload_count"] > 0
+    sc, tc = stacked.comm, thread.comm
+    assert sc["total_bytes"] == sc["upload_bytes"] + sc["download_bytes"]
+    assert tc["total_bytes"] == tc["upload_bytes"] + tc["download_bytes"]
+    # payload bytes are transport-invariant (framing overhead is not)
+    assert tc["site_payload_bytes"] == sc["upload_bytes"]
+    assert tc["download_payload_bytes"] == sc["download_bytes"]
+    assert tc["download_raw_bytes"] == sc["download_raw_bytes"]
+    # steady-state downloads are deltas: cheaper than their raw fp32
+    assert sc["download_bytes"] < sc["download_raw_bytes"]
+    for x, y in zip(jax.tree.leaves(stacked.global_params),
+                    jax.tree.leaves(thread.global_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_bidirectional_pods_two_hop_install():
+    """Under pods:2 BOTH install hops compress (root→leader per-leader
+    deltas, pod server→site per-site deltas) and the decoded install
+    stays within quantization tolerance of the dense pods run."""
+    from repro.core.topology import Topology
+    job = _token_job(task=TaskConfig(kind="tokens", arch="smollm-135m",
+                                     sites=4, batch=2, seq=16, seed=0),
+                     transport="thread", topology=Topology.pods(2))
+    dense = job.run()
+    bidir = job.replace(compression="int8", down_compression="int8").run()
+    c = bidir.comm
+    assert c["down_compression"] == "int8" and c["pods"] == 2
+    assert c["intra_pod_download_bytes"] < dense.comm["intra_pod_download_bytes"]
+    assert c["cross_pod_download_bytes"] < dense.comm["cross_pod_download_bytes"]
+    assert np.isfinite(bidir.final_loss)
+    for x, y in zip(jax.tree.leaves(dense.global_params),
+                    jax.tree.leaves(bidir.global_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_down_only_compression_stacked_matches_loop_bytes():
+    """down_compression composes with dense uploads: the scan and loop
+    twins agree byte for byte on the asymmetric split."""
+    scan = _token_job(down_compression="int8").run()
+    loop = _token_job(down_compression="int8", round_engine="loop").run()
+    assert scan.comm["compression"] == "none"
+    assert scan.comm["download_bytes"] < scan.comm["download_raw_bytes"]
+    for k in ("upload_bytes", "download_bytes", "total_bytes",
+              "upload_count", "download_count"):
+        assert scan.comm[k] == loop.comm[k], k
+
+
+def test_down_compression_typed_error_matrix():
+    """Compositions whose server cannot (or must not) track per-site
+    references are typed errors on every transport, never silent dense
+    downgrades."""
+    from repro.core.session import BufferedScheduler
+    base = _token_job(down_compression="int8")
+    with pytest.raises(ValueError, match="fedavg/fedprox"):
+        base.replace(strategy="gcml").run()
+    with pytest.raises(ValueError, match="scheduler='sync'"):
+        base.replace(scheduler=BufferedScheduler(buffer_k=2)).run()
+    with pytest.raises(ValueError, match="down_compression='none'"):
+        base.replace(aggregator="trimmed:1").run()
+    with pytest.raises(ValueError, match="down_compression='none'"):
+        base.replace(adversary="sign_flip:1").run()
+    with pytest.raises(ValueError, match="shard_sites"):
+        base.replace(shard_sites=True, sample="uniform:2").run()
+    with pytest.raises(ValueError, match="disable one"):
+        base.replace(transport="thread", secure_agg=True).run()
